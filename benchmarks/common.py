@@ -1,0 +1,82 @@
+"""Shared benchmark utilities: proxy-model training + timing helpers."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import capture_stats, init_params, next_token_loss
+from repro.optim import adamw_init
+from repro.quant import make_plan_bundle
+
+_CACHE: Dict[str, tuple] = {}
+
+
+def trained_proxy(arch: str = "llama31-8b", layers: int = 2,
+                  steps: int = 60, seed: int = 0):
+    """Train a reduced-config proxy model (cached per run)."""
+    key = f"{arch}:{layers}:{steps}:{seed}"
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = ARCHS[arch].reduced(layers=layers)
+    params = init_params(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, base_lr=3e-3, warmup=5, total=steps,
+                                   remat=False), donate_argnums=(0, 1))
+    data = SyntheticLM(cfg.vocab_size, seed)
+    it = data.train_stream().batches(4, 64)
+    for _ in range(steps):
+        toks = next(it)
+        pos = np.broadcast_to(np.arange(64), (4, 64)).astype(np.int32)
+        params, opt, _ = step(params, opt, {"tokens": jnp.asarray(toks),
+                                            "positions": jnp.asarray(pos)})
+    _CACHE[key] = (cfg, params, data)
+    return _CACHE[key]
+
+
+def eval_ppl(cfg: ModelConfig, params, data: SyntheticLM,
+             quant: QuantConfig, plans, n_batches: int = 3) -> float:
+    tot, n = 0.0, 0
+    for toks in data.eval_batches(4, 64, n_batches):
+        _, aux = next_token_loss(params, cfg, jnp.asarray(toks), quant=quant,
+                                 plans=plans)
+        tot += float(aux["nll"])
+        n += 1
+    return float(np.exp(tot / n))
+
+
+def plans_for(cfg, params, data, quant: QuantConfig, corpus="wikitext2"):
+    from repro.data import make_calibration_set
+    calib = make_calibration_set(cfg.vocab_size, 8, 64, corpus=corpus)
+    stats = None
+    for toks in calib.batches:
+        s = capture_stats(params, cfg, tokens=jnp.asarray(toks))
+        if stats is None:
+            stats = {k: np.array(v) for k, v in s.items()}
+        else:
+            for k, v in s.items():
+                np.maximum(stats[k], np.asarray(v), out=stats[k])
+    return make_plan_bundle(stats, cfg, quant, params)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,28 @@
+"""Paper §3.4: worst-case error bounds, theory + empirical check."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import error_bounds as EB
+from benchmarks.common import emit
+
+
+def run():
+    emit("bounds/alpha_mx_sup", 0.0, f"{EB.ALPHA_MX_SUP}")
+    emit("bounds/alpha_nv_sq", 0.0, f"{EB.ALPHA_NV_SUP ** 2:.6f}")
+    emit("bounds/ratio_arc_over_mx", 0.0, f"{EB.bound_ratio():.4f}")
+    rng = np.random.default_rng(0)
+    worst_arc, worst_mx = 0.0, 0.0
+    for i in range(20):
+        x = rng.normal(size=4096).astype(np.float32) * rng.uniform(0.5, 50)
+        r = EB.empirical_worst_case(x)
+        worst_arc = max(worst_arc, r.max_err_arc / r.bound_arc)
+        worst_mx = max(worst_mx, r.max_err_mxfp8 / r.bound_mxfp8)
+        assert r.arc_within_bound and r.mx_within_bound
+    emit("bounds/empirical_arc_utilization", 0.0, f"{worst_arc:.3f}")
+    emit("bounds/empirical_mx_utilization", 0.0, f"{worst_mx:.3f}")
+    return {"ratio": EB.bound_ratio(), "arc_util": worst_arc}
+
+
+if __name__ == "__main__":
+    run()

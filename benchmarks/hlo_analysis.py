@@ -1,0 +1,4 @@
+"""Re-export: the trip-count-aware HLO analyzer lives in repro.launch."""
+from repro.launch.hlo_analysis import analyze_hlo
+
+__all__ = ["analyze_hlo"]

@@ -1,0 +1,26 @@
+"""Paper Figure 7: outlier channel count S across layers (from calibration)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.quant import plan_summary
+from benchmarks.common import emit, plans_for, trained_proxy
+
+
+def run():
+    cfg, params, data = trained_proxy(layers=4)
+    plans = plans_for(cfg, params, data, QuantConfig(method="arc"))
+    summ = plan_summary(plans)
+    for name in sorted(summ):
+        v = summ[name]
+        emit(f"outlier_s/{name}", 0.0,
+             f"S={v['S']};K={v['K']};overhead={v['overhead']:.3f}")
+    ss = [v["S"] for v in summ.values()]
+    emit("outlier_s/aggregate", 0.0,
+         f"mean={np.mean(ss):.1f};max={max(ss)};min={min(ss)}")
+    return summ
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Table 8 / Figure 6 analogue on TPU: roofline-derived prefill cost.
+
+We cannot time Blackwell GPUs; instead we compute, per model and sequence
+length, the compute/memory roofline seconds for bf16 vs ARCQuant-NVFP4
+weights on a v5e chip, which is the TPU translation of the paper's
+"prefill speedup & memory" table. Weight bytes: bf16 = 16 bits/value;
+NVFP4 packed = 4.5 (+ S/K augmentation overhead).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.launch.mesh import HBM_PER_CHIP, HBM_BW, PEAK_FLOPS_BF16
+from benchmarks.common import emit
+
+S_OVER_K = 256 / 4096     # typical augmentation overhead at S=256
+
+
+def run(models=("qwen2-1.5b", "llama31-8b", "qwen3-32b"),
+        batch: int = 4, seqs=(512, 1024, 2048)):
+    out = {}
+    for name in models:
+        cfg = ARCHS[name]
+        n = cfg.param_count()
+        for seq in seqs:
+            tokens = batch * seq
+            flops = 2 * n * tokens
+            t_compute = flops / PEAK_FLOPS_BF16
+            for tag, bits in [("bf16", 16.0), ("arcquant", 4.5 * (1 + S_OVER_K))]:
+                wbytes = n * bits / 8
+                t_mem = wbytes / HBM_BW
+                t = max(t_compute, t_mem)
+                emit(f"prefill/{name}/b{batch}s{seq}/{tag}", t * 1e6,
+                     f"bound={'compute' if t_compute > t_mem else 'memory'};"
+                     f"weight_gb={wbytes/1e9:.2f}")
+                out[(name, seq, tag)] = t
+            sp = out[(name, seq, "bf16")] / out[(name, seq, "arcquant")]
+            emit(f"prefill/{name}/b{batch}s{seq}/speedup", 0.0, f"x{sp:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Table 4: calibration latency, quantization time, model memory."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.quant import quantize_weights_for_serving
+from benchmarks.common import emit, plans_for, trained_proxy
+
+
+def _tree_bytes(tree):
+    import jax
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def run():
+    cfg, params, data = trained_proxy(layers=2)
+    q = QuantConfig(method="arc")
+    t0 = time.time()
+    plans = plans_for(cfg, params, data, q)
+    t_calib = time.time() - t0
+    t0 = time.time()
+    qparams = quantize_weights_for_serving(params, cfg, q, plans, pack=True)
+    t_quant = time.time() - t0
+    orig = _tree_bytes(params)
+    packed = _tree_bytes(qparams)
+    emit("quant_overhead/calibration", t_calib * 1e6, f"s={t_calib:.2f}")
+    emit("quant_overhead/quantize", t_quant * 1e6, f"s={t_quant:.2f}")
+    emit("quant_overhead/memory", 0.0,
+         f"fp32_mb={orig/1e6:.1f};packed_mb={packed/1e6:.1f};"
+         f"ratio={orig/packed:.2f}")
+    return {"calib_s": t_calib, "quant_s": t_quant,
+            "compression": orig / packed}
+
+
+if __name__ == "__main__":
+    run()

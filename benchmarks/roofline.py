@@ -1,0 +1,132 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled dry-run (per-device HLO program):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s          [197e12 bf16]
+    memory     = HLO_bytes_per_device / HBM_bw               [819e9 B/s]
+    collective = wire_bytes_per_device / link_bw             [50e9 B/s]
+
+plus MODEL_FLOPS (6*N*D train, 2*N_active*D inference) and the useful-
+compute ratio MODEL_FLOPS / HLO_FLOPs. The dominant term is the
+bottleneck the perf loop iterates on (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+CHIPS = {"pod": 256, "multipod": 512}
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()          # MoE: routed experts only
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch / chips
+
+
+def analyze_cell(path: Path) -> dict | None:
+    d = json.loads(path.read_text())
+    if d.get("status") != "ok":
+        return {"cell": d.get("cell", path.stem), "status": d.get("status"),
+                "reason": d.get("reason", d.get("error", ""))[:90]}
+    mesh = "multipod" if "multipod" in d["cell"] else "pod"
+    chips = CHIPS[mesh]
+    # prefer the trip-count-aware analyzer totals (XLA's cost_analysis
+    # counts while bodies once); fall back to the XLA numbers
+    ha = d.get("hlo_analysis")
+    if ha:
+        flops = ha["flops"]
+        bytes_acc = ha["bytes"]
+        coll = ha["collectives"]
+    else:
+        flops = d["cost"].get("flops", 0.0)
+        bytes_acc = d["cost"].get("bytes accessed", 0.0)
+        coll = d["collectives"]
+    wire = sum(v for k, v in coll.items() if k != "count")
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_acc / HBM_BW
+    t_x = wire / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])
+    mf = model_flops_per_device(d["arch"], d["shape"], chips)
+    useful = mf / flops if flops else 0.0
+    step_t = max(t_c, t_m, t_x)
+    mfu = mf / PEAK_FLOPS_BF16 / step_t if step_t else 0.0
+    return {
+        "cell": d["cell"], "status": "ok", "arch": d["arch"],
+        "shape": d["shape"], "mesh": mesh, "kind": d["kind"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom[0], "step_seconds": step_t,
+        "model_flops": mf, "hlo_flops": flops, "useful_ratio": useful,
+        "roofline_fraction": mfu,
+        "mem_gb": (d["memory"].get("argument_size_in_bytes", 0)
+                   + d["memory"].get("temp_size_in_bytes", 0)
+                   + d["memory"].get("output_size_in_bytes", 0)
+                   - d["memory"].get("alias_size_in_bytes", 0)) / 2 ** 30,
+        "recommendation": _recommend(dom[0], useful, d),
+    }
+
+
+def _recommend(dom: str, useful: float, d: dict) -> str:
+    if dom == "collective":
+        big = max(((k, v) for k, v in d["collectives"].items()
+                   if k != "count"), key=lambda kv: kv[1])[0]
+        return (f"dominant wire op is {big}: overlap it with compute or "
+                f"reshard to remove it")
+    if dom == "memory":
+        return ("memory-bound: cut bytes/step — 4-bit packed weights, "
+                "bf16 activations, fuse dequant into the GEMM (Pallas)")
+    if useful < 0.4:
+        return ("compute-bound with low useful ratio: remove masked/remat "
+                "waste (causal block skipping, selective remat)")
+    return "compute-bound: increase per-chip arithmetic intensity"
+
+
+def run(results_dir: str = "results/dryrun", mesh: str = "pod",
+        emit_rows: bool = True):
+    rows = []
+    for p in sorted(Path(results_dir).glob(f"*__{mesh}.json")):
+        r = analyze_cell(p)
+        if r:
+            rows.append(r)
+    if emit_rows:
+        hdr = (f"{'cell':58s} {'dom':10s} {'t_comp':>9s} {'t_mem':>9s} "
+               f"{'t_coll':>9s} {'useful':>7s} {'MFU':>6s} {'memGB':>6s}")
+        print(hdr)
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['cell']:58s} {r['status']}: {r.get('reason','')}")
+                continue
+            print(f"{r['cell']:58s} {r['dominant']:10s} "
+                  f"{r['t_compute']:9.4f} {r['t_memory']:9.4f} "
+                  f"{r['t_collective']:9.4f} {r['useful_ratio']:7.2%} "
+                  f"{r['roofline_fraction']:6.2%} {r['mem_gb']:6.1f}")
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = run(args.results, args.mesh)
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness. Run everything: PYTHONPATH=src python -m benchmarks.run
+
+Paper artifact -> module map:
+  Tables 1/2 (methods x models)     accuracy (nvfp4)
+  Table 6 (INT4/MXFP4 generality)   accuracy (--full adds int4, mxfp4)
+  Figures 2/3 (Hadamard vs ARC MSE) layerwise_mse
+  Table 4 (quantization overhead)   quant_overhead
+  Table 5 (calibration robustness)  calibration_robustness
+  Figure 7 (S per layer)            outlier_stats
+  Figure 8a (latency vs S)          latency_vs_s
+  Table 8 / Fig 6 (prefill)         prefill_model (TPU roofline translation)
+  Section 3.4 (error bounds)        error_bounds
+  Dry-run roofline (deliverable g)  roofline (reads results/dryrun)
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also run int4/mxfp4 accuracy sweeps (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (accuracy, calibration_robustness, error_bounds,
+                            latency_vs_s, layerwise_mse, outlier_stats,
+                            prefill_model, quant_overhead, roofline)
+
+    jobs = [
+        ("error_bounds", lambda: error_bounds.run()),
+        ("latency_vs_s", lambda: latency_vs_s.run()),
+        ("prefill_model", lambda: prefill_model.run()),
+        ("accuracy", lambda: accuracy.run(
+            formats=("nvfp4", "mxfp4", "int4") if args.full else ("nvfp4",))),
+        ("layerwise_mse", lambda: layerwise_mse.run()),
+        ("outlier_stats", lambda: outlier_stats.run()),
+        ("calibration_robustness", lambda: calibration_robustness.run()),
+        ("quant_overhead", lambda: quant_overhead.run()),
+        ("roofline", lambda: roofline.run()),
+    ]
+    failed = []
+    for name, fn in jobs:
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == '__main__':
+    main()

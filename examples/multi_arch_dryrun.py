@@ -1,0 +1,38 @@
+"""Lower + compile one (arch x shape) cell on the production mesh and print
+its roofline terms — a single-cell version of the multi-pod dry-run.
+
+    PYTHONPATH=src python examples/multi_arch_dryrun.py \
+        --arch rwkv6-3b --shape decode_32k --multipod
+"""
+import argparse
+import json
+import tempfile
+from pathlib import Path
+
+# NOTE: repro.launch.dryrun sets XLA_FLAGS for 512 host devices on import —
+# it must be imported before anything touches jax.
+from repro.launch import dryrun
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(tempfile.mkdtemp())
+    res = dryrun.run_cell(args.arch, args.shape, args.multipod, out)
+    print(json.dumps({k: v for k, v in res.items() if k != "trace"},
+                     indent=1))
+    if res["status"] == "ok":
+        from benchmarks.roofline import analyze_cell
+        r = analyze_cell(out / f"{res['cell']}.json")
+        print(f"\nroofline: compute={r['t_compute']:.4f}s "
+              f"memory={r['t_memory']:.4f}s collective={r['t_collective']:.4f}s"
+              f"\ndominant={r['dominant']}  MFU={r['roofline_fraction']:.1%}"
+              f"\n-> {r['recommendation']}")
+
+
+if __name__ == "__main__":
+    main()

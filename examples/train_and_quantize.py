@@ -1,0 +1,99 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps, then
+post-training-quantize it with every strategy and compare perplexity
+(the paper's Table 1/2 workflow at laptop scale).
+
+    PYTHONPATH=src python examples/train_and_quantize.py \
+        --steps 200 --d-model 512 --layers 4
+
+Defaults are sized for CI (much smaller); pass the flags above for the
+full ~100M run.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.data import SyntheticLM, make_calibration_set
+from repro.distributed import FaultTolerantRunner, RunnerConfig
+from repro.launch.steps import make_train_step
+from repro.models import capture_stats, init_params, next_token_loss
+from repro.optim import adamw_init
+from repro.quant import make_plan_bundle, plan_summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/arcquant_example")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        ARCHS["llama31-8b"].reduced(layers=args.layers),
+        d_model=args.d_model, d_ff=args.d_model * 3,
+        num_heads=max(4, args.d_model // 64), num_kv_heads=2,
+        head_dim=64, vocab_size=4096)
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"~{cfg.param_count()/1e6:.1f}M params")
+
+    # --- train (fault-tolerant loop: checkpoints + resume) ---------------
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, base_lr=3e-3, warmup=10,
+                                   total=args.steps, remat=False),
+                   donate_argnums=(0, 1))
+    data = SyntheticLM(cfg.vocab_size, 0)
+    stream = data.train_stream()
+    it = stream.batches(args.batch, args.seq)
+
+    def batch_fn(stream):
+        toks = next(it)
+        pos = np.broadcast_to(np.arange(args.seq),
+                              (args.batch, args.seq)).astype(np.int32)
+        return {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos)}
+
+    runner = FaultTolerantRunner(
+        CheckpointManager(args.ckpt_dir, interval=max(args.steps // 4, 10)),
+        RunnerConfig(max_steps=args.steps))
+    t0 = time.time()
+    out = runner.run(lambda p, o, b: step(p, o, b), params, opt, stream,
+                     batch_fn)
+    params = out["params"]
+    print(f"trained {out['final_step']} steps in {time.time()-t0:.0f}s; "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+    # --- calibrate (paper App. B: WikiText2-style segments) --------------
+    calib = make_calibration_set(cfg.vocab_size, 8, args.seq)
+    stats = None
+    for toks in calib.batches:
+        s = capture_stats(params, cfg, tokens=jnp.asarray(toks))
+        stats = ({k: np.array(v) for k, v in s.items()} if stats is None
+                 else {k: np.maximum(stats[k], np.asarray(v)) for k, v in s.items()})
+
+    # --- PTQ comparison (Table 2) ----------------------------------------
+    eval_toks = jnp.asarray(data.eval_batches(args.batch, args.seq, 2)[0])
+    print(f"\n{'method':12s} {'PPL':>9s}")
+    for method in ["none", "rtn", "smooth", "quarot", "atom", "arc"]:
+        q = QuantConfig(method=method, fmt="nvfp4")
+        plans = make_plan_bundle(stats, cfg, q, params)
+        _, aux = next_token_loss(params, cfg, eval_toks, quant=q, plans=plans)
+        print(f"{method:12s} {np.exp(float(aux['nll'])):9.3f}")
+
+    q = QuantConfig(method="arc")
+    plans = make_plan_bundle(stats, cfg, q, params)
+    ss = [v["S"] for v in plan_summary(plans).values()]
+    print(f"\nARC augmented channels per layer: mean={np.mean(ss):.0f} "
+          f"max={max(ss)} (paper Fig. 7)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

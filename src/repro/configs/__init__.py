@@ -1,0 +1,49 @@
+"""Architecture registry: the 10 assigned archs + the paper's own model."""
+from repro.configs import base
+from repro.configs.base import (LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                                DECODE_32K, ModelConfig, QuantConfig,
+                                ShapeConfig)
+
+from repro.configs.qwen2_vl_2b import CONFIG as QWEN2_VL_2B
+from repro.configs.musicgen_large import CONFIG as MUSICGEN_LARGE
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as QWEN3_MOE_235B
+from repro.configs.llama4_scout_17b_a16e import CONFIG as LLAMA4_SCOUT
+from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
+from repro.configs.jamba_v01_52b import CONFIG as JAMBA_52B
+from repro.configs.qwen2_1_5b import CONFIG as QWEN2_1_5B
+from repro.configs.qwen3_32b import CONFIG as QWEN3_32B
+from repro.configs.minicpm_2b import CONFIG as MINICPM_2B
+from repro.configs.gemma3_12b import CONFIG as GEMMA3_12B
+from repro.configs.llama31_8b_proxy import CONFIG as LLAMA31_8B
+
+ARCHS = {c.name: c for c in (
+    QWEN2_VL_2B, MUSICGEN_LARGE, QWEN3_MOE_235B, LLAMA4_SCOUT, RWKV6_3B,
+    JAMBA_52B, QWEN2_1_5B, QWEN3_32B, MINICPM_2B, GEMMA3_12B, LLAMA31_8B,
+)}
+
+ASSIGNED = [c.name for c in (
+    QWEN2_VL_2B, MUSICGEN_LARGE, QWEN3_MOE_235B, LLAMA4_SCOUT, RWKV6_3B,
+    JAMBA_52B, QWEN2_1_5B, QWEN3_32B, MINICPM_2B, GEMMA3_12B,
+)]
+
+
+def get_arch(name: str) -> ModelConfig:
+    return ARCHS[name]
+
+
+def cells():
+    """All 40 assigned (arch x shape) cells with skip annotations."""
+    out = []
+    for name in ASSIGNED:
+        cfg = ARCHS[name]
+        for shape in SHAPES.values():
+            skip = None
+            if shape.name == "long_500k" and not cfg.subquadratic:
+                skip = "full-attention arch: 500k decode needs sub-quadratic mixer"
+            out.append((cfg, shape, skip))
+    return out
+
+
+__all__ = ["ARCHS", "ASSIGNED", "get_arch", "cells", "ModelConfig",
+           "QuantConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+           "DECODE_32K", "LONG_500K", "base"]

@@ -1,0 +1,186 @@
+"""Model/parallelism/quantization configuration system.
+
+Every assigned architecture is expressed as a ``ModelConfig``; reduced
+("smoke") variants are derived with ``cfg.reduced()``. Layer heterogeneity
+(Jamba's 1:7 Mamba:attention interleave, Gemma-3's 5:1 local:global) is
+expressed as a *period*: a short per-layer pattern repeated depth/period
+times, which lets the runtime scan over stacked period parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# Per-layer mixer kinds
+FULL_ATTN = "full"
+LOCAL_ATTN = "local"
+MAMBA = "mamba"
+RWKV = "rwkv"
+
+DENSE_FFN = "dense"
+MOE_FFN = "moe"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False              # Qwen2-VL multimodal RoPE (3 position streams)
+    sliding_window: int = 4096       # window for LOCAL_ATTN layers
+
+    # layer pattern: tuple of (mixer, ffn) kinds, one per layer of a period;
+    # repeated num_layers/len(pattern) times. Default: all full-attn dense.
+    mixer_pattern: Tuple[str, ...] = (FULL_ATTN,)
+    ffn_pattern: Tuple[str, ...] = (DENSE_FFN,)
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+
+    # SSM (Mamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # RWKV6
+    rwkv_head_dim: int = 64
+
+    # frontend: text | vision_stub | audio_stub — stubs consume precomputed
+    # patch/frame embeddings (paper assignment: backbone only)
+    frontend: str = "text"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # long-context eligibility (sub-quadratic mixers); pure full-attention
+    # archs skip the long_500k shape (see DESIGN.md §4)
+    subquadratic: bool = False
+
+    # ---------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        period = len(self.mixer_pattern)
+        assert self.num_layers % period == 0, (self.name, self.num_layers, period)
+        assert len(self.ffn_pattern) in (1, period)
+        if len(self.ffn_pattern) == 1 and period > 1:
+            object.__setattr__(self, "ffn_pattern", self.ffn_pattern * period)
+
+    # ---------------------------------------------------------------
+    @property
+    def period(self) -> int:
+        return len(self.mixer_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // self.period
+
+    @property
+    def layer_kinds(self) -> Sequence[Tuple[str, str]]:
+        return [(m, f) for m, f in zip(self.mixer_pattern, self.ffn_pattern)] * self.num_periods
+
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        d, h = self.d_model, self.head_dim
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for mixer, ffn in self.layer_kinds:
+            if mixer in (FULL_ATTN, LOCAL_ATTN):
+                n += d * h * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * h * d
+            elif mixer == MAMBA:
+                d_in = self.mamba_expand * d
+                n += d * 2 * d_in + d_in * self.mamba_d_conv
+                n += d_in * (self.mamba_d_state * 2 + 1) + d_in * d  # proj + out
+            elif mixer == RWKV:
+                n += 5 * d * d + d * d  # r,k,v,g,w projections + out
+            if ffn == MOE_FFN:
+                n += self.num_experts * 3 * d * self.expert_ff()
+            else:
+                n += 3 * d * self.d_ff
+            n += 2 * d  # norms
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        n = self.param_count()
+        for mixer, ffn in self.layer_kinds:
+            if ffn == MOE_FFN:
+                n -= (self.num_experts - self.experts_per_token) * 3 * self.d_model * self.expert_ff()
+        return n
+
+    # ---------------------------------------------------------------
+    def reduced(self, layers: Optional[int] = None) -> "ModelConfig":
+        """Smoke-test-size variant of the same family (CPU-friendly)."""
+        period = self.period
+        num_layers = layers or max(period, 2 if period == 1 else period)
+        if num_layers % period:
+            num_layers = period
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=num_layers,
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            head_dim=32,
+            d_ff=256,
+            moe_d_ff=64 if self.num_experts else 0,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            sliding_window=64,
+            mamba_d_state=8,
+            rwkv_head_dim=32,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How the serving path quantizes linears."""
+
+    method: str = "none"             # none | rtn | smooth | quarot | atom | arc
+    fmt: str = "nvfp4"
+    act_fmt: str = ""                # "" -> same as fmt (W4A8 sets mxfp8)
+    max_outlier_fraction: float = 0.25
+
+    @property
+    def activation_fmt(self) -> str:
+        return self.act_fmt or self.fmt

@@ -1,0 +1,14 @@
+"""Gemma-3-12B [hf:google/gemma-3, unverified]: 5:1 local:global attention,
+sliding window 1024, 128k context. 5/6 of layers are windowed ->
+sub-quadratic enough for long_500k (global-layer KV is the O(S) part)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", family="dense",
+    num_layers=48, d_model=3840, num_heads=16, num_kv_heads=8, head_dim=256,
+    d_ff=15360, vocab_size=262144,
+    mixer_pattern=("local", "local", "local", "local", "local", "full"),
+    sliding_window=1024, rope_theta=1e6,
+    tie_embeddings=True,
+    subquadratic=True,
+)

@@ -1,0 +1,17 @@
+"""Jamba-v0.1-52B [arXiv:2403.19887]: Mamba:attention 1:7 interleave
+(attention at offset 4 of each 8-layer block), MoE every other layer
+(16 experts, top-2). Sub-quadratic overall -> eligible for long_500k."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=65536,
+    mixer_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "full", "mamba", "mamba", "mamba"),
+    ffn_pattern=("dense", "moe", "dense", "moe",
+                 "dense", "moe", "dense", "moe"),
+    num_experts=16, experts_per_token=2, moe_d_ff=14336,
+    mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+    subquadratic=True,
+)

@@ -1,0 +1,10 @@
+"""Llama-3.1-8B — the paper's own primary evaluation model (Table 1/2).
+Included for the accuracy benchmarks at reduced scale."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama31-8b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=128256,
+    rope_theta=5e5,
+)

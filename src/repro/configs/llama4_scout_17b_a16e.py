@@ -1,0 +1,12 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama, unverified]: MoE top-1, 16 experts.
+Early-fusion multimodality out of scope (text backbone per assignment)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    rope_theta=5e5,
+    mixer_pattern=("full",), ffn_pattern=("moe",),
+    num_experts=16, experts_per_token=1, moe_d_ff=8192,
+)

@@ -1,0 +1,10 @@
+"""MiniCPM-2B [arXiv:2404.06395]: llama-like arch, MHA (kv=36); WSD schedule
+implemented in repro.optim (the paper's training contribution)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36, head_dim=64,
+    d_ff=5760, vocab_size=122753,
+    tie_embeddings=True,
+)

@@ -1,0 +1,11 @@
+"""MusicGen-large [arXiv:2306.05284]: decoder-only over EnCodec tokens;
+audio codec frontend stubbed (precomputed frame embeddings)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=2048,
+    rope_theta=1e4,   # adaptation: RoPE in place of sinusoidal embeddings
+    frontend="audio_stub",
+)

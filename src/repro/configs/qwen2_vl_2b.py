@@ -1,0 +1,11 @@
+"""Qwen2-VL-2B backbone [arXiv:2409.12191]: M-RoPE, dynamic-resolution ViT
+frontend stubbed (input_specs supplies precomputed patch embeddings)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2, head_dim=128,
+    d_ff=8960, vocab_size=151936,
+    qkv_bias=True, mrope=True, rope_theta=1e6,
+    frontend="vision_stub",
+)

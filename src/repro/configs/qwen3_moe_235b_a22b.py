@@ -1,0 +1,11 @@
+"""Qwen3-MoE-235B-A22B [hf:Qwen/Qwen3-30B-A3B family]: 128 experts, top-8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6,
+    mixer_pattern=("full",), ffn_pattern=("moe",),
+    num_experts=128, experts_per_token=8, moe_d_ff=1536,
+)

@@ -1,0 +1,12 @@
+"""RWKV6 "Finch" 3B [arXiv:2404.05892]: attention-free, data-dependent decay.
+Sub-quadratic (O(1) recurrent state) -> eligible for long_500k."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    num_layers=32, d_model=2560, num_heads=40, num_kv_heads=40, head_dim=64,
+    d_ff=8960, vocab_size=65536,
+    mixer_pattern=("rwkv",), ffn_pattern=("dense",),  # ffn -> rwkv channel-mix
+    rwkv_head_dim=64,
+    subquadratic=True,
+)

@@ -1,0 +1,16 @@
+"""ARCQuant core: formats, block quantizers, augmented residual channels."""
+from repro.core import arc, baselines, calibration, error_bounds, formats, quant
+from repro.core.arc import (ArcPlan, arc_matmul, arc_matmul_reference,
+                            augment_activations, augment_weights,
+                            fake_quant_matmul, select_outliers)
+from repro.core.calibration import Calibrator
+from repro.core.formats import FORMATS, INT4, MXFP4, MXFP8, NVFP4, get_format
+from repro.core.quant import QTensor, qmatmul, quantize, quantize_dequantize
+
+__all__ = [
+    "arc", "baselines", "calibration", "error_bounds", "formats", "quant",
+    "ArcPlan", "arc_matmul", "arc_matmul_reference", "augment_activations",
+    "augment_weights", "fake_quant_matmul", "select_outliers", "Calibrator",
+    "FORMATS", "INT4", "MXFP4", "MXFP8", "NVFP4", "get_format",
+    "QTensor", "qmatmul", "quantize", "quantize_dequantize",
+]

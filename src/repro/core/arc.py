@@ -1,0 +1,183 @@
+"""ARCQuant — Augmented Residual Channels (paper §3.2, §3.3).
+
+Offline (calibration time):
+  * per-channel absmax stats -> channel reordering indices (descending)
+  * outlier count S from the threshold rule  tau = 2^-3 * M   (M = layer max)
+  * S is rounded up to a multiple of the block size (16 for NVFP4) so the
+    augmented channels tile exactly into scale blocks, matching the
+    interleaved hardware layout of Appendix D.
+
+Online (per forward):
+  * reorder activations, primary block quantization Q_X
+  * residual of the first S channels  R_o = X_o - s_X * Q_X_o
+  * quantize the residual  Q_R_o  and concatenate along K
+  * one unified GEMM over (N, K + S, M):
+        Y ~= Q(X) Q(W)^T + Q(R_o) Q(W_o)^T            (paper Eq. 2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import quant as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class ArcPlan:
+    """Offline-calibrated plan for one linear layer."""
+
+    order: np.ndarray            # (K,) channel permutation, outliers first
+    s: int                       # number of augmented residual channels
+    fmt_name: str = "nvfp4"
+    layer_max: float = 0.0       # M — calibration layer-wise abs maximum
+
+    @property
+    def fmt(self) -> F.BlockFormat:
+        return F.get_format(self.fmt_name)
+
+    @property
+    def inverse_order(self) -> np.ndarray:
+        inv = np.empty_like(self.order)
+        inv[self.order] = np.arange(self.order.size)
+        return inv
+
+
+def select_outliers(channel_absmax: np.ndarray, fmt: F.BlockFormat | str = "nvfp4",
+                    max_fraction: float = 0.25,
+                    threshold_exp: int = -3) -> ArcPlan:
+    """Adaptive outlier identification (paper §3.2).
+
+    tau = 2^threshold_exp * M reflects the 3-bit exponent-width gap between
+    the per-tensor E5M2 reference and the E2M1 target: channels below tau
+    sit in the range where NVFP4 already matches the FP8 reference, so
+    only channels above tau get residual compensation.
+    """
+    if isinstance(fmt, str):
+        fmt = F.get_format(fmt)
+    stats = np.asarray(channel_absmax, np.float64)
+    k = stats.size
+    m = float(stats.max()) if k else 0.0
+    tau = (2.0 ** threshold_exp) * m
+    order = np.argsort(-stats, kind="stable").astype(np.int32)
+    s_raw = int((stats > tau).sum())
+    g = fmt.block_size
+    s = min(int(-(-s_raw // g) * g), int(max_fraction * k) // g * g)
+    s = max(s, 0)
+    return ArcPlan(order=order, s=s, fmt_name=fmt.name, layer_max=m)
+
+
+# ---------------------------------------------------------------------------
+# Online activation path (paper §3.2 "Online Activation Quantization")
+# ---------------------------------------------------------------------------
+
+
+def augment_activations(x: jax.Array, plan: ArcPlan) -> Q.QTensor:
+    """Reorder -> primary quant -> residual quant -> concat along K."""
+    fmt = plan.fmt
+    xr = jnp.take(x, jnp.asarray(plan.order), axis=-1)
+    xq = Q.quantize(xr, fmt)
+    if plan.s == 0:
+        return xq
+    s = plan.s
+    x_o = xr[..., :s]
+    deq = xq.dequantize()[..., :s]
+    r_o = x_o - deq
+    rq = Q.quantize(r_o, fmt)
+    return Q.concat_k(xq, rq)
+
+
+# ---------------------------------------------------------------------------
+# Offline weight path (paper §3.2 "Offline Weight Quantization")
+# ---------------------------------------------------------------------------
+
+
+def augment_weights(w: jax.Array, plan: ArcPlan) -> Q.QTensor:
+    """Reorder W along K, quantize, duplicate the quantized outlier columns.
+
+    The duplicated columns reuse the *already-quantized* values and scales
+    (no re-quantization), so the GEMM's extra S columns compute exactly
+    R_o Q(W_o)^T.
+    """
+    fmt = plan.fmt
+    wr = jnp.take(w, jnp.asarray(plan.order), axis=-1)
+    wq = Q.quantize(wr, fmt)
+    if plan.s == 0:
+        return wq
+    g = fmt.block_size
+    s = plan.s
+    dup = Q.QTensor(wq.elements[..., :s], wq.scales[..., : s // g],
+                    wq.fmt_name, s, wq.tensor_scale)
+    return Q.concat_k(wq, dup)
+
+
+# ---------------------------------------------------------------------------
+# Unified GEMM execution (paper Eq. 2) + explicit two-GEMM reference
+# ---------------------------------------------------------------------------
+
+
+def arc_matmul(x: jax.Array, w_aug: Q.QTensor, plan: ArcPlan) -> jax.Array:
+    """Y = Q(X_aug) Q(W_aug)^T — single GEMM over the extended K+S dim."""
+    x_aug = augment_activations(x, plan)
+    return Q.qmatmul(x_aug, w_aug)
+
+
+def arc_matmul_reference(x: jax.Array, w: jax.Array, plan: ArcPlan) -> jax.Array:
+    """Explicit compensation: Q(X)Q(W)^T + Q(R_o)Q(W_o)^T (for equivalence tests)."""
+    fmt = plan.fmt
+    xr = jnp.take(x, jnp.asarray(plan.order), axis=-1)
+    wr = jnp.take(w, jnp.asarray(plan.order), axis=-1)
+    xq = Q.quantize(xr, fmt)
+    wq = Q.quantize(wr, fmt)
+    y = Q.qmatmul(xq, wq)
+    if plan.s == 0:
+        return y
+    s = plan.s
+    r_o = xr[..., :s] - xq.dequantize()[..., :s]
+    rq = Q.quantize(r_o, fmt)
+    g = fmt.block_size
+    wo = Q.QTensor(wq.elements[..., :s], wq.scales[..., : s // g],
+                   wq.fmt_name, s, wq.tensor_scale)
+    return y + Q.qmatmul(rq, wo)
+
+
+def fake_quant_matmul(x: jax.Array, w: jax.Array, plan: ArcPlan) -> jax.Array:
+    """High-level simulated path used inside models: bf16 matmul of the
+    dequantized augmented operands, numerically equal to arc_matmul."""
+    return arc_matmul(x, augment_weights(w, plan), plan)
+
+
+# ---------------------------------------------------------------------------
+# Interleaved channel layout (paper Appendix D)
+# ---------------------------------------------------------------------------
+
+
+def interleaved_permutation(k: int, s: int, g: int = 16) -> np.ndarray:
+    """Permutation of the augmented K+S axis into the hardware layout.
+
+    Logical layout is [primary_0..K-1 | residual_0..S-1]; the kernel layout
+    interleaves each 16-channel primary outlier block with its residual
+    block: [P0 R0 P1 R1 ... P_{S/g-1} R_{S/g-1} P_{S/g} ... P_{K/g-1}].
+    GEMM accumulation is permutation-invariant along K, so results match.
+    """
+    assert s % g == 0 and k % g == 0
+    blocks_k, blocks_s = k // g, s // g
+    out = []
+    for b in range(blocks_k):
+        out.extend(range(b * g, (b + 1) * g))
+        if b < blocks_s:
+            out.extend(range(k + b * g, k + (b + 1) * g))
+    return np.asarray(out, np.int32)
+
+
+def to_interleaved(qt: Q.QTensor, k: int, s: int) -> Q.QTensor:
+    """Reorder an augmented QTensor into the interleaved kernel layout."""
+    g = qt.fmt.block_size
+    perm = jnp.asarray(interleaved_permutation(k, s, g))
+    elements = jnp.take(qt.elements, perm, axis=-1)
+    scales = jnp.take(qt.scales, jnp.asarray(perm[::g] // g), axis=-1)
+    return Q.QTensor(elements, scales, qt.fmt_name, qt.valid_k, qt.tensor_scale)

@@ -1,0 +1,140 @@
+"""Baseline PTQ strategies adapted to block-scaled formats (paper §4.1).
+
+  * RTN            — plain blockwise round-to-nearest (quant.quantize)
+  * SmoothQuant    — difficulty migration X' = X/s, W' = W*s (Xiao et al.)
+  * QuaRot-style   — Hadamard rotation of the K dimension (Ashkboos et al.)
+  * Atom-style     — mixed precision: top-S channels in a high-precision
+                     format, bulk in 4-bit (Zhao et al.). On Blackwell this
+                     breaks Tensor-Core uniformity (paper §3.1); we emulate
+                     it for accuracy comparison only.
+  * W4A8           — MXFP4 weights + MXFP8 activations reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import quant as Q
+
+
+# ---------------------------------------------------------------------------
+# RTN
+# ---------------------------------------------------------------------------
+
+
+def rtn_matmul(x: jax.Array, w: jax.Array, fmt: str = "nvfp4") -> jax.Array:
+    return Q.qmatmul(Q.quantize(x, fmt), Q.quantize(w, fmt))
+
+
+def w4a8_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """W4A8 reference: MXFP4 weights, MXFP8 activations."""
+    return Q.qmatmul(Q.quantize(x, "mxfp8"), Q.quantize(w, "mxfp4"))
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SmoothPlan:
+    smooth: np.ndarray  # (K,) per-channel divisor for X, multiplier for W
+
+
+def make_smooth_plan(act_absmax: np.ndarray, w_absmax: np.ndarray,
+                     alpha: float = 0.5) -> SmoothPlan:
+    a = np.asarray(act_absmax, np.float64)
+    w = np.asarray(w_absmax, np.float64)
+    s = np.power(np.maximum(a, 1e-5), alpha) / np.power(np.maximum(w, 1e-5), 1 - alpha)
+    s = np.where(np.isfinite(s) & (s > 0), s, 1.0)
+    return SmoothPlan(smooth=s.astype(np.float32))
+
+
+def smooth_matmul(x: jax.Array, w: jax.Array, plan: SmoothPlan,
+                  fmt: str = "nvfp4") -> jax.Array:
+    s = jnp.asarray(plan.smooth)
+    return rtn_matmul(x / s, w * s, fmt)
+
+
+# ---------------------------------------------------------------------------
+# QuaRot-style Hadamard rotation
+# ---------------------------------------------------------------------------
+
+
+def hadamard_matrix(k: int) -> np.ndarray:
+    """Randomized orthogonal Hadamard-like transform for arbitrary K.
+
+    For power-of-two K this is the exact normalized Sylvester Hadamard;
+    otherwise we use H_{2^m} on the largest power-of-two prefix blocks
+    (block-diagonal), which preserves orthogonality.
+    """
+    def pow2_h(n: int) -> np.ndarray:
+        h = np.array([[1.0]])
+        while h.shape[0] < n:
+            h = np.block([[h, h], [h, -h]])
+        return h / np.sqrt(h.shape[0])
+
+    if k & (k - 1) == 0:
+        return pow2_h(k).astype(np.float32)
+    # block-diagonal decomposition over power-of-two chunks
+    blocks = []
+    rem = k
+    while rem:
+        b = 1 << (rem.bit_length() - 1)
+        blocks.append(pow2_h(b))
+        rem -= b
+    out = np.zeros((k, k), np.float64)
+    i = 0
+    for b in blocks:
+        n = b.shape[0]
+        out[i:i + n, i:i + n] = b
+        i += n
+    return out.astype(np.float32)
+
+
+def quarot_matmul(x: jax.Array, w: jax.Array, fmt: str = "nvfp4",
+                  h: Optional[jax.Array] = None) -> jax.Array:
+    """Rotate K dim of both operands: (XH)(WH)^T = XW^T exactly; quantize after."""
+    if h is None:
+        h = jnp.asarray(hadamard_matrix(x.shape[-1]))
+    xh = jnp.matmul(x, h)
+    wh = jnp.matmul(w, h)
+    return rtn_matmul(xh, wh, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Atom-style mixed precision (emulated — hardware-infeasible on NVFP4 MMA)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AtomPlan:
+    order: np.ndarray
+    s: int                      # channels kept in high precision
+    lo_fmt: str = "nvfp4"
+    hi_fmt: str = "mxfp8"
+
+
+def make_atom_plan(act_absmax: np.ndarray, s: int = 128,
+                   lo_fmt: str = "nvfp4", hi_fmt: str = "mxfp8") -> AtomPlan:
+    order = np.argsort(-np.asarray(act_absmax), kind="stable").astype(np.int32)
+    g = max(F.get_format(lo_fmt).block_size, F.get_format(hi_fmt).block_size)
+    s = int(-(-s // g) * g)
+    return AtomPlan(order=order, s=s, lo_fmt=lo_fmt, hi_fmt=hi_fmt)
+
+
+def atom_matmul(x: jax.Array, w: jax.Array, plan: AtomPlan) -> jax.Array:
+    order = jnp.asarray(plan.order)
+    xr = jnp.take(x, order, axis=-1)
+    wr = jnp.take(w, order, axis=-1)
+    s = plan.s
+    hi = Q.qmatmul(Q.quantize(xr[..., :s], plan.hi_fmt),
+                   Q.quantize(wr[..., :s], plan.hi_fmt))
+    lo = Q.qmatmul(Q.quantize(xr[..., s:], plan.lo_fmt),
+                   Q.quantize(wr[..., s:], plan.lo_fmt))
+    return hi + lo

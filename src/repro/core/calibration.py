@@ -1,0 +1,82 @@
+"""Calibration pass (paper §4.1 / Appendix B.1).
+
+The paper calibrates on 128 x 2048-token WikiText2 segments; here the
+calibration stream is any iterable of activation matrices per layer. The
+only statistic ARCQuant needs is the per-channel absolute maximum, which
+makes the pass a cheap streaming reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import arc
+from repro.core import formats as F
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    """Streaming per-channel absmax accumulator for one linear layer."""
+
+    absmax: np.ndarray
+
+    @classmethod
+    def init(cls, k: int) -> "ChannelStats":
+        return cls(np.zeros((k,), np.float32))
+
+    def update(self, x) -> None:
+        x = np.asarray(jax.device_get(x))
+        flat = np.abs(x.reshape(-1, x.shape[-1])).max(axis=0)
+        np.maximum(self.absmax, flat, out=self.absmax)
+
+
+class Calibrator:
+    """Collects per-layer channel stats and emits ArcPlans.
+
+    Usage:
+        calib = Calibrator()
+        for batch in calib_set:
+            acts = model.capture_linear_inputs(params, batch)
+            calib.observe(acts)           # {layer_name: (tokens, K)}
+        plans = calib.make_plans(fmt="nvfp4")
+    """
+
+    def __init__(self) -> None:
+        self.stats: Dict[str, ChannelStats] = {}
+
+    def observe(self, acts: Mapping[str, jax.Array]) -> None:
+        for name, x in acts.items():
+            k = x.shape[-1]
+            if name not in self.stats:
+                self.stats[name] = ChannelStats.init(k)
+            self.stats[name].update(x)
+
+    def observe_stats(self, stats: Mapping[str, jax.Array]) -> None:
+        """Observe pre-reduced per-channel absmax vectors (scan-friendly)."""
+        for name, v in stats.items():
+            v = np.asarray(jax.device_get(v), np.float32).reshape(-1)
+            if name not in self.stats:
+                self.stats[name] = ChannelStats(v.copy())
+            else:
+                np.maximum(self.stats[name].absmax, v, out=self.stats[name].absmax)
+
+    def make_plans(self, fmt: F.BlockFormat | str = "nvfp4",
+                   max_fraction: float = 0.25) -> Dict[str, arc.ArcPlan]:
+        return {name: arc.select_outliers(st.absmax, fmt, max_fraction)
+                for name, st in self.stats.items()}
+
+    def summary(self) -> Dict[str, dict]:
+        out = {}
+        for name, st in self.stats.items():
+            m = float(st.absmax.max())
+            tau = m / 8.0
+            out[name] = {
+                "k": int(st.absmax.size),
+                "layer_max": m,
+                "outliers_above_tau": int((st.absmax > tau).sum()),
+            }
+        return out

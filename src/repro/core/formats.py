@@ -1,0 +1,182 @@
+"""Bit-exact emulation of block-scaled numerical formats (paper Appendix A).
+
+All codecs are pure-jnp, vectorised, and jit-safe. Values are held in
+float32 carriers; ``encode_*``/``decode_*`` expose the integer code points
+so the Pallas kernels can operate on packed representations.
+
+Formats (paper Table 7):
+  MXFP8  : FP8 E4M3 elements, g=32, E8M0 scale
+  MXFP4  : FP4 E2M1 elements, g=32, E8M0 scale
+  NVFP4  : FP4 E2M1 elements, g=16, E4M3 scale + per-tensor FP32 scale
+  INT4   : symmetric int4, group scale in f32 (reference integer baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Generic minifloat round-to-nearest-even
+# ---------------------------------------------------------------------------
+
+
+def quantize_minifloat(x: jax.Array, mbits: int, emin: int, max_normal: float) -> jax.Array:
+    """Round ``x`` to the nearest representable minifloat value (RNE).
+
+    mbits       number of mantissa bits
+    emin        exponent of the smallest *normal* number (subnormals below)
+    max_normal  saturation value (no inf encoding — scales/elements saturate)
+    """
+    x = jnp.asarray(x, jnp.float32)
+    absx = jnp.abs(x)
+    # Exponent of the value, clamped at emin so the subnormal range shares
+    # the fixed step 2^(emin - mbits). frexp is bit-exact (log2 is 1 ulp
+    # off at exact powers of two, which flips floor()).
+    _, ef = jnp.frexp(jnp.where(absx > 0, absx, 1.0))
+    e = (ef - 1).astype(jnp.float32)
+    e = jnp.maximum(e, float(emin))
+    # ldexp: exact powers of two (XLA lowers exp2 via exp, which is inexact)
+    step = jnp.ldexp(jnp.float32(1.0), (e - mbits).astype(jnp.int32))
+    # jnp.round implements round-half-to-even, matching IEEE RNE.
+    q = jnp.round(absx / step) * step
+    q = jnp.minimum(q, float(max_normal))
+    return jnp.sign(x) * jnp.where(absx > 0, q, 0.0)
+
+
+# E2M1 (FP4): +-{0, .5, 1, 1.5, 2, 3, 4, 6}
+E2M1_VALUES = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+E2M1_MAX = 6.0
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+
+quantize_e2m1 = partial(quantize_minifloat, mbits=1, emin=0, max_normal=E2M1_MAX)
+quantize_e4m3 = partial(quantize_minifloat, mbits=3, emin=-6, max_normal=E4M3_MAX)
+quantize_e5m2 = partial(quantize_minifloat, mbits=2, emin=-14, max_normal=E5M2_MAX)
+
+
+def quantize_e8m0(x: jax.Array) -> jax.Array:
+    """Power-of-two scale (exponent-only, OCP MX shared scale).
+
+    Per the OCP MX spec the shared scale is 2^(floor(log2(amax)) - emax_elem);
+    this helper just snaps a positive scale to the nearest *lower* power of
+    two (exponent floor), the caller supplies amax/max_normal_elem.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    _, ef = jnp.frexp(jnp.where(x > 0, x, 1.0))
+    e = jnp.clip((ef - 1).astype(jnp.float32), -127.0, 127.0)
+    return jnp.where(x > 0, jnp.ldexp(jnp.float32(1.0), e.astype(jnp.int32)), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# E2M1 code points (for packed kernels)
+# ---------------------------------------------------------------------------
+
+
+def encode_e2m1(values: jax.Array) -> jax.Array:
+    """Map *already-quantized* E2M1 values to 4-bit codes (sign<<3 | idx)."""
+    v = jnp.asarray(values, jnp.float32)
+    mags = jnp.abs(v)
+    table = jnp.asarray(E2M1_VALUES)
+    idx = jnp.argmin(jnp.abs(mags[..., None] - table[None, :]), axis=-1)
+    sign = (v < 0).astype(jnp.uint8)
+    return (sign << 3 | idx.astype(jnp.uint8)).astype(jnp.uint8)
+
+
+def decode_e2m1(codes: jax.Array) -> jax.Array:
+    codes = codes.astype(jnp.int32)
+    idx = codes & 0x7
+    sign = 1.0 - 2.0 * ((codes >> 3) & 1).astype(jnp.float32)
+    return sign * jnp.take(jnp.asarray(E2M1_VALUES), idx)
+
+
+def encode_e4m3(v: jax.Array) -> jax.Array:
+    """Encode positive *already-E4M3-rounded* values to their 8-bit codes."""
+    v = jnp.asarray(v, jnp.float32)
+    _, ef = jnp.frexp(jnp.where(v > 0, v, 1.0))
+    e = jnp.clip((ef - 1).astype(jnp.float32), -6.0, 8.0)
+    m = jnp.round(v / jnp.ldexp(jnp.float32(1.0), (e - 3.0).astype(jnp.int32)))  # 8..15 normals
+    # mantissa overflow (m == 16) bumps the exponent
+    e = jnp.where(m >= 16, e + 1, e)
+    m = jnp.where(m >= 16, 8, m)
+    normal = v >= jnp.float32(2.0 ** -6)
+    byte_n = ((e + 7).astype(jnp.int32) << 3) | (m - 8).astype(jnp.int32)
+    byte_s = jnp.round(v * 512.0).astype(jnp.int32)   # subnormal step 2^-9
+    byte = jnp.where(normal, byte_n, jnp.clip(byte_s, 0, 7))
+    return jnp.where(v > 0, byte, 0).astype(jnp.uint8)
+
+
+def decode_e4m3(codes: jax.Array) -> jax.Array:
+    c = codes.astype(jnp.int32)
+    e = (c >> 3) & 0xF
+    m = (c & 7).astype(jnp.float32)
+    normal = e > 0
+    val_n = (8.0 + m) * jnp.ldexp(jnp.float32(1.0), e - 10)
+    val_s = m * jnp.float32(2.0 ** -9)
+    return jnp.where(normal, val_n, val_s)
+
+
+def encode_e8m0(v: jax.Array) -> jax.Array:
+    """Encode power-of-two scales to 8-bit biased exponents (bit-exact)."""
+    _, ef = jnp.frexp(jnp.where(v > 0, v, 1.0))
+    return jnp.clip((ef - 1) + 127, 0, 254).astype(jnp.uint8)
+
+
+def decode_e8m0(codes: jax.Array) -> jax.Array:
+    return jnp.ldexp(jnp.float32(1.0), codes.astype(jnp.int32) - 127)
+
+
+def pack_e2m1(codes: jax.Array) -> jax.Array:
+    """Pack pairs of 4-bit codes along the last axis into uint8."""
+    assert codes.shape[-1] % 2 == 0
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_e2m1(packed: jax.Array) -> jax.Array:
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+# ---------------------------------------------------------------------------
+# Format descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockFormat:
+    """A block-scaled numeric format (paper Table 7)."""
+
+    name: str
+    element_bits: int
+    block_size: int
+    element_max: float          # max normal of the element dtype
+    scale_kind: str             # "e8m0" | "e4m3+tensor" | "f32"
+    # precision limit epsilon = 2^-(mbits+1) of the element type at max binade
+    epsilon: float
+
+    def quantize_element(self, x: jax.Array) -> jax.Array:
+        if self.name in ("nvfp4", "mxfp4"):
+            return quantize_e2m1(x)
+        if self.name == "mxfp8":
+            return quantize_e4m3(x)
+        if self.name == "int4":
+            return jnp.clip(jnp.round(x), -7, 7)
+        raise ValueError(self.name)
+
+
+NVFP4 = BlockFormat("nvfp4", 4, 16, E2M1_MAX, "e4m3+tensor", epsilon=0.25)
+MXFP4 = BlockFormat("mxfp4", 4, 32, E2M1_MAX, "e8m0", epsilon=0.25)
+MXFP8 = BlockFormat("mxfp8", 8, 32, E4M3_MAX, "e8m0", epsilon=0.0625)
+INT4 = BlockFormat("int4", 4, 128, 7.0, "f32", epsilon=0.5 / 7.0)
+
+FORMATS = {f.name: f for f in (NVFP4, MXFP4, MXFP8, INT4)}
+
+
+def get_format(name: str) -> BlockFormat:
+    return FORMATS[name]

@@ -1,0 +1,187 @@
+"""Block-scaled quantize / dequantize (paper §3.1, Appendix A).
+
+Quantization always operates on the *last* axis (the GEMM reduction
+dimension K) in groups of ``fmt.block_size``. The result is a ``QTensor``
+holding quantized element values (f32 carrier), per-block scales, and —
+for NVFP4 — the per-tensor FP32 scale that aligns the E4M3 block scales.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Quantized tensor: ``dequant = elements * scale`` (broadcast per block).
+
+    ``elements`` is padded up to a multiple of the block size along K;
+    ``valid_k`` records the logical (unpadded) length.
+
+    Storage modes for E2M1-element formats (nvfp4/mxfp4):
+      * f32 carrier (default) — element *values*, used in the math paths
+      * ``packed=True`` — uint8 holding two 4-bit code points per byte
+        (the deployment representation: ~4.5 bits/value with bf16 block
+        scales, which are exact for E4M3/E8M0 values)
+    """
+
+    elements: jax.Array          # (..., Kp) values, or (..., Kp//2) packed codes
+    scales: jax.Array            # (..., Kp // g) effective per-block scales
+    fmt_name: str
+    valid_k: int
+    tensor_scale: Optional[jax.Array] = None   # NVFP4 only (informational)
+    packed: bool = False
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return ((self.elements, self.scales, self.tensor_scale),
+                (self.fmt_name, self.valid_k, self.packed))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        elements, scales, tensor_scale = children
+        return cls(elements, scales, aux[0], aux[1], tensor_scale, aux[2])
+
+    # -- api ----------------------------------------------------------------
+    @property
+    def fmt(self) -> F.BlockFormat:
+        return F.get_format(self.fmt_name)
+
+    @property
+    def shape(self):
+        return (*self.elements.shape[:-1], self.valid_k)
+
+    def element_values(self) -> jax.Array:
+        """Quantized element values as f32, unpacking codes if needed."""
+        if not self.packed:
+            return self.elements
+        codes = F.unpack_e2m1(self.elements)
+        return F.decode_e2m1(codes)
+
+    def scale_values(self) -> jax.Array:
+        """Effective f32 block scales, decoding 8-bit codes if packed."""
+        if not self.packed:
+            return self.scales
+        if self.fmt_name == "nvfp4":
+            return F.decode_e4m3(self.scales) * self.tensor_scale
+        return F.decode_e8m0(self.scales)
+
+    def dequantize(self) -> jax.Array:
+        g = self.fmt.block_size
+        el = self.element_values()
+        x = el.reshape(*el.shape[:-1], -1, g)
+        x = x * self.scale_values()[..., None].astype(jnp.float32)
+        return x.reshape(el.shape)[..., : self.valid_k]
+
+    def to_packed(self) -> "QTensor":
+        """Deployment storage: 2 E2M1 codes/byte + true 8-bit scale codes
+        (E4M3 relative to the FP32 tensor scale for NVFP4; E8M0 for MXFP4)
+        = the spec's 4.5 bits/value. Bit-exact roundtrip."""
+        assert self.fmt_name in ("nvfp4", "mxfp4") and not self.packed
+        codes = F.encode_e2m1(self.elements)
+        if self.fmt_name == "nvfp4":
+            sc = F.encode_e4m3(self.scales / self.tensor_scale)
+        else:
+            sc = F.encode_e8m0(self.scales)
+        return QTensor(F.pack_e2m1(codes), sc, self.fmt_name, self.valid_k,
+                       self.tensor_scale, True)
+
+    def bits_per_value(self) -> float:
+        g = self.fmt.block_size
+        return self.fmt.element_bits + 8.0 / g
+
+
+def _block_amax(x: jax.Array, g: int) -> jax.Array:
+    xb = x.reshape(*x.shape[:-1], -1, g)
+    return jnp.max(jnp.abs(xb), axis=-1)
+
+
+def compute_scales(x: jax.Array, fmt: F.BlockFormat,
+                   tensor_amax: Optional[jax.Array] = None):
+    """Per-block effective scales for ``fmt`` (and the NVFP4 tensor scale)."""
+    g = fmt.block_size
+    amax = _block_amax(x, g)
+    if fmt.scale_kind == "e8m0":
+        # OCP MX: shared scale = 2^(floor(log2(amax)) - emax_elem).
+        _, ef = jnp.frexp(jnp.where(amax > 0, amax, 1.0))
+        e = (ef - 1).astype(jnp.float32)
+        emax_elem = jnp.floor(jnp.log2(jnp.asarray(fmt.element_max)))
+        scales = jnp.where(amax > 0,
+                           jnp.ldexp(jnp.float32(1.0),
+                                     (e - emax_elem).astype(jnp.int32)), 1.0)
+        return scales, None
+    if fmt.scale_kind == "e4m3+tensor":
+        # NVFP4: block scale is E4M3 *relative to* a per-tensor FP32 scale
+        # chosen so the largest block scale maps to the top of E4M3 range.
+        if tensor_amax is None:
+            tensor_amax = jnp.max(jnp.abs(x))
+        t = tensor_amax / (fmt.element_max * F.E4M3_MAX)
+        t = jnp.where(t > 0, t, 1.0)
+        block = F.quantize_e4m3(amax / fmt.element_max / t)
+        block = jnp.maximum(block, jnp.float32(2.0 ** -9))  # smallest e4m3 subnormal
+        scales = block * t
+        return scales, t
+    if fmt.scale_kind == "f32":
+        qmax = fmt.element_max
+        scales = jnp.where(amax > 0, amax / qmax, 1.0)
+        return scales, None
+    raise ValueError(fmt.scale_kind)
+
+
+def quantize(x: jax.Array, fmt: F.BlockFormat | str,
+             tensor_amax: Optional[jax.Array] = None) -> QTensor:
+    """Blockwise RTN quantization along the last axis (paper Eq. 1)."""
+    if isinstance(fmt, str):
+        fmt = F.get_format(fmt)
+    g = fmt.block_size
+    x = jnp.asarray(x, jnp.float32)
+    k = x.shape[-1]
+    pad = (-k) % g
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    scales, t = compute_scales(x, fmt, tensor_amax)
+    xb = x.reshape(*x.shape[:-1], -1, g)
+    q = fmt.quantize_element(xb / scales[..., None])
+    q = jnp.clip(q, -fmt.element_max, fmt.element_max)
+    elements = q.reshape(x.shape)
+    return QTensor(elements, scales, fmt.name, k, t)
+
+
+def quantize_dequantize(x: jax.Array, fmt: F.BlockFormat | str,
+                        tensor_amax: Optional[jax.Array] = None) -> jax.Array:
+    """Fake-quant helper: Q(X) = s_X * Q_X (paper notation)."""
+    return quantize(x, fmt, tensor_amax).dequantize().astype(x.dtype)
+
+
+def concat_k(a: QTensor, b: QTensor) -> QTensor:
+    """Concatenate two QTensors along the reduction dimension K.
+
+    Both operands must be block-aligned (valid_k % g == 0) — guaranteed by
+    construction in the ARC augmentation path where S % 16 == 0.
+    """
+    assert a.fmt_name == b.fmt_name
+    g = a.fmt.block_size
+    assert a.valid_k % g == 0 and b.valid_k % g == 0, (a.valid_k, b.valid_k)
+    elements = jnp.concatenate([a.elements, b.elements], axis=-1)
+    scales = jnp.concatenate([a.scales, b.scales], axis=-1)
+    return QTensor(elements, scales, a.fmt_name, a.valid_k + b.valid_k,
+                   a.tensor_scale)
+
+
+def qmatmul(xq: QTensor, wq: QTensor, preferred_dtype=jnp.float32) -> jax.Array:
+    """Emulated unified-precision GEMM: dequantize then MXU matmul.
+
+    On Blackwell this is a native NVFP4 MMA; on TPU we dequantize into the
+    bf16 datapath. The *math* (including the augmented reduction dimension)
+    is identical, which is what the accuracy experiments exercise.
+    """
+    x = xq.dequantize()
+    w = wq.dequantize()
+    return jnp.matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16).T,
+                      preferred_element_type=preferred_dtype)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (CalibrationSet, SyntheticLM, TokenStream,
+                                 make_calibration_set)
+
+__all__ = ["CalibrationSet", "SyntheticLM", "TokenStream",
+           "make_calibration_set"]

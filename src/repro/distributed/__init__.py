@@ -1,0 +1,4 @@
+from repro.distributed.fault_tolerance import (FaultTolerantRunner,
+                                               Preemption, RunnerConfig)
+
+__all__ = ["FaultTolerantRunner", "Preemption", "RunnerConfig"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the ARCQuant hot path.
+
+  nvfp4_quant      blockwise NVFP4 quantization (codes + E4M3 scales)
+  arc_fused_quant  paper §3.3: RMSNorm + reorder + primary + residual quant,
+                   interleaved channel layout (Appendix D)
+  nvfp4_gemm       unified-precision GEMM over the augmented K+S dimension
+
+Each kernel has a pure-jnp oracle in ref.py; tests run interpret=True.
+"""
+from repro.kernels import common, ops, ref
+from repro.kernels.arc_fused_quant import arc_fused_quantize
+from repro.kernels.nvfp4_gemm import nvfp4_gemm
+from repro.kernels.nvfp4_quant import nvfp4_quantize
+
+__all__ = ["common", "ops", "ref", "arc_fused_quantize", "nvfp4_gemm",
+           "nvfp4_quantize"]

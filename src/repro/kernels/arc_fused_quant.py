@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: the paper's Fused Quantization Kernel (§3.3, App. D).
+
+Fuses, in one HBM pass over the activation rows:
+    RMSNorm -> channel reorder -> primary NVFP4 quantization
+            -> residual quantization of the top-S outlier channels
+            -> write-out in the Interleaved Channel Layout
+       [P0 | R0 | P1 | R1 | ... | P_{S/16-1} | R_{S/16-1} | P_{S/16} ...]
+so the downstream GEMM consumes a strictly-NVFP4 augmented tensor with
+16-block-aligned scales (the TPU analogue of the CUDA kernel's
+coalesced interleaved write-back).
+
+Per-tensor scales (primary + residual) are calibration-time constants, as
+in the deployed paper configuration — computing them online would need a
+second pass over X.
+
+Grid: (M/bm,); x block (bm, K) resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+GROUP = 16
+
+
+def _quant_block(xr, t):
+    """(bm, K) -> codes (bm, K) uint8, scales (bm, K/16) f32."""
+    bm, k = xr.shape
+    xb = xr.reshape(bm, k // GROUP, GROUP)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = C.nvfp4_block_scales(amax, t)
+    codes = C.encode_e2m1(xb / scale[..., None]).reshape(bm, k)
+    return codes, scale
+
+
+def _fused_kernel(s, eps, order_ref, ts_ref, x_ref, gamma_ref,
+                  codes_ref, scales_ref):
+    x = x_ref[...].astype(jnp.float32)
+    bm, k = x.shape
+    # RMSNorm
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * gamma_ref[...].astype(jnp.float32)
+    # channel reorder (outliers first)
+    xr = jnp.take(xn, order_ref[...], axis=1)
+    t1, t2 = ts_ref[0], ts_ref[1]
+    codes, scales = _quant_block(xr, t1)
+
+    if s == 0:
+        codes_ref[...] = codes
+        scales_ref[...] = scales
+        return
+
+    # residual of the first S channels: r = x_o - dq(Q(x_o))
+    deq = (C.decode_e2m1(codes[:, :s]).reshape(bm, s // GROUP, GROUP)
+           * scales[:, : s // GROUP, None]).reshape(bm, s)
+    r = xr[:, :s] - deq
+    rcodes, rscales = _quant_block(r, t2)
+
+    # interleaved layout: [P0 R0 P1 R1 ... | P_{S/16}...]
+    nb = s // GROUP
+    pc = codes[:, :s].reshape(bm, nb, GROUP)
+    rc = rcodes.reshape(bm, nb, GROUP)
+    inter_c = jnp.stack([pc, rc], axis=2).reshape(bm, 2 * s)
+    ps = scales[:, :nb]
+    rs = rscales
+    inter_s = jnp.stack([ps, rs], axis=2).reshape(bm, 2 * nb)
+
+    codes_ref[...] = jnp.concatenate([inter_c, codes[:, s:]], axis=1)
+    scales_ref[...] = jnp.concatenate([inter_s, scales[:, nb:]], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "eps", "block_m",
+                                             "interpret"))
+def arc_fused_quantize(x: jax.Array, gamma: jax.Array, order: jax.Array,
+                       tensor_scales: jax.Array, s: int,
+                       eps: float = 1e-6, block_m: int = 128,
+                       interpret: bool = False):
+    """x: (M, K); order: (K,) i32; tensor_scales: (2,) f32 = (primary, residual).
+
+    Returns (codes uint8 (M, K+S), scales f32 (M, (K+S)/16)) in the
+    interleaved channel layout.
+    """
+    m, k = x.shape
+    assert k % GROUP == 0 and s % GROUP == 0 and s <= k
+    bm = min(block_m, m)
+    while m % bm:
+        bm //= 2
+    ka = k + s
+    grid = (m // bm,)
+
+    kernel = functools.partial(_fused_kernel, s, eps)
+    codes, scales = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, ka), lambda i: (i, 0)),
+            pl.BlockSpec((bm, ka // GROUP), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, ka), jnp.uint8),
+            jax.ShapeDtypeStruct((m, ka // GROUP), jnp.float32),
+        ],
+        interpret=interpret,
+    )(order, tensor_scales, x, gamma)
+    return codes, scales

@@ -1,0 +1,70 @@
+"""Shared in-kernel NVFP4 arithmetic (E2M1 encode/decode, E4M3 scales).
+
+Everything here is branch-free vector arithmetic (VPU-friendly): encode is
+a comparison ladder with RNE tie handling, decode is exponent/mantissa
+reconstruction — no table gathers, so the same code runs inside Pallas
+kernel bodies and in the pure-jnp references.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+E2M1_MAX = 6.0
+E4M3_MAX = 448.0
+
+# decision thresholds between consecutive E2M1 magnitudes, and which ties
+# round UP (to the even code): values 0/.5/1/1.5/2/3/4/6 -> midpoints
+_THRESH = (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0)
+_TIE_UP = (0.75, 1.75, 3.5)   # ties landing on even codes 2, 4, 6
+
+
+def encode_e2m1_mag(y):
+    """|y| (clipped to [0, 6]) -> magnitude code 0..7, RNE at midpoints."""
+    idx = jnp.zeros(y.shape, jnp.uint8)
+    for t in _THRESH:
+        idx = idx + (y > t).astype(jnp.uint8)
+    for t in _TIE_UP:
+        idx = idx + (y == t).astype(jnp.uint8)
+    return idx
+
+
+def encode_e2m1(x):
+    """Signed value -> 4-bit code (sign<<3 | mag) as uint8."""
+    y = jnp.clip(jnp.abs(x), 0.0, E2M1_MAX)
+    mag = encode_e2m1_mag(y)
+    sign = (x < 0).astype(jnp.uint8)
+    return (sign << 3) | mag
+
+
+def decode_e2m1(codes):
+    """4-bit code -> f32 value, arithmetic reconstruction (no gathers)."""
+    c = codes.astype(jnp.int32)
+    mag = (c & 7).astype(jnp.float32)
+    sign = 1.0 - 2.0 * ((c >> 3) & 1).astype(jnp.float32)
+    e = jnp.floor(mag / 2.0)                       # 0..3
+    m = mag - 2.0 * e                              # 0 or 1
+    sub = mag * 0.5                                # codes 0,1 -> 0, 0.5
+    val = jnp.where(mag < 2.0, sub,
+                    (1.0 + 0.5 * m) * jnp.ldexp(jnp.float32(1.0),
+                                                e.astype(jnp.int32) - 1))
+    return sign * val
+
+
+def round_e4m3(v):
+    """Round positive scale values to E4M3 (RNE, saturating, subnormals)."""
+    v = jnp.asarray(v, jnp.float32)
+    _, ef = jnp.frexp(jnp.where(v > 0, v, 1.0))   # bit-exact exponent
+    e = jnp.maximum((ef - 1).astype(jnp.float32), -6.0)
+    step = jnp.ldexp(jnp.float32(1.0), (e - 3.0).astype(jnp.int32))
+    q = jnp.round(v / step) * step
+    q = jnp.minimum(q, E4M3_MAX)
+    return jnp.where(v > 0, jnp.maximum(q, jnp.float32(2.0 ** -9)), 0.0)
+
+
+def nvfp4_block_scales(amax, tensor_scale):
+    """Effective per-block scale = e4m3(amax / 6 / t) * t, clamped to the
+    smallest E4M3 subnormal (matches core.quant.compute_scales)."""
+    raw = amax / E2M1_MAX / tensor_scale
+    q = round_e4m3(raw)
+    q = jnp.maximum(q, jnp.float32(2.0 ** -9))
+    return q * tensor_scale

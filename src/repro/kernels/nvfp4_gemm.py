@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: unified NVFP4 GEMM over the augmented K+S dimension.
+
+This is the TPU analogue of the paper's single CUTLASS GEMM call: both
+operands arrive as 4-bit E2M1 codes + block scales; each (bm, bn, bk) tile
+is dequantized in VMEM/VREGs and fed to the MXU with f32 accumulation. The
+augmented residual channels (paper §3.2) ride the same K loop — no special
+casing, which is exactly the paper's "unified GEMM execution" property.
+
+Grid: (M/bm, N/bn, Ka/bk), k-innermost accumulation into the out tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+GROUP = 16
+
+
+def _gemm_kernel(xc_ref, xs_ref, wc_ref, ws_ref, out_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bm, bk = xc_ref.shape
+    bn = wc_ref.shape[0]
+    x = C.decode_e2m1(xc_ref[...]).reshape(bm, bk // GROUP, GROUP)
+    x = (x * xs_ref[...].astype(jnp.float32)[..., None]).reshape(bm, bk)
+    w = C.decode_e2m1(wc_ref[...]).reshape(bn, bk // GROUP, GROUP)
+    w = (w * ws_ref[...].astype(jnp.float32)[..., None]).reshape(bn, bk)
+    # MXU matmul in bf16 with f32 accumulation (TPU-native datapath)
+    acc = jax.lax.dot_general(
+        x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    out_ref[...] += acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "interpret"))
+def nvfp4_gemm(x_codes: jax.Array, x_scales: jax.Array,
+               w_codes: jax.Array, w_scales: jax.Array,
+               block_m: int = 256, block_n: int = 256, block_k: int = 2048,
+               interpret: bool = False) -> jax.Array:
+    """(M, Ka) x (N, Ka) -> (M, N) f32. Ka includes the S augmented channels."""
+    m, ka = x_codes.shape
+    n, ka2 = w_codes.shape
+    assert ka == ka2 and ka % GROUP == 0
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, ka)
+    while m % bm:
+        bm //= 2
+    while n % bn:
+        bn //= 2
+    while ka % bk:
+        bk //= 2
+    bk = max(bk, GROUP)
+    grid = (m // bm, n // bn, ka // bk)
+
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk // GROUP), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x_codes, x_scales, w_codes, w_scales)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: blockwise NVFP4 quantization (paper Eq. 1).
+
+Tiles the activation matrix HBM->VMEM, computes per-16-element-block E4M3
+scales against the per-tensor FP32 scale, and emits 4-bit E2M1 codes
+(uint8 carrier) plus effective f32 scales. One HBM pass.
+
+Grid: (M/bm, K/bk); blocks (bm, bk) with 16 | bk; scales tile (bm, bk/16).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+GROUP = 16
+
+
+def _quant_kernel(ts_ref, x_ref, codes_ref, scales_ref):
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    t = ts_ref[0]
+    xb = x.reshape(bm, bk // GROUP, GROUP)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = C.nvfp4_block_scales(amax, t)              # (bm, bk/16)
+    y = xb / scale[..., None]
+    codes = C.encode_e2m1(y).reshape(bm, bk)
+    codes_ref[...] = codes
+    scales_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def nvfp4_quantize(x: jax.Array, tensor_amax: jax.Array | None = None,
+                   block_m: int = 256, block_k: int = 2048,
+                   interpret: bool = False):
+    """x: (M, K) -> (codes uint8 (M, K), scales f32 (M, K/16), tensor_scale).
+
+    K must be a multiple of 16; tiles pad up to (block_m, block_k).
+    """
+    m, k = x.shape
+    assert k % GROUP == 0, k
+    if tensor_amax is None:
+        tensor_amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    t = tensor_amax / (C.E2M1_MAX * C.E4M3_MAX)
+    t = jnp.where(t > 0, t, 1.0).astype(jnp.float32)
+
+    bm = min(block_m, m)
+    bk = min(block_k, k)
+    # shrink bk to a divisor-friendly tile
+    while k % bk:
+        bk //= 2
+    while m % bm:
+        bm //= 2
+    bk = max(bk, GROUP)
+    grid = (m // bm, k // bk)
+
+    codes, scales = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.uint8),
+            jax.ShapeDtypeStruct((m, k // GROUP), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t.reshape(1), x)
+    return codes, scales, t

@@ -1,0 +1,61 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``arc_linear`` composes the full paper pipeline: fused quantization of the
+activations (RMSNorm + reorder + primary + residual, interleaved layout)
+followed by the unified NVFP4 GEMM over K+S — one fused quant pass and one
+stock GEMM call, exactly the deployment dataflow of Figure 4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arc import interleaved_permutation
+from repro.kernels import ref
+from repro.kernels.arc_fused_quant import arc_fused_quantize
+from repro.kernels.nvfp4_gemm import nvfp4_gemm
+from repro.kernels.nvfp4_quant import nvfp4_quantize
+
+GROUP = 16
+
+
+def quantize_weight_interleaved(w: jax.Array, order: jax.Array, s: int,
+                                interpret: bool = False):
+    """Offline weight path: reorder, quantize, duplicate outlier columns,
+    emit the interleaved layout matching arc_fused_quantize's output."""
+    wr = jnp.take(w, order, axis=-1)
+    codes, scales, t = nvfp4_quantize(wr, interpret=interpret)
+    if s == 0:
+        return codes, scales
+    k = w.shape[-1]
+    perm = jnp.asarray(interleaved_permutation(k, s, GROUP))
+    aug_c = jnp.concatenate([codes, codes[:, :s]], axis=-1)
+    aug_s = jnp.concatenate([scales, scales[:, : s // GROUP]], axis=-1)
+    inter_c = jnp.take(aug_c, perm, axis=-1)
+    inter_s = jnp.take(aug_s, perm[::GROUP] // GROUP, axis=-1)
+    return inter_c, inter_s
+
+
+def arc_linear(x: jax.Array, gamma: jax.Array, order: jax.Array,
+               w_codes: jax.Array, w_scales: jax.Array,
+               tensor_scales: jax.Array, s: int,
+               interpret: bool = False) -> jax.Array:
+    """Full ARCQuant linear: fused-quant(x) -> unified GEMM. Returns f32.
+
+    x: (M, K); w_codes/w_scales: interleaved offline weights (N, K+S...).
+    """
+    x_codes, x_scales = arc_fused_quantize(x, gamma, order, tensor_scales,
+                                           s, interpret=interpret)
+    return nvfp4_gemm(x_codes, x_scales, w_codes, w_scales,
+                      interpret=interpret)
+
+
+def rtn_linear(x: jax.Array, w_codes: jax.Array, w_scales: jax.Array,
+               interpret: bool = False) -> jax.Array:
+    """Baseline: plain NVFP4 quantize + GEMM (no residual compensation)."""
+    x_codes, x_scales, _ = nvfp4_quantize(x, interpret=interpret)
+    return nvfp4_gemm(x_codes, x_scales, w_codes, w_scales,
+                      interpret=interpret)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as C
+
+GROUP = 16
+
+
+def ref_tensor_scale(tensor_amax):
+    t = tensor_amax / (C.E2M1_MAX * C.E4M3_MAX)
+    return jnp.where(t > 0, t, 1.0).astype(jnp.float32)
+
+
+def ref_nvfp4_quantize(x: jax.Array, tensor_amax=None):
+    """Oracle for nvfp4_quant: (codes, scales, tensor_scale)."""
+    x = x.astype(jnp.float32)
+    m, k = x.shape
+    if tensor_amax is None:
+        tensor_amax = jnp.max(jnp.abs(x))
+    t = ref_tensor_scale(tensor_amax)
+    xb = x.reshape(m, k // GROUP, GROUP)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scales = C.nvfp4_block_scales(amax, t)
+    codes = C.encode_e2m1(xb / scales[..., None]).reshape(m, k)
+    return codes, scales, t
+
+
+def ref_dequantize(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    m, k = codes.shape
+    v = C.decode_e2m1(codes).reshape(m, k // GROUP, GROUP)
+    return (v * scales[..., None]).reshape(m, k)
+
+
+def ref_nvfp4_gemm(x_codes, x_scales, w_codes, w_scales) -> jax.Array:
+    """Oracle for nvfp4_gemm: dequantize then bf16 matmul, f32 accumulate."""
+    x = ref_dequantize(x_codes, x_scales).astype(jnp.bfloat16)
+    w = ref_dequantize(w_codes, w_scales).astype(jnp.bfloat16)
+    return jnp.matmul(x, w.T, preferred_element_type=jnp.float32)
+
+
+def ref_arc_fused(x, gamma, order, tensor_scales, s: int, eps: float = 1e-6):
+    """Oracle for arc_fused_quantize (interleaved layout)."""
+    x = x.astype(jnp.float32)
+    m, k = x.shape
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    xr = jnp.take(xn, order, axis=1)
+    t1, t2 = tensor_scales[0], tensor_scales[1]
+
+    xb = xr.reshape(m, k // GROUP, GROUP)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scales = C.nvfp4_block_scales(amax, t1)
+    codes = C.encode_e2m1(xb / scales[..., None]).reshape(m, k)
+    if s == 0:
+        return codes, scales
+
+    deq = ref_dequantize(codes[:, :s], scales[:, : s // GROUP])
+    r = xr[:, :s] - deq
+    rb = r.reshape(m, s // GROUP, GROUP)
+    ramax = jnp.max(jnp.abs(rb), axis=-1)
+    rscales = C.nvfp4_block_scales(ramax, t2)
+    rcodes = C.encode_e2m1(rb / rscales[..., None]).reshape(m, s)
+
+    nb = s // GROUP
+    inter_c = jnp.stack([codes[:, :s].reshape(m, nb, GROUP),
+                         rcodes.reshape(m, nb, GROUP)], axis=2).reshape(m, 2 * s)
+    inter_s = jnp.stack([scales[:, :nb], rscales], axis=2).reshape(m, 2 * nb)
+    out_c = jnp.concatenate([inter_c, codes[:, s:]], axis=1)
+    out_s = jnp.concatenate([inter_s, scales[:, nb:]], axis=1)
+    return out_c, out_s

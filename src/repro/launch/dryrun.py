@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and extract roofline inputs from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k --mesh pod --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+
+Per cell this produces JSON with:
+    memory_analysis   bytes per device (argument/output/temp/generated)
+    cost_analysis     HLO FLOPs and bytes accessed
+    collectives       per-op wire-byte totals parsed from post-SPMD HLO
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import QuantConfig
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import (make_cache_shardings, make_param_shardings,
+                            use_mesh)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e8m0fnu": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device wire bytes by collective op (ring-algorithm model)."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("shapes"))
+        if rb == 0:
+            continue
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            n = len(gl.group(1).split(",")) if gl else 2
+        n = max(n, 2)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * rb
+        elif op == "all-gather":
+            wire = (n - 1) / n * rb              # result is the gathered size
+        elif op == "reduce-scatter":
+            wire = (n - 1.0) * rb                # input = n * result
+        elif op == "all-to-all":
+            wire = (n - 1) / n * rb
+        else:                                     # collective-permute
+            wire = rb
+        out[op] += wire
+        out["count"] += 1
+    return out
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if k in ("flops", "transcendentals", "optimal_seconds",
+                     "bytes accessed")}
+
+
+def batch_shardings(specs, mesh):
+    """Input batch shardings: batch dim over DP axes when divisible."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def spec_for(leaf):
+        dims = [None] * len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            dims[0] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec_for, specs)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
+             quant_method: str = "arc", dump_hlo: bool = False,
+             variant: str = "") -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+    if variant:
+        tag += f"__{variant}"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        res = {"cell": tag, "status": "skipped",
+               "reason": "full-attention arch: 500k decode needs sub-quadratic mixer"}
+        _write(outdir, tag, res)
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            specs = ST.input_specs(cfg, shape)
+            in_batch_shardings = batch_shardings(specs, mesh)
+            if shape.kind == "train":
+                params = ST.abstract_params(cfg, jnp.float32)
+                opt = ST.abstract_opt_state(params)
+                step = ST.make_train_step(cfg)
+                pshard = make_param_shardings(params, mesh)
+                from repro.optim import AdamWState
+                oshard = AdamWState(
+                    step=NamedSharding(mesh, P()),
+                    m=make_param_shardings(opt.m, mesh),
+                    v=make_param_shardings(opt.v, mesh))
+                jitted = jax.jit(step, in_shardings=(pshard, oshard,
+                                                     in_batch_shardings),
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(params, opt, specs)
+            else:
+                quant = QuantConfig(method=quant_method, fmt="nvfp4")
+                plans = ST.synthetic_plans(cfg)
+                qparams = ST.abstract_qparams(cfg, quant, plans)
+                cache_len = shape.seq_len
+                cache = ST.abstract_cache(cfg, shape.global_batch, cache_len)
+                pshard = make_param_shardings(qparams, mesh)
+                cshard = make_cache_shardings(cache, mesh)
+                if shape.kind == "prefill":
+                    step = ST.make_prefill_step(cfg, quant, plans)
+                else:
+                    step = ST.make_serve_step(cfg, quant, plans)
+                jitted = jax.jit(step, in_shardings=(pshard, cshard,
+                                                     in_batch_shardings),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(qparams, cache, specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        from repro.launch.hlo_analysis import analyze_hlo
+        hlo_acc = analyze_hlo(hlo)
+        res = {
+            "cell": tag, "status": "ok",
+            "arch": arch, "shape": shape_name,
+            "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+            "kind": shape.kind,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": _mem_dict(compiled),
+            "cost": _cost_dict(compiled),
+            "collectives": coll,
+            # trip-count-aware totals (XLA cost_analysis counts loop bodies
+            # once; this multiplies by known_trip_count up the call graph)
+            "hlo_analysis": hlo_acc,
+            "hlo_lines": hlo.count("\n"),
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+        }
+        if dump_hlo:
+            (outdir / f"{tag}.hlo").write_text(hlo)
+    except Exception as e:
+        res = {"cell": tag, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    _write(outdir, tag, res)
+    return res
+
+
+def _write(outdir: Path, tag: str, res: dict) -> None:
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / f"{tag}.json").write_text(json.dumps(res, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", default="arc")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        from repro.configs import ASSIGNED
+        archs = ASSIGNED
+        shapes = list(SHAPES)
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+
+    n_ok = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+                if args.variant:
+                    tag += f"__{args.variant}"
+                if args.skip_existing and (outdir / f"{tag}.json").exists():
+                    prev = json.loads((outdir / f"{tag}.json").read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        continue
+                res = run_cell(arch, shape, mp, outdir, args.quant,
+                               args.dump_hlo, args.variant)
+                ok = res["status"] in ("ok", "skipped")
+                n_ok += ok
+                n_err += (not ok)
+                msg = res.get("error", "")[:120]
+                print(f"[{res['status']:>7}] {tag} "
+                      f"compile={res.get('compile_s', '-')}s {msg}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_err} errors")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

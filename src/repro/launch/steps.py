@@ -1,0 +1,178 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+``train_step`` lowers the training path (bf16 substrate, remat over
+periods); ``prefill_step``/``serve_step`` lower the ARCQuant serving path
+with offline-quantized packed-NVFP4 weights — the paper's deployment
+scenario. All builders are mesh-agnostic; shardings are applied by the
+caller (dryrun.py / train.py / serve.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig, ShapeConfig
+from repro.models import lm
+from repro.models.lm import PlanBundle
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.quant import quantize_weights_for_serving
+from repro.quant.apply import QUANTIZABLE
+
+# ---------------------------------------------------------------------------
+# Synthetic plans (dry-run: no calibration data for full-size models)
+# ---------------------------------------------------------------------------
+
+DEFAULT_S = 256   # augmented channels per layer; paper Fig. 8: marginal at <=512
+
+
+def linear_k_dims(cfg: ModelConfig) -> Dict[str, int]:
+    """Reduction-dim K for every quantizable linear, by plan name."""
+    d, hd = cfg.d_model, cfg.head_dim
+    d_in = cfg.mamba_expand * d
+    out: Dict[str, int] = {}
+    for i, (mixer, ffn) in enumerate(zip(cfg.mixer_pattern, cfg.ffn_pattern)):
+        ffn_kind = "rwkv_cmix" if cfg.family == "ssm" else ffn
+        if mixer in ("full", "local"):
+            out[f"b{i}.attn.wq"] = d
+            out[f"b{i}.attn.wk"] = d
+            out[f"b{i}.attn.wv"] = d
+            out[f"b{i}.attn.wo"] = cfg.num_heads * hd
+        elif mixer == "mamba":
+            out[f"b{i}.mamba.in_proj"] = d
+            out[f"b{i}.mamba.x_proj"] = d_in
+            out[f"b{i}.mamba.out_proj"] = d_in
+        elif mixer == "rwkv":
+            for nm in ("r", "k", "v", "g", "o"):
+                out[f"b{i}.rwkv.tmix_{nm}"] = d
+        if ffn_kind == "moe":
+            out[f"b{i}.moe.experts_gate"] = d
+            out[f"b{i}.moe.experts_up"] = d
+            out[f"b{i}.moe.experts_down"] = cfg.expert_ff()
+        elif ffn_kind == "rwkv_cmix":
+            out[f"b{i}.cmix.cmix_k"] = d
+            out[f"b{i}.cmix.cmix_v"] = cfg.d_ff
+            out[f"b{i}.cmix.cmix_r"] = d
+        else:
+            out[f"b{i}.mlp.w_gate"] = d
+            out[f"b{i}.mlp.w_up"] = d
+            out[f"b{i}.mlp.w_down"] = cfg.d_ff
+    return out
+
+
+def synthetic_plans(cfg: ModelConfig, s: int = DEFAULT_S) -> PlanBundle:
+    """Identity-order plans with fixed S (structure-only, for the dry-run)."""
+    arrays, meta = {}, {}
+    p = cfg.num_periods
+    for name, k in linear_k_dims(cfg).items():
+        order = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (p, k))
+        arrays[name] = {"order": order}
+        meta[name] = min(s, (k // 4) // 16 * 16)
+    return PlanBundle(arrays=arrays, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell. Training: full sequences; decode: one new
+    token against a seq_len KV cache. Modality frontends are stubs: [vlm]/
+    [audio] archs receive precomputed patch/frame embeddings."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        # runtime positions: supports packed sequences AND prevents XLA from
+        # constant-folding causal masks into an all-block-pairs buffer
+        specs["positions"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend != "text":
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend != "text":
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:  # decode: one token, cache of seq_len
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        if cfg.frontend != "text":
+            specs["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def abstract_opt_state(params_struct):
+    return jax.eval_shape(adamw_init, params_struct)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, max_len, jnp.bfloat16))
+
+
+def abstract_qparams(cfg: ModelConfig, quant: QuantConfig, plans: PlanBundle,
+                     pack: bool = True):
+    """Struct tree of the offline-quantized serving weights."""
+    pstruct = abstract_params(cfg)
+    return jax.eval_shape(
+        functools.partial(quantize_weights_for_serving, cfg=cfg, quant=quant,
+                          plans=plans, pack=pack), pstruct)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, base_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10000,
+                    schedule=None, remat: bool = True):
+    sched = schedule or cosine_schedule(base_lr, warmup, total)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return lm.next_token_loss(p, cfg, batch["tokens"],
+                                      embeds=batch.get("embeds"),
+                                      positions=batch.get("positions"),
+                                      remat=remat)
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = sched(opt_state.step)
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "nll": aux["nll"],
+                                   "moe_loss": aux["moe_loss"], "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, quant: QuantConfig,
+                      plans: PlanBundle):
+    def prefill_step(qparams, cache, batch):
+        logits, cache, _ = lm.forward(
+            qparams, cfg, tokens=batch["tokens"], embeds=batch.get("embeds"),
+            positions=batch["positions"], cache=cache, quant=quant,
+            plans=plans)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, quant: QuantConfig, plans: PlanBundle):
+    """One decode step: next-token logits + greedy sample + cache update."""
+    def serve_step(qparams, cache, batch):
+        logits, cache, _ = lm.forward(
+            qparams, cfg, tokens=batch["tokens"], embeds=batch.get("embeds"),
+            positions=batch["positions"], cache=cache, quant=quant,
+            plans=plans)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits[:, -1], cache
+
+    return serve_step

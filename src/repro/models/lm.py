@@ -1,0 +1,313 @@
+"""Generic decoder LM assembled from a ModelConfig.
+
+Layers are stacked per *period* (the repeating heterogeneous pattern —
+see configs/base.py) and executed with ``jax.lax.scan`` over periods so
+that compile time and HLO size stay bounded for 28–94 layer models.
+
+Params tree:
+    embed:       (Vp, d)          vocab padded to a multiple of 512
+    lm_head:     (Vp, d)          absent when tie_embeddings
+    final_norm:  (d,)
+    blocks:      [per-position dicts, each leaf stacked (num_periods, ...)]
+
+Forward supports four modes:
+  * train/eval:   tokens -> logits (no cache)
+  * prefill:      tokens + cache -> logits, populated cache
+  * decode:       1-token slice + cache -> next logits, updated cache
+  * capture:      calibration pass, returns per-linear absmax stats
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (DENSE_FFN, FULL_ATTN, LOCAL_ATTN, MAMBA,
+                                MOE_FFN, RWKV, ModelConfig, QuantConfig)
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.parallel.sharding import maybe_shard
+
+VOCAB_PAD = 512
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+@dataclasses.dataclass
+class PlanBundle:
+    """Per-linear quantization plans, scan-ready.
+
+    arrays: name -> {"order": (P, K) i32, "smooth": (P, K) f32} (traced)
+    meta:   name -> S (static outlier count, shared across periods)
+    """
+
+    arrays: Dict[str, Dict[str, jax.Array]]
+    meta: Dict[str, int]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block_position(key, cfg: ModelConfig, mixer: str, ffn: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if mixer in (FULL_ATTN, LOCAL_ATTN):
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    elif mixer == MAMBA:
+        p["mamba"] = S.init_mamba(k1, cfg, dtype)
+    elif mixer == RWKV:
+        p["rwkv"] = S.init_rwkv_tmix(k1, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn == MOE_FFN:
+        p["moe"] = L.init_moe(k2, cfg, dtype)
+    elif ffn == "rwkv_cmix":
+        p["cmix"] = L.init_rwkv_cmix(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Dict:
+    vp = padded_vocab(cfg)
+    keys = jax.random.split(key, cfg.period + 2)
+    blocks = []
+    for i, (mixer, ffn) in enumerate(zip(cfg.mixer_pattern, cfg.ffn_pattern)):
+        ffn_kind = "rwkv_cmix" if cfg.family == "ssm" else ffn
+        pos_keys = jax.random.split(keys[i], cfg.num_periods)
+        stacked = jax.vmap(
+            lambda k: _init_block_position(k, cfg, mixer, ffn_kind, dtype)
+        )(pos_keys)
+        blocks.append(stacked)
+    params = {
+        "embed": jax.random.normal(keys[-2], (vp, cfg.d_model), dtype) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[-1], (vp, cfg.d_model), dtype) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> list:
+    """Per-position caches stacked over periods (scan xs)."""
+    caches = []
+    for mixer, _ in zip(cfg.mixer_pattern, cfg.ffn_pattern):
+        if mixer == FULL_ATTN:
+            c = L.init_attention_cache(cfg, batch, max_len, None, dtype)
+        elif mixer == LOCAL_ATTN:
+            c = L.init_attention_cache(cfg, batch, max_len, cfg.sliding_window, dtype)
+        elif mixer == MAMBA:
+            c = S.init_mamba_cache(cfg, batch, jnp.float32)
+        elif mixer == RWKV:
+            c = S.init_rwkv_cache(cfg, batch, jnp.float32)
+        else:
+            raise ValueError(mixer)
+        if cfg.family == "ssm":
+            c["cmix_shift"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_periods, *x.shape)), c)
+        caches.append(stacked)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Dict, cfg: ModelConfig,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            cache: Optional[list] = None,
+            quant: QuantConfig = QuantConfig(),
+            plans: Optional[PlanBundle] = None,
+            capture: bool = False,
+            compute_logits: bool = True,
+            remat: bool = False):
+    """Returns (logits, new_cache, aux) where aux = {"moe_loss", "capture"}."""
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embeds
+    # sequence parallelism on the residual stream (Megatron-SP style): the
+    # scan carry — and therefore the per-period remat stack — is sharded
+    # over the model axis along seq; GSPMD inserts the all-gather before
+    # attention/MLP and the reduce-scatter after.
+    x = maybe_shard(x.astype(jnp.bfloat16), "batch", "seq_model", None)
+    B, Sq = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    period = cfg.period
+    plan_meta = plans.meta if plans is not None else {}
+    plan_arrays = plans.arrays if plans is not None else {}
+    has_cache = cache is not None
+
+    def body(x, xs):
+        block_list, cache_list, plan_arrs = xs
+        caps: Dict[str, jax.Array] = {}
+        moe_loss = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i in range(period):
+            mixer, ffn = cfg.mixer_pattern[i], cfg.ffn_pattern[i]
+            ffn_kind = "rwkv_cmix" if cfg.family == "ssm" else ffn
+            p = block_list[i]
+            c = cache_list[i] if has_cache else None
+            # per-period plan slices for this position's layers
+            pref = f"b{i}."
+            arrs = {k[len(pref):]: v for k, v in plan_arrs.items()
+                    if k.startswith(pref)}
+            meta = {k[len(pref):]: v for k, v in plan_meta.items()
+                    if k.startswith(pref)}
+            caps_i: Dict[str, jax.Array] = {}
+            ctx = L.LayerCtx(cfg, quant, plan_arrays=arrs or None,
+                             plan_meta=meta or None,
+                             capture=caps_i if capture else None)
+
+            h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+            nc = {}
+            if mixer in (FULL_ATTN, LOCAL_ATTN):
+                window = cfg.sliding_window if mixer == LOCAL_ATTN else None
+                ac = {k: c[k] for k in ("k", "v", "pos")} if c is not None else None
+                out, nac = L.attention_layer(ctx, "attn", p["attn"], h,
+                                             positions, ac, window)
+                if nac is not None:
+                    nc.update(nac)
+            elif mixer == MAMBA:
+                mc = {k: c[k] for k in ("conv", "ssm")} if c is not None else None
+                out, nmc = S.mamba_layer(ctx, "mamba", p["mamba"], h, mc)
+                if nmc is not None:
+                    nc.update(nmc)
+            elif mixer == RWKV:
+                rc = {k: c[k] for k in ("wkv", "shift")} if c is not None else None
+                out, nrc = S.rwkv_tmix_layer(ctx, "rwkv", p["rwkv"], h, rc)
+                if nrc is not None:
+                    nc.update(nrc)
+            else:
+                raise ValueError(mixer)
+            x = x + out.astype(x.dtype)
+
+            h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+            if ffn_kind == MOE_FFN:
+                out2, aux = L.moe_layer(ctx, "moe", p["moe"], h2)
+                moe_loss = moe_loss + aux
+            elif ffn_kind == "rwkv_cmix":
+                shift = c["cmix_shift"] if c is not None else None
+                out2, ns = L.rwkv_cmix_layer(ctx, "cmix", p["cmix"], h2, shift)
+                if c is not None:
+                    nc["cmix_shift"] = ns
+            else:
+                out2 = L.mlp_layer(ctx, "mlp", p["mlp"], h2)
+            x = x + out2.astype(x.dtype)
+
+            if capture:
+                caps.update({f"b{i}.{k}": v for k, v in caps_i.items()})
+            new_caches.append(nc)
+
+        x = maybe_shard(x, "batch", "seq_model", None)   # keep carry SP-sharded
+        ys = (tuple(new_caches) if has_cache else (), caps, moe_loss)
+        return x, ys
+
+    xs = (params["blocks"],
+          cache if has_cache else [()] * period,
+          plan_arrays)
+    body_fn = jax.checkpoint(body) if remat else body
+    x, (new_cache, caps, moe_losses) = jax.lax.scan(body_fn, x, xs)
+
+    aux = {"moe_loss": jnp.sum(moe_losses)}
+    if capture:
+        aux["capture"] = caps
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if not compute_logits:
+        return x, (list(new_cache) if has_cache else None), aux
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    # bf16 logits: halves the dominant activation buffer; the loss upcasts
+    # tile-wise inside the fused reduction (f32 accumulation preserved).
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.bfloat16),
+                        head.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.bfloat16)
+    vp = head.shape[0]
+    if vp != cfg.vocab_size:
+        mask = jnp.where(jnp.arange(vp) < cfg.vocab_size,
+                         jnp.bfloat16(0), jnp.bfloat16(-1e30))
+        logits = logits + mask
+    logits = maybe_shard(logits, "batch", None, "vocab")
+    return logits, (list(new_cache) if has_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss / eval helpers
+# ---------------------------------------------------------------------------
+
+
+def next_token_loss(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                    quant: QuantConfig = QuantConfig(),
+                    plans: Optional[PlanBundle] = None,
+                    embeds: Optional[jax.Array] = None,
+                    positions: Optional[jax.Array] = None,
+                    remat: bool = False) -> Tuple[jax.Array, Dict]:
+    """Causal LM loss over ``tokens`` (B, S); predicts tokens[:, 1:]."""
+    logits, _, aux = forward(params, cfg, tokens=tokens, embeds=embeds,
+                             positions=positions, quant=quant, plans=plans,
+                             remat=remat)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    # shard-friendly true-logit extraction: an iota-select reduction fuses
+    # under GSPMD with vocab-sharded logits (take_along_axis would gather
+    # across vocab shards and re-materialize the full logits).
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+    true = jnp.sum(jnp.where(iota == tgt[..., None], lg, 0.0), axis=-1)
+    nll = jnp.mean(logz - true)
+    return nll + aux["moe_loss"], {"nll": nll, **aux}
+
+
+def perplexity(params: Dict, cfg: ModelConfig, token_batches,
+               quant: QuantConfig = QuantConfig(),
+               plans: Optional[PlanBundle] = None) -> float:
+    """Corpus perplexity over an iterable of (B, S) token arrays."""
+    tot, n = 0.0, 0
+    for tokens in token_batches:
+        _, aux = next_token_loss(params, cfg, tokens, quant, plans)
+        tot += float(aux["nll"])
+        n += 1
+    return float(np.exp(tot / max(n, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Calibration capture
+# ---------------------------------------------------------------------------
+
+
+def capture_stats(params: Dict, cfg: ModelConfig, tokens=None, embeds=None,
+                  positions=None) -> Dict[str, jax.Array]:
+    """One forward pass collecting per-linear input absmax.
+
+    Returns {"b{i}.{layer}.{proj}": (num_periods, K)} — per-period stats,
+    matching the paper's per-layer outlier counts (Fig. 7).
+    """
+    _, _, aux = forward(params, cfg, tokens=tokens, embeds=embeds,
+                        positions=positions, capture=True,
+                        compute_logits=False)
+    # scan stacks ys over periods: leaves are (num_periods, K)
+    return dict(aux["capture"])

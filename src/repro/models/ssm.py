@@ -1,0 +1,246 @@
+"""State-space mixers: Mamba (selective SSM) and RWKV6 "Finch" time-mix.
+
+Both are implemented with ``jax.lax.scan`` over time carrying an O(1)
+recurrent state, which is what makes the ``long_500k`` decode shape
+feasible for the ssm/hybrid architectures. Linear projections route
+through ``dense()`` so ARCQuant applies to them (DESIGN.md §4); the
+recurrence parameters (decay, conv, gates) stay in bf16.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import LayerCtx, dense, rmsnorm
+from repro.parallel.sharding import maybe_shard
+
+TIME_CHUNK = 128
+
+
+def _chunked_time_scan(step, carry, xs, chunk: int = TIME_CHUNK):
+    """scan-over-time in rematerialized chunks.
+
+    A flat ``lax.scan`` over S=4k..500k steps makes the backward pass save
+    the recurrent state at *every* step (S x state bytes — 34 GB/layer for
+    Jamba's Mamba blocks at train_4k). Chunking with ``jax.checkpoint``
+    saves the carry only at chunk boundaries and recomputes inside, cutting
+    residuals by the chunk factor. Padded steps carry a False mask so the
+    step function leaves the state untouched.
+    """
+    s = jax.tree.leaves(xs)[0].shape[0]
+    pad = (-s) % chunk
+    mask = jnp.arange(s + pad) < s
+    if pad:
+        xs = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), xs)
+    nc = (s + pad) // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(nc, chunk, *a.shape[1:]), xs)
+    mask_c = mask.reshape(nc, chunk)
+
+    @jax.checkpoint
+    def chunk_body(c, xm):
+        xc, mc = xm
+        return jax.lax.scan(step, c, (xc, mc))
+
+    carry, ys = jax.lax.scan(chunk_body, carry, (xs_c, mask_c))
+    ys = jax.tree.map(lambda a: a.reshape(nc * chunk, *a.shape[2:])[:s], ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_in, dt_rank, cfg.mamba_d_state
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    d_in, dt_rank, n = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": jax.random.normal(ks[0], (2 * d_in, d), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (d_in, cfg.mamba_d_conv), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": jax.random.normal(ks[2], (dt_rank + 2 * n, d_in), dtype) * d_in ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (d_in, dt_rank), dtype) * dt_rank ** -0.5,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, dtype))),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=dtype), (d_in, 1))),
+        "D": jnp.ones((d_in,), dtype),
+        "out_proj": jax.random.normal(ks[4], (d, d_in), dtype) * d_in ** -0.5,
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, _, n = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, n), dtype),
+    }
+
+
+def mamba_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
+                cache: Optional[Dict] = None):
+    """x: (B, S, d) -> (out, new_cache)."""
+    cfg = ctx.cfg
+    B, S, d = x.shape
+    d_in, dt_rank, n = mamba_dims(cfg)
+
+    xz = dense(ctx, f"{name}.in_proj", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = maybe_shard(x_in, "batch", None, "ff")
+
+    # causal depthwise conv over time (kernel d_conv)
+    dc = cfg.mamba_d_conv
+    state = cache["conv"] if cache is not None else jnp.zeros((B, dc - 1, d_in), x_in.dtype)
+    padded = jnp.concatenate([state.astype(x_in.dtype), x_in], axis=1)
+    conv = sum(padded[:, i:i + S] * params["conv_w"][:, i] for i in range(dc))
+    conv = conv + params["conv_b"]
+    new_conv_state = padded[:, -(dc - 1):]
+    xc = jax.nn.silu(conv)
+
+    dbc = dense(ctx, f"{name}.x_proj", xc, params["x_proj"])
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        dense(ctx, f"{name}.dt_proj", dt_raw, params["dt_proj"], quantize=False)
+        + params["dt_bias"])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))      # (d_in, n)
+
+    def step(h, xs_m):
+        (xc_t, dt_t, b_t, c_t), m = xs_m                   # (B,d_in),(B,d_in),(B,n),(B,n)
+        da = jnp.exp(dt_t[..., None] * a[None])            # (B, d_in, n)
+        h_new = da * h + (dt_t * xc_t)[..., None] * b_t[:, None, :]
+        h = jnp.where(m, h_new, h)                         # padded steps: no-op
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)          # (B, d_in)
+        return h, y
+
+    h0 = (cache["ssm"] if cache is not None
+          else jnp.zeros((B, d_in, n), jnp.float32)).astype(jnp.float32)
+    h0 = maybe_shard(h0, "batch", "ff", None)
+    # scan inputs: (S, B, d_in) with d_in sharded over model — the time
+    # scan only slices the leading dim, so each rank integrates its own
+    # d_in/16 slice locally (the SSM recurrence is elementwise over d_in).
+    # bf16 carriers halve the materialized stacks; the recurrence itself
+    # (step) stays f32.
+    xs = (maybe_shard(xc.transpose(1, 0, 2).astype(jnp.bfloat16),
+                      None, "batch", "ff"),
+          maybe_shard(delta.transpose(1, 0, 2).astype(jnp.bfloat16),
+                      None, "batch", "ff"),
+          b_ssm.transpose(1, 0, 2).astype(jnp.bfloat16),
+          c_ssm.transpose(1, 0, 2).astype(jnp.bfloat16))
+
+    def step_f32(h, xs_m):
+        (a1, a2, a3, a4), m = xs_m
+        return step(h, ((a1.astype(jnp.float32), a2.astype(jnp.float32),
+                         a3.astype(jnp.float32), a4.astype(jnp.float32)), m))
+
+    h_last, ys = _chunked_time_scan(step_f32, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype) + xc * params["D"]
+    y = y * jax.nn.silu(z)
+    out = dense(ctx, f"{name}.out_proj", y, params["out_proj"])
+    new_cache = {"conv": new_conv_state, "ssm": h_last} if cache is not None else None
+    return maybe_shard(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix ("Finch": data-dependent decay)
+# ---------------------------------------------------------------------------
+
+DECAY_RANK = 32
+
+
+def rwkv_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    h, hd = rwkv_heads(cfg)
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    p = {f"tmix_{nm}": jax.random.normal(k, (d, d), dtype) * std
+         for nm, k in zip(("r", "k", "v", "g", "o"), ks[:5])}
+    p.update({
+        "decay_w1": jax.random.normal(ks[5], (DECAY_RANK, d), dtype) * std,
+        "decay_w2": jax.random.normal(ks[6], (d, DECAY_RANK), dtype) * DECAY_RANK ** -0.5,
+        "decay_base": jnp.full((d,), -6.0, dtype),   # w0: slow baseline decay
+        "bonus_u": jax.random.normal(ks[7], (h, hd), dtype) * 0.1,
+        "ln_x": jnp.ones((h, hd), dtype),
+    })
+    for nm in ("r", "k", "v", "g", "w"):
+        p[f"mu_{nm}"] = jnp.full((d,), 0.5, dtype)
+    return p
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    h, hd = rwkv_heads(cfg)
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), dtype),
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_tmix_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
+                    cache: Optional[Dict] = None):
+    """RWKV6 time mix. x: (B, S, d) -> (out, new_cache)."""
+    cfg = ctx.cfg
+    B, S, d = x.shape
+    h, hd = rwkv_heads(cfg)
+
+    if cache is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([cache["shift"][:, None].astype(x.dtype),
+                                x[:, :-1]], axis=1)
+    new_shift = x[:, -1]
+    dx = prev - x
+
+    def lerp(nm):
+        return x + dx * params[f"mu_{nm}"]
+
+    r = dense(ctx, f"{name}.tmix_r", lerp("r"), params["tmix_r"])
+    k = dense(ctx, f"{name}.tmix_k", lerp("k"), params["tmix_k"])
+    v = dense(ctx, f"{name}.tmix_v", lerp("v"), params["tmix_v"])
+    g = dense(ctx, f"{name}.tmix_g", lerp("g"), params["tmix_g"])
+
+    # data-dependent decay (low-rank): w_t = exp(-exp(w0 + tanh(xw W1^T) W2^T))
+    xw = lerp("w").astype(jnp.float32)
+    dd = jnp.tanh(jnp.einsum("bsd,rd->bsr", xw, params["decay_w1"].astype(jnp.float32)))
+    dd = jnp.einsum("bsr,dr->bsd", dd, params["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(params["decay_base"].astype(jnp.float32) + dd))  # (B,S,d) in (0,1)
+
+    rh = r.reshape(B, S, h, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, h, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, h, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, h, hd)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    def step(state, xs_m):
+        (r_t, k_t, v_t, w_t), m = xs_m                       # (B, h, hd)
+        kv = jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        y = jnp.einsum("bhd,bhde->bhe", r_t, state + u[None, :, :, None] * kv)
+        state = jnp.where(m, w_t[..., None] * state + kv, state)
+        return state, y
+
+    s0 = (cache["wkv"] if cache is not None
+          else jnp.zeros((B, h, hd, hd), jnp.float32)).astype(jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rh, kh, vh, wh))
+    s_last, ys = _chunked_time_scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)                             # (B, S, h, hd)
+
+    # per-head normalization, gate, output projection
+    y = rmsnorm(y, params["ln_x"], cfg.norm_eps)
+    y = (y.reshape(B, S, d) * jax.nn.silu(g)).astype(x.dtype)
+    out = dense(ctx, f"{name}.tmix_o", y, params["tmix_o"])
+    new_cache = ({"wkv": s_last, "shift": new_shift}
+                 if cache is not None else None)
+    return maybe_shard(out, "batch", None, None), new_cache

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule, wsd_schedule)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "wsd_schedule"]

@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (axis_size, cache_sharding_rules,
+                                     get_mesh, logical_to_spec,
+                                     make_cache_shardings,
+                                     make_param_shardings, maybe_shard,
+                                     param_sharding_rules, set_mesh,
+                                     shardable, use_mesh)
+
+__all__ = ["axis_size", "cache_sharding_rules", "get_mesh", "logical_to_spec",
+           "make_cache_shardings", "make_param_shardings", "maybe_shard",
+           "param_sharding_rules", "set_mesh", "shardable", "use_mesh"]

@@ -1,0 +1,254 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) for the 2D/3D meshes.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The "pod" axis extends data parallelism across pods (gradient all-reduce
+crosses the DCN once per step). Inside the model we annotate activations
+with *logical* axes and map them here; a dimension is only sharded when
+its size divides the mesh axis — otherwise it is replicated, which keeps
+every (arch × shape) cell compileable without GSPMD padding waste.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+class use_mesh:
+    """Context manager installing the active mesh for maybe_shard()."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = get_mesh()
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+
+
+def axis_size(mesh: Optional[Mesh], name: str) -> int:
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _data_axes(mesh: Mesh):
+    """DP axes: ("pod","data") when multi-pod, else ("data",)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shardable(dim: int, mesh: Optional[Mesh], axis) -> bool:
+    if mesh is None:
+        return False
+    if isinstance(axis, str):
+        return dim % axis_size(mesh, axis) == 0
+    n = int(np.prod([axis_size(mesh, a) for a in axis]))
+    return dim % n == 0
+
+
+def logical_to_spec(logical: Sequence[Optional[str]], mesh: Optional[Mesh],
+                    dims: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to mesh axes, dropping non-divisible shards.
+
+    Logical names: "batch" -> (pod,)data, "model" -> model, "seq" -> None
+    (sequence kept local; SP variants map it to "model"), "experts" -> model.
+    """
+    if mesh is None:
+        return P()
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        if name == "batch":
+            axes = _data_axes(mesh)
+        elif name in ("model", "experts", "vocab", "heads", "ff"):
+            axes = ("model",)
+        elif name == "seq_model":      # sequence parallelism over model axis
+            axes = ("model",)
+        else:
+            out.append(None)
+            continue
+        ok = dims is None or shardable(dims[i], mesh, axes)
+        if not ok:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def maybe_shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# path-substring -> which trailing dim is the TP ("model") dim. Column-
+# parallel weights shard their OUTPUT dim; row-parallel their INPUT dim
+# (weights are (out, in)). -1 = last dim, -2 = second-to-last, None = no TP.
+# The leading stacked-period dim (scan) is never sharded.
+_PARAM_TP_RULES = [
+    ("embed", -2), ("lm_head", -2),              # (vocab, d): vocab over model
+    ("wq", -2), ("wk", -2), ("wv", -2),          # column-parallel QKV
+    ("wo", -1),                                  # row-parallel output proj
+    ("w_gate", -2), ("w_up", -2),                # column-parallel
+    ("w_down", -1),                              # row-parallel
+    ("experts", -3),                             # (E, ., .): expert parallelism
+    ("router", None),
+    ("in_proj", -2), ("x_proj", -1), ("out_proj", -1),   # mamba
+    ("tmix_", -2), ("cmix_k", -2), ("cmix_v", -1), ("cmix_r", -2),
+]
+
+FSDP_MIN_SIZE = 8 * 1024 * 1024   # leaves above this also shard over "data"
+
+
+def param_sharding_rules(path: str, shape: Sequence[int],
+                         mesh: Optional[Mesh]) -> P:
+    """PartitionSpec for a parameter identified by its tree path.
+
+    TP dim over "model" (divisibility-checked); for large leaves, one other
+    dim is additionally sharded over the DP axes (FSDP/ZeRO-3 style — GSPMD
+    inserts the per-layer all-gathers).
+    """
+    if mesh is None:
+        return P()
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    tp_dim = None
+    matched = False
+    for key, rule in _PARAM_TP_RULES:
+        if key in path:
+            matched = True
+            if rule is not None and ndim >= -rule:
+                d = ndim + rule
+                if shardable(shape[d], mesh, "model"):
+                    spec[d] = "model"
+                    tp_dim = d
+            break
+    if not matched:
+        return P()
+    size = int(np.prod(shape))
+    if size >= FSDP_MIN_SIZE:
+        data_axes = _data_axes(mesh)
+        # shard the largest remaining dim over the DP axes
+        for d in sorted(range(ndim), key=lambda i: -shape[i]):
+            if d == tp_dim:
+                continue
+            if shardable(shape[d], mesh, data_axes):
+                spec[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+    return P(*spec)
+
+
+def make_param_shardings(params, mesh: Optional[Mesh]):
+    """NamedShardings for a parameter pytree (QTensor-aware via flatten)."""
+    if mesh is None:
+        return None
+
+    def path_str(path) -> str:
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+    def spec_for(path, leaf):
+        p = path_str(path)
+        return NamedSharding(mesh, param_sharding_rules(p, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding rules (serving path)
+# ---------------------------------------------------------------------------
+
+
+def cache_sharding_rules(path: str, shape: Sequence[int],
+                         mesh: Optional[Mesh]) -> P:
+    """KV / recurrent-state cache sharding.
+
+    Leaves carry a leading period-stack dim. Batch shards over DP axes;
+    heads/state dims over "model" when divisible. For single-request
+    long-context (batch==1), the KV sequence dim shards over "data"
+    (sequence parallelism for the cache).
+    """
+    if mesh is None:
+        return P()
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    data_axes = _data_axes(mesh)
+    leaf = path.rsplit("/", 1)[-1]
+    # shapes: (P, B, ...) — dim 1 is batch
+    if ndim >= 2 and shardable(shape[1], mesh, data_axes):
+        spec[1] = data_axes if len(data_axes) > 1 else data_axes[0]
+        batch_sharded = True
+    else:
+        batch_sharded = False
+    if leaf in ("k", "v", "pos"):
+        # (P, B, L, Hkv, D) / pos (P, B, L). Heads shard over model when
+        # divisible; otherwise the cache *sequence* shards over model
+        # (sequence-parallel KV: each model rank holds an L/16 slice and the
+        # flash kv-chunk loop gathers one chunk at a time). Single-request
+        # long-context (batch==1) additionally shards L over the DP axes.
+        l_axes = []
+        if not batch_sharded and ndim >= 3:
+            l_axes += list(data_axes)
+        # NOTE(perf log P5b): padded head sharding (36 heads over 16
+        # ranks) is rejected by pjit for *input* arrays — in_shardings
+        # require divisibility — so cache heads shard only when divisible
+        # and the L dim shards over model otherwise.
+        heads_sharded = (leaf != "pos" and ndim >= 4
+                         and shardable(shape[3], mesh, "model"))
+        if heads_sharded:
+            spec[3] = "model"
+        elif ndim >= 3:
+            l_axes.append("model")
+        if l_axes and ndim >= 3 and shardable(shape[2], mesh, tuple(l_axes)):
+            spec[2] = tuple(l_axes) if len(l_axes) > 1 else l_axes[0]
+    elif leaf == "conv":
+        # (P, B, dc-1, d_in)
+        if ndim >= 4 and shardable(shape[3], mesh, "model"):
+            spec[3] = "model"
+    elif leaf == "ssm":
+        # (P, B, d_in, n)
+        if ndim >= 3 and shardable(shape[2], mesh, "model"):
+            spec[2] = "model"
+    elif leaf == "wkv":
+        # (P, B, H, hd, hd)
+        if ndim >= 3 and shardable(shape[2], mesh, "model"):
+            spec[2] = "model"
+    return P(*spec)
+
+
+def make_cache_shardings(cache, mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+
+    def path_str(path) -> str:
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+    def spec_for(path, leaf):
+        return NamedSharding(mesh, cache_sharding_rules(path_str(path),
+                                                        leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

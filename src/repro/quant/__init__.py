@@ -1,0 +1,4 @@
+from repro.quant.apply import (make_plan_bundle, plan_summary,
+                               quantize_weights_for_serving)
+
+__all__ = ["make_plan_bundle", "plan_summary", "quantize_weights_for_serving"]

@@ -1,0 +1,161 @@
+"""Model-level quantization pass.
+
+Turns calibration capture stats into a scan-ready ``PlanBundle`` (per-layer
+channel orders stacked over periods + static outlier counts S) and converts
+the weight pytree into offline-quantized (optionally ARC-augmented)
+``QTensor`` leaves for the serving path — the paper's "Offline Weight
+Quantization" (§3.2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import arc as ARC
+from repro.core import quant as Q
+from repro.models.lm import PlanBundle
+
+
+def make_plan_bundle(stats: Dict[str, jax.Array], cfg: ModelConfig,
+                     quant: QuantConfig,
+                     params: Optional[Dict] = None) -> PlanBundle:
+    """stats: {"b{i}.{module}.{param}": (num_periods, K) absmax}.
+
+    Per-period channel orders are traced scan inputs; S must be static per
+    layer-name, so we take the max S across periods (rounded to the block
+    size) — a superset of each period's compensation set, which can only
+    tighten the error. Smoothing vectors (for the SmoothQuant baseline) are
+    derived when ``params`` is given.
+    """
+    arrays: Dict[str, Dict[str, jax.Array]] = {}
+    meta: Dict[str, int] = {}
+    for name, st in stats.items():
+        st = np.asarray(jax.device_get(st), np.float32)   # (P, K)
+        if st.ndim == 1:
+            st = st[None]
+        orders = []
+        s_max = 0
+        for row in st:
+            plan = ARC.select_outliers(row, quant.fmt,
+                                       max_fraction=quant.max_outlier_fraction)
+            orders.append(plan.order)
+            s_max = max(s_max, plan.s)
+        entry = {"order": jnp.asarray(np.stack(orders))}
+        if params is not None:
+            w = _lookup_weight(params, name)
+            if w is not None:
+                w_absmax = _weight_absmax(w)
+                smooth = np.power(np.maximum(st, 1e-5), 0.5) / \
+                    np.power(np.maximum(w_absmax, 1e-5), 0.5)
+                entry["smooth"] = jnp.asarray(
+                    np.where(np.isfinite(smooth) & (smooth > 0), smooth, 1.0))
+        arrays[name] = entry
+        meta[name] = s_max
+    return PlanBundle(arrays=arrays, meta=meta)
+
+
+def _weight_absmax(w) -> np.ndarray:
+    """Per-input-channel |W| max for stacked weights (P, ..., K) -> (P, K)."""
+    wn = np.abs(np.asarray(jax.device_get(w), np.float32))
+    # reduce all dims except first (period) and last (K)
+    axes = tuple(range(1, wn.ndim - 1))
+    return wn.max(axis=axes) if axes else wn
+
+
+def _lookup_weight(params: Dict, plan_name: str):
+    try:
+        _, module, leaf = plan_name.split(".", 2)
+        i = int(plan_name.split(".")[0][1:])
+        return params["blocks"][i][module][leaf]
+    except (KeyError, ValueError, IndexError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Offline weight quantization (serving path)
+# ---------------------------------------------------------------------------
+
+# module -> leaves that are quantizable linear weights (reduction on last axis)
+QUANTIZABLE = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+    "moe": ("experts_gate", "experts_up", "experts_down"),
+    "mamba": ("in_proj", "x_proj", "out_proj"),
+    "rwkv": ("tmix_r", "tmix_k", "tmix_v", "tmix_g", "tmix_o"),
+    "cmix": ("cmix_k", "cmix_v", "cmix_r"),
+}
+
+
+def quantize_weights_for_serving(params: Dict, cfg: ModelConfig,
+                                 quant: QuantConfig,
+                                 plans: Optional[PlanBundle] = None,
+                                 pack: bool = False) -> Dict:
+    """Replace linear weights with offline-quantized QTensors.
+
+    * method == "rtn": plain blockwise quantization.
+    * method == "arc": reorder along K per the plan, quantize, duplicate the
+      quantized outlier columns (paper §3.2 "Offline Weight Quantization").
+    Non-weight leaves (biases, norms, recurrence params) pass through.
+    """
+    new_blocks = []
+    for i, block in enumerate(params["blocks"]):
+        nb = dict(block)
+        for module, leaves in QUANTIZABLE.items():
+            if module not in block:
+                continue
+            sub = dict(block[module])
+            for leaf in leaves:
+                w = sub[leaf]                      # (P, ..., K)
+                name = f"b{i}.{module}.{leaf}"
+                # expert weights (P, E, f, d) are quantized per expert
+                # (per-tensor FP32 scale granularity = one weight matrix),
+                # matching the online simulated path exactly.
+                nbatch = w.ndim - 2
+                if quant.method == "arc" and plans is not None and \
+                        name in plans.arrays:
+                    order = plans.arrays[name]["order"]        # (P, K)
+                    s = plans.meta[name]
+                    fn = lambda wp, op: _augment_weight(wp, op, s, quant.fmt)
+                    for ax in range(nbatch - 1):
+                        fn = jax.vmap(fn, in_axes=(0, None))
+                    qw = jax.vmap(fn)(w, order)
+                else:
+                    fn = lambda wp: Q.quantize(wp, quant.fmt)
+                    for ax in range(nbatch - 1):
+                        fn = jax.vmap(fn)
+                    qw = jax.vmap(fn)(w)
+                if pack and quant.fmt in ("nvfp4", "mxfp4"):
+                    pfn = lambda t: t.to_packed()
+                    for ax in range(nbatch):
+                        pfn = jax.vmap(pfn)
+                    qw = pfn(qw)
+                sub[leaf] = qw
+            nb[module] = sub
+        new_blocks.append(nb)
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
+
+
+def _augment_weight(w: jax.Array, order: jax.Array, s: int, fmt: str) -> Q.QTensor:
+    wr = jnp.take(w, order, axis=-1)
+    wq = Q.quantize(wr, fmt)
+    if s == 0:
+        return wq
+    g = wq.fmt.block_size
+    dup = Q.QTensor(wq.elements[..., :s], wq.scales[..., : s // g],
+                    wq.fmt_name, s, wq.tensor_scale)
+    return Q.concat_k(wq, dup)
+
+
+def plan_summary(plans: PlanBundle) -> Dict[str, dict]:
+    """Per-layer S statistics (paper Fig. 7)."""
+    out = {}
+    for name, s in plans.meta.items():
+        k = int(plans.arrays[name]["order"].shape[-1])
+        out[name] = {"S": int(s), "K": k, "overhead": s / k}
+    return out

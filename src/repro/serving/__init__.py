@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["Request", "ServingEngine"]

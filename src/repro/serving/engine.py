@@ -1,0 +1,101 @@
+"""Batched serving engine over the ARCQuant quantized model.
+
+Flow (paper Figure 5, deployment side):
+  1. offline: calibrate -> plans -> quantize weights (packed NVFP4, ARC-
+     augmented along K)
+  2. prefill: batched prompt pass through the quantized model, fills the
+     KV / recurrent-state caches
+  3. decode: step loop — each step is ONE ``serve_step`` (fused online
+     activation quantization + unified GEMMs), greedy or temperature
+     sampling
+
+The engine pads requests to a fixed batch (static shapes for jit) and
+tracks per-request completion. Continuous batching at cluster scale slots
+new requests into finished cache rows between steps — the cache layout
+(batch-major, position-indexed) is chosen so that's a pure row overwrite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import lm
+from repro.models.lm import PlanBundle
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, qparams, cfg: ModelConfig, quant: QuantConfig,
+                 plans: Optional[PlanBundle], batch_size: int = 4,
+                 max_len: int = 512):
+        self.qparams = qparams
+        self.cfg = cfg
+        self.quant = quant
+        self.plans = plans
+        self.batch_size = batch_size
+        self.max_len = max_len
+
+        def prefill(qp, cache, tokens, positions):
+            logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
+                                          positions=positions, cache=cache,
+                                          quant=quant, plans=plans)
+            return logits[:, -1], cache
+
+        def decode(qp, cache, tokens, positions):
+            logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
+                                          positions=positions, cache=cache,
+                                          quant=quant, plans=plans)
+            nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        self._prefill = jax.jit(prefill, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests in fixed-size batches."""
+        for i in range(0, len(requests), self.batch_size):
+            self._run_batch(requests[i:i + self.batch_size])
+        return requests
+
+    def _run_batch(self, batch: List[Request]) -> None:
+        b = self.batch_size
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((b, plen), np.int32)
+        for j, r in enumerate(batch):
+            toks[j, plen - len(r.prompt):] = r.prompt     # left-pad
+        cache = lm.init_cache(self.cfg, b, self.max_len)
+        pos = np.broadcast_to(np.arange(plen), (b, plen)).astype(np.int32)
+        _, cache = self._prefill(self.qparams, cache, jnp.asarray(toks),
+                                 jnp.asarray(pos))
+        last = jnp.asarray(toks[:, -1:])
+        max_new = max(r.max_new_tokens for r in batch)
+        for t in range(max_new):
+            p = jnp.full((b, 1), plen + t, jnp.int32)
+            nxt, cache = self._decode(self.qparams, cache, last, p)
+            nxt_np = np.asarray(nxt)
+            for j, r in enumerate(batch):
+                if r.done or t >= r.max_new_tokens:
+                    continue
+                tok = int(nxt_np[j])
+                r.out_tokens.append(tok)
+                if r.eos_token is not None and tok == r.eos_token:
+                    r.done = True
+            last = nxt[:, None]
+            if all(r.done or len(r.out_tokens) >= r.max_new_tokens
+                   for r in batch):
+                break
+        for r in batch:
+            r.done = True

@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# keep hypothesis fast on the single-core CI box
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

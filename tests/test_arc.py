@@ -1,0 +1,135 @@
+"""ARCQuant core semantics (paper §3.2): augmentation == compensation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arc, baselines as BL, quant as Q
+
+
+def outlier_data(rng, m=16, k=128, n_out=3, mag=40.0):
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    cols = rng.choice(k, n_out, replace=False)
+    x[:, cols] *= mag
+    return x, cols
+
+
+class TestOutlierSelection:
+    def test_tau_rule(self, rng):
+        """tau = 2^-3 * M (3-bit exponent gap between E5M2 ref and E2M1)."""
+        absmax = np.ones(64, np.float32)
+        absmax[:5] = 100.0            # > tau = 12.5
+        plan = arc.select_outliers(absmax)
+        assert plan.s == 16           # 5 rounded up to the block size
+        assert plan.layer_max == 100.0
+        assert set(plan.order[:5]) == set(range(5))
+
+    def test_s_capped(self):
+        absmax = np.full(64, 50.0, np.float32)
+        absmax[0] = 100.0             # everything above tau
+        plan = arc.select_outliers(absmax, max_fraction=0.25)
+        assert plan.s == 16           # 25% of 64, block-aligned
+
+    def test_block_alignment(self, rng):
+        for n_out in [1, 15, 16, 17, 31]:
+            absmax = np.ones(256, np.float32)
+            absmax[:n_out] = 100.0
+            plan = arc.select_outliers(absmax)
+            assert plan.s % 16 == 0
+            assert plan.s >= min(n_out, 64)
+
+    def test_order_is_permutation(self, rng):
+        plan = arc.select_outliers(rng.random(100).astype(np.float32))
+        assert sorted(plan.order) == list(range(100))
+        np.testing.assert_array_equal(plan.inverse_order[plan.order],
+                                      np.arange(100))
+
+
+class TestEquivalence:
+    """Eq. 2: single augmented GEMM == explicit two-GEMM compensation."""
+
+    @pytest.mark.parametrize("fmt", ["nvfp4", "mxfp4", "int4"])
+    def test_exact(self, fmt, rng):
+        x, _ = outlier_data(rng)
+        w = rng.normal(size=(32, 128)).astype(np.float32)
+        g = Q.quantize(jnp.asarray(x), fmt).fmt.block_size
+        plan = arc.select_outliers(np.abs(x).max(0), fmt)
+        y_aug = arc.fake_quant_matmul(jnp.asarray(x), jnp.asarray(w), plan)
+        y_ref = arc.arc_matmul_reference(jnp.asarray(x), jnp.asarray(w), plan)
+        np.testing.assert_array_equal(np.asarray(y_aug), np.asarray(y_ref))
+
+    def test_augmented_shapes(self, rng):
+        x, _ = outlier_data(rng)
+        plan = arc.select_outliers(np.abs(x).max(0))
+        xa = arc.augment_activations(jnp.asarray(x), plan)
+        assert xa.shape == (16, 128 + plan.s)
+        w = rng.normal(size=(32, 128)).astype(np.float32)
+        wa = arc.augment_weights(jnp.asarray(w), plan)
+        assert wa.shape == (32, 128 + plan.s)
+
+    def test_weight_duplication_is_quantized_copy(self, rng):
+        """Q_W_aug = [Q_W | Q_W_o] — duplicated columns reuse quantized values."""
+        w = rng.normal(size=(8, 64)).astype(np.float32)
+        plan = arc.ArcPlan(order=np.arange(64, dtype=np.int32), s=16)
+        wa = arc.augment_weights(jnp.asarray(w), plan)
+        np.testing.assert_array_equal(np.asarray(wa.elements[..., 64:]),
+                                      np.asarray(wa.elements[..., :16]))
+
+
+class TestAccuracy:
+    def test_arc_beats_rtn_on_outliers(self, rng):
+        x, _ = outlier_data(rng, m=64, k=256, n_out=4, mag=50.0)
+        w = rng.normal(size=(128, 256)).astype(np.float32)
+        y_fp = x @ w.T
+        plan = arc.select_outliers(np.abs(x).max(0))
+        y_arc = np.asarray(arc.fake_quant_matmul(jnp.asarray(x), jnp.asarray(w), plan))
+        y_rtn = np.asarray(BL.rtn_matmul(jnp.asarray(x), jnp.asarray(w)))
+        mse_arc = np.mean((y_arc - y_fp) ** 2)
+        mse_rtn = np.mean((y_rtn - y_fp) ** 2)
+        assert mse_arc < mse_rtn
+
+    def test_s0_equals_rtn(self, rng):
+        x = rng.normal(size=(8, 64)).astype(np.float32)
+        w = rng.normal(size=(16, 64)).astype(np.float32)
+        plan = arc.ArcPlan(order=np.arange(64, dtype=np.int32), s=0)
+        y_arc = arc.fake_quant_matmul(jnp.asarray(x), jnp.asarray(w), plan)
+        y_rtn = BL.rtn_matmul(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(y_arc), np.asarray(y_rtn))
+
+    def test_residual_shrinks_with_s(self, rng):
+        """More compensated channels -> monotone-ish error reduction."""
+        x, _ = outlier_data(rng, m=32, k=128, n_out=8, mag=30.0)
+        w = rng.normal(size=(64, 128)).astype(np.float32)
+        y_fp = x @ w.T
+        order = np.argsort(-np.abs(x).max(0)).astype(np.int32)
+        errs = []
+        for s in [0, 16, 32]:
+            plan = arc.ArcPlan(order=order, s=s)
+            y = np.asarray(arc.fake_quant_matmul(jnp.asarray(x), jnp.asarray(w), plan))
+            errs.append(np.mean((y - y_fp) ** 2))
+        assert errs[1] < errs[0]
+        assert errs[2] <= errs[1] * 1.05
+
+
+class TestInterleavedLayout:
+    """Appendix D: interleave is a permutation; GEMM is permutation-invariant."""
+
+    def test_permutation(self):
+        perm = arc.interleaved_permutation(64, 32, 16)
+        assert sorted(perm) == list(range(96))
+        # first 16 = primary block 0, next 16 = its residual block
+        np.testing.assert_array_equal(perm[:16], np.arange(16))
+        np.testing.assert_array_equal(perm[16:32], 64 + np.arange(16))
+
+    def test_gemm_invariant(self, rng):
+        x, _ = outlier_data(rng, m=8, k=64)
+        w = rng.normal(size=(16, 64)).astype(np.float32)
+        plan = arc.select_outliers(np.abs(x).max(0))
+        xa = arc.augment_activations(jnp.asarray(x), plan)
+        wa = arc.augment_weights(jnp.asarray(w), plan)
+        y = Q.qmatmul(xa, wa)
+        xi = arc.to_interleaved(xa, 64, plan.s)
+        wi = arc.to_interleaved(wa, 64, plan.s)
+        yi = Q.qmatmul(xi, wi)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yi),
+                                   rtol=1e-5, atol=1e-4)

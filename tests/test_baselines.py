@@ -1,0 +1,74 @@
+"""Baseline PTQ adaptations (paper §4.1): SmoothQuant, QuaRot, Atom, W4A8."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+
+
+def test_hadamard_orthogonal():
+    for k in [64, 128, 96]:       # 96 = block-diagonal path
+        h = BL.hadamard_matrix(k)
+        np.testing.assert_allclose(h @ h.T, np.eye(k), atol=1e-5)
+
+
+def test_rotation_preserves_product(rng):
+    """(XH)(WH)^T == XW^T exactly in fp32 (before quantization)."""
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    w = rng.normal(size=(16, 64)).astype(np.float32)
+    h = BL.hadamard_matrix(64)
+    np.testing.assert_allclose((x @ h) @ (w @ h).T, x @ w.T, atol=1e-4)
+
+
+def test_smooth_plan_scales(rng):
+    a = np.abs(rng.normal(size=64)).astype(np.float32) * 10
+    w = np.abs(rng.normal(size=64)).astype(np.float32)
+    plan = BL.make_smooth_plan(a, w, alpha=0.5)
+    assert plan.smooth.shape == (64,)
+    assert (plan.smooth > 0).all()
+    # migration: activation range shrinks where a >> w
+    big = a > 5 * w
+    assert (plan.smooth[big] > 1).mean() > 0.5
+
+
+def test_smooth_exact_without_quant(rng):
+    """X/s @ (W*s)^T == XW^T in exact arithmetic."""
+    x = rng.normal(size=(8, 64)).astype(np.float64)
+    w = rng.normal(size=(16, 64)).astype(np.float64)
+    s = np.abs(rng.normal(size=64)) + 0.5
+    np.testing.assert_allclose((x / s) @ (w * s).T, x @ w.T, rtol=1e-9)
+
+
+def test_atom_mixed_precision(rng):
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    x[:, :3] *= 40
+    w = rng.normal(size=(32, 128)).astype(np.float32)
+    plan = BL.make_atom_plan(np.abs(x).max(0), s=32)
+    y = np.asarray(BL.atom_matmul(jnp.asarray(x), jnp.asarray(w), plan))
+    y_fp = x @ w.T
+    y_rtn = np.asarray(BL.rtn_matmul(jnp.asarray(x), jnp.asarray(w)))
+    # high-precision outliers should beat uniform RTN
+    assert np.mean((y - y_fp) ** 2) < np.mean((y_rtn - y_fp) ** 2)
+
+
+def test_w4a8_better_than_w4a4(rng):
+    x = rng.normal(size=(16, 128)).astype(np.float32) * 3
+    w = rng.normal(size=(32, 128)).astype(np.float32)
+    y_fp = x @ w.T
+    e_w4a8 = np.mean((np.asarray(BL.w4a8_matmul(jnp.asarray(x), jnp.asarray(w))) - y_fp) ** 2)
+    e_w4a4 = np.mean((np.asarray(BL.rtn_matmul(jnp.asarray(x), jnp.asarray(w), "nvfp4")) - y_fp) ** 2)
+    assert e_w4a8 < e_w4a4
+
+
+def test_hadamard_spreads_outliers(rng):
+    """Paper Fig. 2: rotation raises the dynamic range of quiet blocks."""
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    x[:, 5] *= 60
+    h = BL.hadamard_matrix(128)
+    xh = x @ h
+    # block-wise amax of non-outlier blocks grows after rotation
+    def quiet_block_amax(z):
+        zb = np.abs(z.reshape(64, -1, 16)).max(-1)      # (rows, blocks)
+        return np.median(zb)
+    assert quiet_block_amax(np.asarray(xh)) > 2 * quiet_block_amax(
+        np.delete(x, 5, axis=1)[:, :112])

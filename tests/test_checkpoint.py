@@ -1,0 +1,62 @@
+"""Checkpoint store: roundtrip, atomicity, retention, resume pointers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.optim import adamw_init
+
+
+def make_tree(key):
+    return {"a": jax.random.normal(key, (4, 8)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32),
+                       "c": [jnp.ones((2,)), jnp.zeros((3,))]}}
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(0))
+    opt = adamw_init(tree)
+    save_checkpoint(tmp_path, 7, tree, opt, extra={"stream": {"seed": 0, "step": 3}})
+    restored, opt2, meta = load_checkpoint(tmp_path, tree, opt)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert meta["step"] == 7
+    assert meta["extra"]["stream"]["step"] == 3
+    assert int(opt2.step) == 0
+
+
+def test_latest_pointer(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(tmp_path, interval=10, keep=2)
+    for step in [10, 20, 30]:
+        mgr.save(step, tree)
+    assert mgr.latest_step() == 30
+    # retention keeps the newest 2
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert kept == ["step_00000020", "step_00000030"]
+
+
+def test_should_save_cadence(tmp_path):
+    mgr = CheckpointManager(tmp_path, interval=5)
+    assert not mgr.should_save(0)
+    assert mgr.should_save(5)
+    assert not mgr.should_save(6)
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """A .tmp directory must never be resolvable as latest."""
+    tree = make_tree(jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path, 1, tree)
+    (tmp_path / "step_00000099.tmp").mkdir()
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.latest_step() == 1
+
+
+def test_restore_specific_step(tmp_path):
+    t1 = make_tree(jax.random.PRNGKey(1))
+    t2 = make_tree(jax.random.PRNGKey(2))
+    save_checkpoint(tmp_path, 1, t1)
+    save_checkpoint(tmp_path, 2, t2)
+    r1, _, _ = load_checkpoint(tmp_path, t1, step=1)
+    np.testing.assert_array_equal(np.asarray(r1["a"]), np.asarray(t1["a"]))

@@ -1,0 +1,55 @@
+"""Paper §3.4: dual-stage NVFP4 worst-case error vs single-stage MXFP8."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import error_bounds as EB
+
+
+def test_alignment_factors():
+    # sup alpha1*alpha2 = 1.125^2 ~= 1.266 < 2 = sup alpha_mx
+    assert EB.ALPHA_NV_SUP ** 2 == pytest.approx(1.265625)
+    assert EB.bound_ratio() < 1.0
+
+
+def test_epsilon_bridge():
+    # eps4^2 == eps8 — the dual stage matches 8-bit resolution
+    assert EB.EPS4 ** 2 == EB.EPS8
+
+
+def test_bounds_formulae():
+    m = 10.0
+    assert EB.mxfp8_bound(m) == pytest.approx(2 * 10 * 2 ** -4)
+    assert EB.arc_bound(m) == pytest.approx(1.265625 * 10 * 2 ** -4)
+    assert EB.arc_bound(m) < EB.mxfp8_bound(m)
+
+
+@given(hnp.arrays(np.float32, st.integers(32, 256),
+                  elements=st.floats(-50, 50, width=32)))
+def test_empirical_within_bounds(x):
+    if np.abs(x).max() < 1e-3:
+        return
+    r = EB.empirical_worst_case(x)
+    assert r.arc_within_bound
+    assert r.mx_within_bound
+
+
+def test_dual_stage_improves_on_single(rng):
+    """Dual-stage NVFP4 should land well below single-stage NVFP4 error."""
+    import jax.numpy as jnp
+    from repro.core import quant as Q
+    x = rng.normal(size=(1, 4096)).astype(np.float32) * 8
+    q1 = np.asarray(Q.quantize_dequantize(jnp.asarray(x), "nvfp4"))
+    r = x - q1
+    q2 = np.asarray(Q.quantize_dequantize(jnp.asarray(r), "nvfp4"))
+    e_single = np.abs(q1 - x).max()
+    e_dual = np.abs(q1 + q2 - x).max()
+    assert e_dual < e_single * 0.5
+
+
+def test_dual_stage_comparable_to_mxfp8(rng):
+    """Empirically: dual-stage NVFP4 ~ MXFP8 fidelity (the paper's claim)."""
+    r = EB.empirical_worst_case(rng.normal(size=8192).astype(np.float32) * 5)
+    # within the theoretical ratio of bounds (1.266/2), allow 2x slack
+    assert r.max_err_arc <= 2 * r.max_err_mxfp8

@@ -1,0 +1,112 @@
+"""Fault tolerance: injected failure -> rollback+resume; NaN quarantine;
+data-stream cursor restoration (distributed/fault_tolerance.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenStream
+from repro.distributed import FaultTolerantRunner, Preemption, RunnerConfig
+
+
+def toy_step(params, opt_state, batch):
+    """Deterministic toy train step: params counts batches seen."""
+    s = float(np.asarray(batch["tokens"]).sum())
+    params = {"w": params["w"] + 1}
+    opt_state = {"n": opt_state["n"] + 1}
+    return params, opt_state, {"loss": 1.0 / (1 + float(params["w"]))}
+
+
+def make(tmp_path, max_steps=12, interval=4):
+    mgr = CheckpointManager(tmp_path, interval=interval)
+    runner = FaultTolerantRunner(mgr, RunnerConfig(
+        max_steps=max_steps, checkpoint_interval=interval))
+    stream = TokenStream(vocab_size=100, seed=0)
+    it = stream.batches(2, 8)
+
+    def batch_fn(stream):
+        return {"tokens": next(it)}
+
+    return mgr, runner, stream, batch_fn
+
+
+def test_runs_to_completion(tmp_path):
+    mgr, runner, stream, batch_fn = make(tmp_path)
+    out = runner.run(toy_step, {"w": 0}, {"n": 0}, stream, batch_fn)
+    assert out["final_step"] == 12
+    assert len(out["losses"]) == 12
+
+
+def test_injected_failure_recovers(tmp_path):
+    mgr, runner, stream, batch_fn = make(tmp_path)
+    out = runner.run(toy_step, {"w": 0}, {"n": 0}, stream, batch_fn,
+                     inject_failure_at=6)
+    assert out["final_step"] == 12
+    kinds = [e["kind"] for e in out["events"]]
+    assert "failure" in kinds
+    # rolled back to step 4 checkpoint and re-ran 4..12
+    assert int(out["params"]["w"]) == 12
+
+
+def test_failure_before_any_checkpoint_raises(tmp_path):
+    mgr, runner, stream, batch_fn = make(tmp_path)
+    with pytest.raises(RuntimeError):
+        runner.run(toy_step, {"w": 0}, {"n": 0}, stream, batch_fn,
+                   inject_failure_at=1)
+
+
+def test_nan_rollback_and_skip(tmp_path):
+    mgr, runner, stream, batch_fn = make(tmp_path)
+    calls = {"n": 0}
+
+    def nan_step(params, opt_state, batch):
+        calls["n"] += 1
+        params, opt_state, m = toy_step(params, opt_state, batch)
+        if calls["n"] == 6:
+            m = {"loss": float("nan")}
+        return params, opt_state, m
+
+    out = runner.run(nan_step, {"w": 0}, {"n": 0}, stream, batch_fn)
+    assert out["final_step"] == 12
+    assert "nan" in [e["kind"] for e in out["events"]]
+
+
+def test_resume_from_checkpoint(tmp_path):
+    """Simulates a process restart: second runner picks up at the last step."""
+    mgr, runner, stream, batch_fn = make(tmp_path, max_steps=8)
+    runner.run(toy_step, {"w": 0}, {"n": 0}, stream, batch_fn)
+    # "restart": fresh runner, same dir, more steps
+    mgr2 = CheckpointManager(tmp_path, interval=4)
+    runner2 = FaultTolerantRunner(mgr2, RunnerConfig(max_steps=12,
+                                                     checkpoint_interval=4))
+    stream2 = TokenStream(vocab_size=100, seed=0)
+    it2 = stream2.batches(2, 8)
+    out = runner2.run(toy_step, {"w": 0}, {"n": 0}, stream2,
+                      lambda s: {"tokens": next(it2)})
+    assert out["events"][0] == {"kind": "resume", "step": 8}
+    assert out["final_step"] == 12
+    assert int(out["params"]["w"]) == 12
+
+
+def test_preemption_saves_and_raises(tmp_path):
+    mgr, runner, stream, batch_fn = make(tmp_path, max_steps=100)
+    orig = toy_step
+
+    def step(params, opt_state, batch):
+        p, o, m = orig(params, opt_state, batch)
+        if int(p["w"]) == 5:
+            runner.preempted = True     # simulate SIGTERM arrival
+        return p, o, m
+
+    with pytest.raises(Preemption):
+        runner.run(step, {"w": 0}, {"n": 0}, stream, batch_fn)
+    assert mgr.latest_step() == 5       # out-of-cadence preemption save
+
+
+def test_straggler_watchdog():
+    mgr = CheckpointManager("/tmp/unused_watchdog", interval=1000)
+    runner = FaultTolerantRunner(mgr, RunnerConfig())
+    for _ in range(10):
+        runner.record_step_time(0.1)
+    warn = runner.record_step_time(1.0)
+    assert warn is not None and "straggler" in warn

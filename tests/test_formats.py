@@ -1,0 +1,106 @@
+"""Bit-exact numeric format tests (paper Appendix A, Table 7)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import formats as F
+
+finite_f = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                     width=32)
+
+
+class TestE2M1:
+    def test_value_set(self):
+        vals = F.quantize_e2m1(jnp.linspace(-8, 8, 1001))
+        allowed = np.concatenate([-F.E2M1_VALUES[::-1], F.E2M1_VALUES])
+        assert np.isin(np.asarray(vals), allowed).all()
+
+    @pytest.mark.parametrize("x,want", [
+        (0.24, 0.0), (0.26, 0.5), (0.74, 0.5), (0.76, 1.0),
+        (1.24, 1.0), (1.26, 1.5), (1.74, 1.5), (1.76, 2.0),
+        (2.49, 2.0), (2.51, 3.0), (3.49, 3.0), (3.51, 4.0),
+        (4.99, 4.0), (5.01, 6.0), (7.0, 6.0), (-2.4, -2.0),
+    ])
+    def test_rounding(self, x, want):
+        assert float(F.quantize_e2m1(jnp.float32(x))) == want
+
+    @pytest.mark.parametrize("tie,want", [
+        # round-half-to-even over the code points
+        (0.25, 0.0), (0.75, 1.0), (1.25, 1.0), (1.75, 2.0),
+        (2.5, 2.0), (3.5, 4.0), (5.0, 4.0),
+    ])
+    def test_ties_to_even(self, tie, want):
+        assert float(F.quantize_e2m1(jnp.float32(tie))) == want
+
+    @given(st.lists(finite_f, min_size=1, max_size=64))
+    def test_codes_roundtrip(self, xs):
+        v = F.quantize_e2m1(jnp.asarray(xs, jnp.float32))
+        codes = F.encode_e2m1(v)
+        back = F.decode_e2m1(codes)
+        # -0.0 encodes as sign-magnitude zero; compare by value
+        np.testing.assert_array_equal(np.asarray(back) + 0.0,
+                                      np.asarray(v) + 0.0)
+
+    @given(st.lists(finite_f, min_size=2, max_size=64))
+    def test_pack_unpack(self, xs):
+        if len(xs) % 2:
+            xs = xs[:-1]
+        v = F.quantize_e2m1(jnp.asarray(xs, jnp.float32))
+        codes = F.encode_e2m1(v)
+        packed = F.pack_e2m1(codes)
+        assert packed.size == codes.size // 2
+        np.testing.assert_array_equal(np.asarray(F.unpack_e2m1(packed)),
+                                      np.asarray(codes))
+
+
+class TestE4M3:
+    def test_max_saturates(self):
+        assert float(F.quantize_e4m3(jnp.float32(1e6))) == 448.0
+        assert float(F.quantize_e4m3(jnp.float32(-1e6))) == -448.0
+
+    def test_subnormals(self):
+        step = 2.0 ** -9
+        assert float(F.quantize_e4m3(jnp.float32(step))) == step
+        assert float(F.quantize_e4m3(jnp.float32(step * 0.49))) == 0.0
+
+    @given(st.floats(min_value=0.015625, max_value=440.0, width=32))
+    def test_relative_error(self, x):
+        q = float(F.quantize_e4m3(jnp.float32(x)))
+        assert abs(q - x) <= x * 2 ** -4 * (1 + 1e-6)   # eps8 = 2^-4
+
+    @given(st.lists(st.floats(min_value=2 ** -9, max_value=448.0, width=32),
+                    min_size=1, max_size=64))
+    def test_byte_codes_roundtrip(self, xs):
+        v = F.quantize_e4m3(jnp.asarray(xs, jnp.float32))
+        codes = F.encode_e4m3(v)
+        back = F.decode_e4m3(codes)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(v), rtol=0,
+                                   atol=0)
+
+
+class TestE8M0:
+    @given(st.integers(min_value=-100, max_value=100),
+           st.floats(min_value=1.0, max_value=1.9990234375, width=32))
+    def test_power_of_two(self, e, frac):
+        x = np.float32(frac) * np.float32(2.0) ** e
+        s = float(F.quantize_e8m0(jnp.float32(x)))
+        assert s == 2.0 ** np.floor(np.log2(float(x)))
+
+    @given(st.integers(min_value=-100, max_value=100))
+    def test_byte_codes(self, e):
+        v = jnp.float32(2.0 ** e)
+        assert float(F.decode_e8m0(F.encode_e8m0(v))) == float(v)
+
+
+class TestFormatTable:
+    """Paper Table 7 invariants."""
+
+    def test_specs(self):
+        from repro.core.formats import INT4, MXFP4, MXFP8, NVFP4
+        assert NVFP4.block_size == 16 and NVFP4.scale_kind == "e4m3+tensor"
+        assert MXFP4.block_size == 32 and MXFP4.scale_kind == "e8m0"
+        assert MXFP8.block_size == 32
+        assert NVFP4.element_max == 6.0 and MXFP8.element_max == 448.0
+        # eps4^2 == eps8 (the dual-stage bridge, §3.4)
+        assert NVFP4.epsilon ** 2 == MXFP8.epsilon

@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arc, quant as Q
+from repro.kernels import (arc_fused_quantize, nvfp4_gemm, nvfp4_quantize,
+                           ops, ref)
+
+
+@pytest.mark.parametrize("m,k", [(16, 64), (32, 256), (8, 48), (64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_kernel_matches_ref(m, k, dtype, rng):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32) * 4, dtype)
+    c1, s1, t1 = nvfp4_quantize(x, interpret=True, block_m=16, block_k=64)
+    c2, s2, t2 = ref.ref_nvfp4_quantize(x.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,n,k", [(16, 16, 64), (32, 64, 256), (8, 24, 48)])
+def test_gemm_kernel_matches_ref(m, n, k, rng):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32) * 3)
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    xc, xs, _ = ref.ref_nvfp4_quantize(x)
+    wc, ws, _ = ref.ref_nvfp4_quantize(w)
+    y1 = nvfp4_gemm(xc, xs, wc, ws, interpret=True,
+                    block_m=8, block_n=8, block_k=64)
+    y2 = ref.ref_nvfp4_gemm(xc, xs, wc, ws)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("s", [0, 16, 48])
+@pytest.mark.parametrize("m,k", [(16, 64), (32, 128)])
+def test_fused_kernel_matches_ref(s, m, k, rng):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32) * 2)
+    gamma = jnp.asarray(1 + 0.1 * rng.normal(size=(k,)).astype(np.float32))
+    order = jnp.asarray(rng.permutation(k).astype(np.int32))
+    ts = jnp.asarray([0.02, 0.002], jnp.float32)
+    c1, s1 = arc_fused_quantize(x, gamma, order, ts, s, interpret=True,
+                                block_m=8)
+    c2, s2 = ref.ref_arc_fused(x, gamma, order, ts, s)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_arc_linear_end_to_end_vs_core(rng):
+    """Kernel pipeline ~ core simulated path (same math, fused layout).
+
+    The kernel uses calibrated (static) per-tensor scales while the core
+    path computes them dynamically, so comparison is against a core run
+    given the same tensor scales.
+    """
+    m, k, n, s = 32, 128, 64, 32
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    x[:, :4] *= 25
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    gamma = np.ones(k, np.float32)
+    order = np.argsort(-np.abs(x).max(0)).astype(np.int32)
+
+    # normalized activations (what both paths quantize)
+    var = (x ** 2).mean(-1, keepdims=True)
+    xn = x / np.sqrt(var + 1e-6)
+    ts = jnp.asarray([float(np.abs(xn).max()) / (6 * 448),
+                      float(np.abs(xn).max()) / (6 * 448) / 16], jnp.float32)
+
+    wc, ws = ops.quantize_weight_interleaved(jnp.asarray(w),
+                                             jnp.asarray(order), s,
+                                             interpret=True)
+    y_kernel = ops.arc_linear(jnp.asarray(x), jnp.asarray(gamma),
+                              jnp.asarray(order), wc, ws, ts, s,
+                              interpret=True)
+    y_fp = xn @ w.T
+    rel = np.abs(np.asarray(y_kernel) - y_fp).max() / np.abs(y_fp).max()
+    assert rel < 0.2     # W4A4 quantization error regime, not garbage
+
+    # and the kernel beats plain-RTN kernels on the same data
+    wc_r, ws_r, _ = nvfp4_quantize(jnp.asarray(w), interpret=True)
+    y_rtn = ops.rtn_linear(jnp.asarray(xn), wc_r, ws_r, interpret=True)
+    err_arc = np.mean((np.asarray(y_kernel) - y_fp) ** 2)
+    err_rtn = np.mean((np.asarray(y_rtn) - y_fp) ** 2)
+    assert err_arc < err_rtn
+
+
+def test_kernel_vs_core_quantizer_agreement(rng):
+    """Kernel E2M1/E4M3 arithmetic == core.formats bit-exact emulation."""
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32) * 6)
+    codes, scales, t = nvfp4_quantize(x, interpret=True)
+    qt = Q.quantize(x, "nvfp4")
+    from repro.kernels import common as C
+    deq_kernel = (C.decode_e2m1(codes).reshape(8, 4, 16)
+                  * scales[..., None]).reshape(8, 64)
+    np.testing.assert_allclose(np.asarray(deq_kernel),
+                               np.asarray(qt.dequantize()), rtol=1e-6,
+                               atol=1e-7)

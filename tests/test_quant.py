@@ -1,0 +1,96 @@
+"""Block quantizer invariants (paper §3.1 Eq. 1) + QTensor storage."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import formats as F
+from repro.core import quant as Q
+
+arrays = hnp.arrays(np.float32, st.tuples(st.integers(1, 8),
+                                          st.integers(16, 96)),
+                    elements=st.floats(-100, 100, width=32))
+
+
+@pytest.mark.parametrize("fmt", ["nvfp4", "mxfp4", "mxfp8", "int4"])
+def test_dequant_error_bounded_per_block(fmt, rng):
+    f = F.get_format(fmt)
+    x = rng.normal(size=(16, 128)).astype(np.float32) * 10
+    qt = Q.quantize(jnp.asarray(x), fmt)
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    # per-block error <= scale * eps-ish; bound loosely by amax/qmax
+    xb = x.reshape(16, -1, f.block_size)
+    amax = np.abs(xb).max(-1, keepdims=True)
+    bound = np.broadcast_to(2.2 * amax * f.epsilon / 1 + 1e-6, xb.shape)
+    assert (err.reshape(xb.shape) <= bound).all()
+
+
+@given(arrays)
+def test_idempotent(x):
+    qt = Q.quantize_dequantize(jnp.asarray(x), "nvfp4")
+    qt2 = Q.quantize_dequantize(qt, "nvfp4")
+    np.testing.assert_allclose(np.asarray(qt2), np.asarray(qt),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(arrays)
+def test_elements_within_range(x):
+    qt = Q.quantize(jnp.asarray(x), "nvfp4")
+    el = np.asarray(qt.elements)
+    allowed = np.concatenate([-F.E2M1_VALUES[::-1], F.E2M1_VALUES])
+    assert np.isin(el, allowed).all()
+    assert np.asarray(qt.scales).min() > 0
+
+
+def test_zero_block_safe():
+    x = jnp.zeros((2, 32))
+    qt = Q.quantize(x, "nvfp4")
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()), 0.0)
+
+
+def test_padding_roundtrip(rng):
+    x = rng.normal(size=(3, 40)).astype(np.float32)   # 40 % 16 != 0
+    qt = Q.quantize(jnp.asarray(x), "nvfp4")
+    assert qt.shape == (3, 40)
+    assert qt.dequantize().shape == (3, 40)
+
+
+def test_concat_k(rng):
+    a = Q.quantize(jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32)), "nvfp4")
+    b = Q.quantize(jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32)), "nvfp4")
+    c = Q.concat_k(a, b)
+    assert c.shape == (4, 48)
+    np.testing.assert_array_equal(
+        np.asarray(c.dequantize()),
+        np.concatenate([np.asarray(a.dequantize()),
+                        np.asarray(b.dequantize())], -1))
+
+
+@pytest.mark.parametrize("fmt", ["nvfp4", "mxfp4"])
+def test_packed_roundtrip_exact(fmt, rng):
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32) * 5)
+    qt = Q.quantize(x, fmt)
+    pk = qt.to_packed()
+    assert pk.elements.dtype == jnp.uint8
+    assert pk.elements.shape[-1] == qt.elements.shape[-1] // 2
+    assert pk.scales.dtype == jnp.uint8          # true 8-bit scale storage
+    np.testing.assert_array_equal(np.asarray(pk.dequantize()),
+                                  np.asarray(qt.dequantize()))
+
+
+def test_bits_per_value():
+    assert Q.quantize(jnp.ones((1, 16)), "nvfp4").bits_per_value() == 4.5
+    assert Q.quantize(jnp.ones((1, 32)), "mxfp4").bits_per_value() == 4.25
+
+
+def test_nvfp4_scale_hierarchy(rng):
+    """Element -> E4M3 block scale -> FP32 tensor scale (Appendix A)."""
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32) * 100)
+    qt = Q.quantize(x, "nvfp4")
+    t = np.asarray(qt.tensor_scale)
+    ratios = np.asarray(qt.scales) / t
+    # every block scale / tensor scale must be an exact E4M3 value
+    rounded = np.asarray(F.quantize_e4m3(jnp.asarray(ratios)))
+    np.testing.assert_allclose(ratios, rounded, rtol=1e-6)
+    assert ratios.max() <= F.E4M3_MAX * (1 + 1e-6)
