@@ -11,6 +11,7 @@ Paper artifact -> module map:
   Figure 8a (latency vs S)          latency_vs_s
   Table 8 / Fig 6 (prefill)         prefill_model (TPU roofline translation)
   Section 3.4 (error bounds)        error_bounds
+  Figure 5 (deployment/serving)     continuous_batching (vs static batching)
   Dry-run roofline (deliverable g)  roofline (reads results/dryrun)
 """
 import argparse
@@ -25,11 +26,13 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, calibration_robustness, error_bounds,
-                            latency_vs_s, layerwise_mse, outlier_stats,
-                            prefill_model, quant_overhead, roofline)
+    from benchmarks import (accuracy, calibration_robustness,
+                            continuous_batching, error_bounds, latency_vs_s,
+                            layerwise_mse, outlier_stats, prefill_model,
+                            quant_overhead, roofline)
 
     jobs = [
+        ("continuous_batching", lambda: continuous_batching.run()),
         ("error_bounds", lambda: error_bounds.run()),
         ("latency_vs_s", lambda: latency_vs_s.run()),
         ("prefill_model", lambda: prefill_model.run()),

@@ -1,13 +1,15 @@
-"""Serve a small model with batched requests through the ARCQuant engine.
+"""Serve a small model through the continuous-batching ARCQuant engine.
 
     PYTHONPATH=src python examples/serve_quantized.py --arch qwen2-1.5b
 
 Pipeline (paper Fig. 5): calibrate -> offline weight quantization (packed
-NVFP4, ARC-augmented along K) -> batched prefill -> decode loop where every
-linear runs online activation quantization + the unified K+S GEMM.
+NVFP4, ARC-augmented along K) -> per-request prefill into a free cache
+slot -> batched decode loop where every linear runs online activation
+quantization + the unified K+S GEMM. Finished requests free their slot
+between decode steps and the scheduler admits the next queued request
+into the row, so mixed-length workloads don't pay padding waste.
 """
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -24,31 +26,38 @@ def main():
     ap.add_argument("--method", default="arc")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
+    if args.new_tokens < 1:
+        ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
 
     cfg = ARCHS[args.arch].reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     qparams, quant, plans = calibrate_and_quantize(params, cfg, args.method)
 
-    import jax.numpy as jnp
     orig = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
     packed = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(qparams))
     print(f"weights: {orig/1e6:.1f}MB fp32 -> {packed/1e6:.1f}MB packed NVFP4 "
           f"({orig/packed:.1f}x)")
 
+    # mixed-length workload: this is where continuous batching pays off
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
+    lo = min(2, args.new_tokens)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 13))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(lo, args.new_tokens + 1)),
+                    temperature=args.temperature)
             for _ in range(args.requests)]
     engine = ServingEngine(qparams, cfg, quant, plans, batch_size=2,
                            max_len=12 + args.new_tokens + 1)
-    t0 = time.time()
     engine.run(reqs)
-    dt = time.time() - t0
-    n = sum(len(r.out_tokens) for r in reqs)
-    print(f"served {len(reqs)} requests / {n} tokens in {dt:.1f}s")
+    s = engine.last_stats
+    print(f"served {len(reqs)} requests / {s.generated_tokens} tokens in "
+          f"{s.wall_seconds:.1f}s across {s.decode_steps} decode steps "
+          f"(padding waste {100 * s.padding_waste:.1f}%)")
     for i, r in enumerate(reqs[:3]):
-        print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} -> {r.out_tokens}")
+        print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} "
+              f"admitted@{r.admit_step} -> {r.out_tokens}")
 
 
 if __name__ == "__main__":

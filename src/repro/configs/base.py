@@ -180,6 +180,12 @@ class QuantConfig:
     fmt: str = "nvfp4"
     act_fmt: str = ""                # "" -> same as fmt (W4A8 sets mxfp8)
     max_outlier_fraction: float = 0.25
+    # NVFP4 activation FP32-scale granularity: "tensor" shares one scale
+    # across the whole activation tensor (batch included — the eval
+    # default), "token" computes it per token row, which makes serving
+    # numerics independent of batch composition (continuous batching
+    # requires a request's tokens not to change with its batch company)
+    act_scale: str = "tensor"        # tensor | token
 
     @property
     def activation_fmt(self) -> str:

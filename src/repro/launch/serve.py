@@ -1,7 +1,11 @@
-"""Serving launcher: calibrate -> quantize (ARC NVFP4) -> batched decode.
+"""Serving launcher: calibrate -> quantize (ARC NVFP4) -> continuous decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --method arc --requests 8 --new-tokens 12
+
+Requests run through the continuous-batching engine (slot-based cache
+pool, FIFO admission between decode steps); ``--static`` selects the
+gang-scheduled fixed-batch baseline for comparison.
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ from repro.configs.base import QuantConfig
 from repro.data import SyntheticLM, make_calibration_set
 from repro.models import capture_stats, init_params
 from repro.quant import make_plan_bundle, quantize_weights_for_serving
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingEngine, StaticBatchEngine
 
 
 def calibrate_and_quantize(params, cfg, method: str = "arc",
@@ -52,9 +56,18 @@ def main():
     ap.add_argument("--fmt", default="nvfp4")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="cache slots (continuous) / batch size (static)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="gang-scheduled fixed-batch baseline engine")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples per request")
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="vary prompt/generation lengths across requests")
     args = ap.parse_args()
+    if args.new_tokens < 1:
+        ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
 
     cfg = ARCHS[args.arch]
     if args.smoke:
@@ -69,17 +82,29 @@ def main():
           f"(paper Table 4 analogue); method={args.method} fmt={args.fmt}")
 
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
-    engine = ServingEngine(qparams, cfg, quant, plans, batch_size=args.batch,
-                           max_len=16 + args.new_tokens + 1)
-    t0 = time.time()
+    reqs = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, 17)) if args.mixed_lengths else 16
+        new = (int(rng.integers(min(2, args.new_tokens), args.new_tokens + 1))
+               if args.mixed_lengths else args.new_tokens)
+        reqs.append(Request(
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=new, temperature=args.temperature))
+    cls = StaticBatchEngine if args.static else ServingEngine
+    engine = cls(qparams, cfg, quant, plans, batch_size=args.batch,
+                 max_len=16 + args.new_tokens + 1, seed=args.seed)
     engine.run(reqs)
-    dt = time.time() - t0
-    total_new = sum(len(r.out_tokens) for r in reqs)
-    print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new/dt:.1f} tok/s on CPU emulation)")
+    s = engine.last_stats
+    print(f"{'static' if args.static else 'continuous'} engine: "
+          f"served {len(reqs)} requests, {s.generated_tokens} tokens in "
+          f"{s.wall_seconds:.1f}s ({s.summary()['wall_tokens_per_s']:.1f} "
+          f"tok/s on CPU emulation)")
+    print(f"decode steps: {s.decode_steps}  padding waste: "
+          f"{100 * s.padding_waste:.1f}%  tokens/step: "
+          f"{s.tokens_per_step:.2f}")
+    lat = [r.latency_steps for r in reqs]
+    print(f"latency (decode-step ticks): p50={int(np.median(lat))} "
+          f"max={max(lat)}")
     print("sample output:", reqs[0].out_tokens[:8])
 
 

@@ -81,7 +81,8 @@ def _simulated_matmul(ctx: LayerCtx, name: str, x, w, method: str):
     if method == "none":
         return _einsum_mm(x, w)
     if method == "rtn":
-        xq = Q.quantize_dequantize(x.astype(jnp.float32), q.activation_fmt)
+        xf = x.astype(jnp.float32)
+        xq = Q.quantize_dequantize(xf, q.activation_fmt, _act_amax(xf, q))
         wq = Q.quantize_dequantize(w.astype(jnp.float32), q.fmt)
         return _einsum_mm(xq, wq)
     if method == "smooth":
@@ -112,18 +113,31 @@ def _simulated_matmul(ctx: LayerCtx, name: str, x, w, method: str):
     raise ValueError(method)
 
 
+def _act_amax(x: jax.Array, q: QuantConfig):
+    """Tensor-scale granularity for online activation quantization.
+
+    Returns the per-token absmax (``act_scale="token"``, batch-invariant
+    serving numerics) or None to let ``Q.quantize`` reduce over the whole
+    tensor (``act_scale="tensor"``, the calibration/eval default). Only
+    NVFP4's e4m3+tensor scaling consumes it; other formats ignore it.
+    """
+    if q.act_scale == "token":
+        return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return None
+
+
 def _arc_sim_matmul(x, w, order, s: int, q: QuantConfig):
     """ARC with a traced channel order (scan-friendly) — simulated GEMM."""
     fmt = q.fmt
     xr = jnp.take(x, order, axis=-1)
     wr = jnp.take(w, order, axis=-1)
-    xq = Q.quantize(xr, fmt)
+    xq = Q.quantize(xr, fmt, _act_amax(xr, q))
     wq = Q.quantize(wr, fmt)
     if s == 0:
         return Q.qmatmul(xq, wq)
     g = xq.fmt.block_size
     r_o = xr[..., :s] - xq.dequantize()[..., :s]
-    rq = Q.quantize(r_o, fmt)
+    rq = Q.quantize(r_o, fmt, _act_amax(r_o, q))
     x_aug = Q.concat_k(xq, rq)
     w_o = Q.QTensor(wq.elements[..., :s], wq.scales[..., : s // g],
                     wq.fmt_name, s, wq.tensor_scale)
@@ -136,16 +150,16 @@ def _deployed_matmul(ctx: LayerCtx, name: str, x, w: Q.QTensor, method: str):
     q = ctx.quant
     xf = x.astype(jnp.float32)
     if method in ("none", "rtn"):
-        xq = Q.quantize(xf, q.activation_fmt)
+        xq = Q.quantize(xf, q.activation_fmt, _act_amax(xf, q))
         return Q.qmatmul(xq, w)
     if method == "arc":
         arrs, s = ctx.plan_for(name)
         order = arrs["order"]
         xr = jnp.take(xf, order, axis=-1)
-        xq = Q.quantize(xr, q.activation_fmt)
+        xq = Q.quantize(xr, q.activation_fmt, _act_amax(xr, q))
         if s:
             r_o = xr[..., :s] - xq.dequantize()[..., :s]
-            rq = Q.quantize(r_o, q.activation_fmt)
+            rq = Q.quantize(r_o, q.activation_fmt, _act_amax(r_o, q))
             xq = Q.concat_k(xq, rq)
         return Q.qmatmul(xq, w)
     raise ValueError(f"deployed path supports rtn/arc, got {method}")
@@ -446,10 +460,13 @@ def attention_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
         new_cache = None
     else:
         L = cache["k"].shape[1]
-        idx = pos1d[0] % L                       # positions shared across batch
-        ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
-        cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
-        cp = cache["pos"].at[:, idx].set(pos1d)
+        # per-row scatter: continuous batching decodes slots at different
+        # absolute positions, so each batch row writes its own ring index
+        idx = pos1d % L                          # (B, S)
+        rows = jnp.arange(B)[:, None]
+        ck = cache["k"].at[rows, idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, idx].set(v.astype(cache["v"].dtype))
+        cp = cache["pos"].at[rows, idx].set(pos1d)
         new_cache = {"k": ck, "v": cv, "pos": cp}
         k_all, v_all, kv_pos = ck, cv, cp
 

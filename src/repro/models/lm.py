@@ -128,6 +128,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def reset_cache_slot(cache: list, slot) -> list:
+    """Clear batch row ``slot`` of a pooled cache.
+
+    Attention ``pos`` entries become -1 (the invalid marker the causal mask
+    respects); every other leaf (k/v, conv/ssm/wkv/shift states) zeroes.
+    ``slot`` may be a traced scalar, so one jitted reset serves all slots.
+    """
+    out = []
+    for c in cache:
+        nc = {}
+        for name, leaf in c.items():
+            fill = jnp.asarray(-1 if name == "pos" else 0, leaf.dtype)
+            nc[name] = leaf.at[:, slot].set(fill)
+        out.append(nc)
+    return out
+
+
+def write_cache_slot(cache: list, src: list, slot) -> list:
+    """Overwrite batch row ``slot`` of a pooled cache with row 0 of ``src``.
+
+    ``src`` is a batch-1 cache produced by prefilling one request (same cfg
+    and max_len, so leaf shapes match row-wise). The batch-major layout
+    makes admission of a new request into a freed slot a pure row
+    overwrite — the continuous-batching primitive.
+    """
+    out = []
+    for c, s in zip(cache, src):
+        nc = {name: leaf.at[:, slot].set(s[name][:, 0].astype(leaf.dtype))
+              for name, leaf in c.items()}
+        out.append(nc)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

@@ -1,3 +1,9 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.cache_manager import SlotCacheManager
+from repro.serving.engine import (EngineStats, Request, ServingEngine,
+                                  StaticBatchEngine)
+from repro.serving.scheduler import (DECODE, DONE, FREE, PREFILL, Scheduler,
+                                     Slot)
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["DECODE", "DONE", "EngineStats", "FREE", "PREFILL", "Request",
+           "Scheduler", "ServingEngine", "SlotCacheManager", "Slot",
+           "StaticBatchEngine"]

@@ -1,0 +1,66 @@
+"""Slot-based KV/recurrent cache pool for continuous batching.
+
+The pool is one batched cache pytree (``lm.init_cache(cfg, num_slots,
+max_len)``) whose batch rows are *slots*. The batch-major, position-
+indexed layout means both lifecycle operations are pure row writes:
+
+  * admission: a request prefilled into a batch-1 cache is scattered into
+    its slot row (``lm.write_cache_slot``)
+  * release:   the row is cleared (``lm.reset_cache_slot``) before the
+    scheduler returns the slot to its free pool
+
+Both are jitted once with the slot index traced, so serving any number of
+requests compiles exactly two cache ops; the pool buffers are donated
+through every call (no per-step reallocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+# module-level jits: the trace cache survives across pool instances, so
+# repeated engine runs reuse the two compiled cache ops instead of
+# re-tracing them per SlotCacheManager
+_WRITE_SLOT = jax.jit(lm.write_cache_slot, donate_argnums=(0,))
+_RESET_SLOT = jax.jit(lm.reset_cache_slot, donate_argnums=(0,))
+
+
+class SlotCacheManager:
+    """Fixed pool of ``num_slots`` cache rows.
+
+    Which slot is free belongs to the ``Scheduler`` (the slot lifecycle is
+    scheduling state); this class owns the device arrays and the row-level
+    operations on them.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.cache = lm.init_cache(cfg, num_slots, max_len, dtype)
+        self._write = _WRITE_SLOT
+        self._reset = _RESET_SLOT
+
+    # -- row writes --------------------------------------------------------
+
+    def release(self, slot: int) -> None:
+        """Clear a freed slot row (pos -> -1, states -> 0).
+
+        Isolation is already guaranteed by ``write`` fully overwriting the
+        row at the next admission; the reset keeps freed rows inert and
+        makes pool state inspectable between requests.
+        """
+        self.cache = self._reset(self.cache, jnp.int32(slot))
+
+    def write(self, slot: int, src_cache: list) -> None:
+        """Install a prefilled batch-1 cache into ``slot``'s row."""
+        self.cache = self._write(self.cache, src_cache, jnp.int32(slot))
+
+    def fresh_prefill_cache(self) -> list:
+        """Batch-1 cache matching the pool's row shapes, for one prefill."""
+        return lm.init_cache(self.cfg, 1, self.max_len, self.dtype)

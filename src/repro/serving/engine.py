@@ -1,101 +1,231 @@
-"""Batched serving engine over the ARCQuant quantized model.
+"""Continuous-batching serving engine over the ARCQuant quantized model.
 
 Flow (paper Figure 5, deployment side):
   1. offline: calibrate -> plans -> quantize weights (packed NVFP4, ARC-
      augmented along K)
-  2. prefill: batched prompt pass through the quantized model, fills the
-     KV / recurrent-state caches
-  3. decode: step loop — each step is ONE ``serve_step`` (fused online
-     activation quantization + unified GEMMs), greedy or temperature
-     sampling
+  2. admission: each queued request is prefilled alone (exact prompt
+     length, or a power-of-two bucket for pure-attention models) into a
+     batch-1 cache whose row is then scattered into a free slot of the
+     pooled cache (``SlotCacheManager``) — a pure row overwrite thanks to
+     the batch-major, position-indexed cache layout
+  3. decode: one batched ``_decode`` step per tick over every DECODE slot
+     (fused online activation quantization + unified GEMMs), greedy or
+     per-request temperature sampling at per-slot positions
 
-The engine pads requests to a fixed batch (static shapes for jit) and
-tracks per-request completion. Continuous batching at cluster scale slots
-new requests into finished cache rows between steps — the cache layout
-(batch-major, position-indexed) is chosen so that's a pure row overwrite.
+The jitted functions are static-shaped — batch is always the full slot
+count and scheduling state never enters a trace. The Python-side
+``Scheduler`` swaps finished rows for queued requests *between* decode
+steps (slot lifecycle FREE -> PREFILL -> DECODE -> DONE -> FREE), so a
+short request's slot is reused immediately instead of idling as padding
+until the batch's slowest member finishes. ``StaticBatchEngine`` keeps
+the old gang-scheduled behavior (admission only when every slot is idle)
+as the baseline that ``benchmarks/continuous_batching.py`` measures
+padding waste against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, QuantConfig
+from repro.configs.base import FULL_ATTN, ModelConfig, QuantConfig
 from repro.models import lm
 from repro.models.lm import PlanBundle
+from repro.serving.cache_manager import SlotCacheManager
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["EngineStats", "Request", "ServingEngine", "StaticBatchEngine"]
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray              # (prompt_len,) int32
-    max_new_tokens: int = 16
-    eos_token: Optional[int] = None
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class EngineStats:
+    """Aggregate serving metrics for one ``run`` call.
+
+    ``slot_steps`` counts slot-rows swept by decode steps (steps x slots);
+    ``useful_slot_steps`` counts the ones that emitted a token for a live
+    request. Their gap is the padding waste continuous batching removes.
+    """
+
+    num_slots: int = 0
+    decode_steps: int = 0
+    slot_steps: int = 0
+    useful_slot_steps: int = 0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    wall_seconds: float = 0.0
+
+    @property
+    def padding_waste(self) -> float:
+        if not self.slot_steps:
+            return 0.0
+        return 1.0 - self.useful_slot_steps / self.slot_steps
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Simulated throughput: generated tokens per batched decode step."""
+        if not self.decode_steps:
+            return 0.0
+        return self.generated_tokens / self.decode_steps
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "decode_steps": self.decode_steps,
+            "generated_tokens": self.generated_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "padding_waste": round(self.padding_waste, 4),
+            "tokens_per_step": round(self.tokens_per_step, 4),
+            "wall_seconds": round(self.wall_seconds, 3),
+            "wall_tokens_per_s": round(
+                self.generated_tokens / self.wall_seconds, 2)
+            if self.wall_seconds else 0.0,
+        }
 
 
 class ServingEngine:
+    """Continuous-batching engine: ``batch_size`` slots over one cache pool."""
+
+    continuous = True
+
     def __init__(self, qparams, cfg: ModelConfig, quant: QuantConfig,
-                 plans: Optional[PlanBundle], batch_size: int = 4,
-                 max_len: int = 512):
+                 plans: PlanBundle | None, batch_size: int = 4,
+                 max_len: int = 512, seed: int = 0,
+                 act_scale: str = "token"):
+        # per-token activation FP32 scales: a request's quantization must
+        # not see its batch company, or swapping a finished slot for a new
+        # request would perturb every other in-flight generation
+        quant = dataclasses.replace(quant, act_scale=act_scale)
         self.qparams = qparams
         self.cfg = cfg
         self.quant = quant
         self.plans = plans
         self.batch_size = batch_size
         self.max_len = max_len
+        self.seed = seed
+        self.last_stats = EngineStats()
+        # prompt-length bucketing pads prefill up to a power of two, which
+        # bounds compile count. Right-padding is exact for full attention
+        # (pad writes land at positions the causal mask hides and decode
+        # later overwrites) but would pollute ring buffers and recurrent
+        # state, so windowed/SSM/hybrid models prefill at exact length.
+        self._bucket_prompts = all(m == FULL_ATTN for m in cfg.mixer_pattern)
 
-        def prefill(qp, cache, tokens, positions):
+        def prefill(qp, cache, tokens, positions, last_idx):
             logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
                                           positions=positions, cache=cache,
                                           quant=quant, plans=plans)
-            return logits[:, -1], cache
+            return logits[0, last_idx], cache
 
-        def decode(qp, cache, tokens, positions):
+        def decode(qp, cache, tokens, positions, temps, key):
             logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
                                           positions=positions, cache=cache,
                                           quant=quant, plans=plans)
-            nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
-            return nxt.astype(jnp.int32), cache
+            lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
+            nxt = _sample_batch(lg, temps, key)
+            return nxt, cache
+
+        def sample(logits, temp, key):
+            lg = logits[: cfg.vocab_size].astype(jnp.float32)
+            return _sample_batch(lg[None], temp[None], key)[0]
 
         self._prefill = jax.jit(prefill, donate_argnums=(1,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._sample = jax.jit(sample)
+
+    # -- public API --------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests in fixed-size batches."""
-        for i in range(0, len(requests), self.batch_size):
-            self._run_batch(requests[i:i + self.batch_size])
+        """Serve ``requests`` to completion; fills per-request metrics."""
+        t0 = time.time()
+        sched = Scheduler(self.batch_size, self.max_len)
+        pool = SlotCacheManager(self.cfg, self.batch_size, self.max_len)
+        stats = EngineStats(num_slots=self.batch_size)
+        key = jax.random.PRNGKey(self.seed)
+        for r in requests:
+            sched.submit(r)
+
+        B = self.batch_size
+        while sched.has_work():
+            # admission: continuous mode refills any free slot every tick;
+            # the static baseline waits for the whole gang to drain
+            if self.continuous or sched.all_idle():
+                for slot, req in sched.admissions():
+                    key, kp = jax.random.split(key)
+                    logits, src = self._prefill_request(req, pool)
+                    pool.write(slot.index, src)
+                    tok = int(self._sample(
+                        logits, jnp.float32(req.temperature), kp))
+                    stats.prefill_tokens += req.prompt_len
+                    if sched.record_token(slot, tok):
+                        pool.release(slot.index)
+                        sched.free(slot)
+
+            active = sched.active()
+            if not active:
+                continue    # everything admitted finished at prefill
+
+            last = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B, 1), np.int32)
+            temps = np.zeros((B,), np.float32)
+            for s in active:
+                last[s.index, 0] = s.last_token
+                pos[s.index, 0] = s.next_pos
+                temps[s.index] = s.request.temperature
+            key, kd = jax.random.split(key)
+            nxt, pool.cache = self._decode(
+                self.qparams, pool.cache, jnp.asarray(last), jnp.asarray(pos),
+                jnp.asarray(temps), kd)
+            nxt = np.asarray(nxt)
+
+            sched.step += 1
+            stats.decode_steps += 1
+            stats.slot_steps += B
+            stats.useful_slot_steps += len(active)
+            for s in active:
+                if sched.record_token(s, int(nxt[s.index])):
+                    pool.release(s.index)
+                    sched.free(s)
+
+        stats.generated_tokens = sum(len(r.out_tokens) for r in requests)
+        stats.wall_seconds = time.time() - t0
+        self.last_stats = stats
         return requests
 
-    def _run_batch(self, batch: List[Request]) -> None:
-        b = self.batch_size
-        plen = max(len(r.prompt) for r in batch)
-        toks = np.zeros((b, plen), np.int32)
-        for j, r in enumerate(batch):
-            toks[j, plen - len(r.prompt):] = r.prompt     # left-pad
-        cache = lm.init_cache(self.cfg, b, self.max_len)
-        pos = np.broadcast_to(np.arange(plen), (b, plen)).astype(np.int32)
-        _, cache = self._prefill(self.qparams, cache, jnp.asarray(toks),
-                                 jnp.asarray(pos))
-        last = jnp.asarray(toks[:, -1:])
-        max_new = max(r.max_new_tokens for r in batch)
-        for t in range(max_new):
-            p = jnp.full((b, 1), plen + t, jnp.int32)
-            nxt, cache = self._decode(self.qparams, cache, last, p)
-            nxt_np = np.asarray(nxt)
-            for j, r in enumerate(batch):
-                if r.done or t >= r.max_new_tokens:
-                    continue
-                tok = int(nxt_np[j])
-                r.out_tokens.append(tok)
-                if r.eos_token is not None and tok == r.eos_token:
-                    r.done = True
-            last = nxt[:, None]
-            if all(r.done or len(r.out_tokens) >= r.max_new_tokens
-                   for r in batch):
-                break
-        for r in batch:
-            r.done = True
+    # -- internals ---------------------------------------------------------
+
+    def _prefill_request(self, req: Request, pool: SlotCacheManager):
+        """Prefill one request alone; returns (last-prompt logits, cache)."""
+        p = req.prompt_len
+        plen = self._bucket_len(p) if self._bucket_prompts else p
+        toks = np.zeros((1, plen), np.int32)
+        toks[0, :p] = np.asarray(req.prompt, np.int32)
+        positions = np.arange(plen, dtype=np.int32)[None]
+        cache = pool.fresh_prefill_cache()
+        return self._prefill(self.qparams, cache, jnp.asarray(toks),
+                             jnp.asarray(positions), jnp.int32(p - 1))
+
+    def _bucket_len(self, p: int) -> int:
+        b = 16
+        while b < p:
+            b *= 2
+        return min(b, self.max_len)
+
+
+class StaticBatchEngine(ServingEngine):
+    """Gang-scheduled baseline: a batch holds its slots until the slowest
+    request finishes (the fixed-batch behavior this engine replaced)."""
+
+    continuous = False
+
+
+def _sample_batch(logits: jax.Array, temps: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Per-row greedy/temperature sampling. logits (B, V), temps (B,)."""
+    greedy = jnp.argmax(logits, axis=-1)
+    keys = jax.random.split(key, logits.shape[0])
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)

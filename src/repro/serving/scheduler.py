@@ -1,0 +1,148 @@
+"""Continuous-batching request scheduler (Python-side, shape-free).
+
+The scheduler owns the dynamic state the jitted model functions must not
+see: the FIFO admission queue and the per-slot lifecycle
+
+    FREE -> PREFILL -> DECODE -> DONE -> FREE
+
+Between decode steps the engine asks for ``admissions()`` — queued
+requests paired with FREE slots — prefills each one into its cache row,
+then runs one batched decode step over every DECODE slot. Finished
+requests (EOS or per-request ``max_new_tokens``) move their slot through
+DONE back to FREE, so the next queued request takes the row over without
+waiting for the rest of the batch: no decode step is spent padding a
+short request to its batch's slowest member.
+
+All bookkeeping here is plain Python over numpy token ids; nothing is
+traced, so scheduling decisions never trigger recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+# slot lifecycle states
+FREE = "FREE"
+PREFILL = "PREFILL"
+DECODE = "DECODE"
+DONE = "DONE"
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    temperature: float = 0.0            # 0 -> greedy
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # per-request metrics, in decode-step ticks of the engine clock
+    submit_step: int = -1
+    admit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def queue_wait_steps(self) -> int:
+        return self.admit_step - self.submit_step
+
+    @property
+    def latency_steps(self) -> int:
+        return self.finish_step - self.submit_step
+
+
+@dataclasses.dataclass
+class Slot:
+    """One cache row's lifecycle state."""
+
+    index: int
+    state: str = FREE
+    request: Optional[Request] = None
+    next_pos: int = 0                   # absolute position of next decode write
+    last_token: int = 0                 # token fed at the next decode step
+
+
+class Scheduler:
+    """FIFO admission of queued requests into free cache slots."""
+
+    def __init__(self, num_slots: int, max_len: int):
+        self.slots = [Slot(i) for i in range(num_slots)]
+        self.queue: Deque[Request] = deque()
+        self.max_len = max_len
+        self.step = 0                   # decode-step clock
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (prefill always "
+                             "samples the first token)")
+        if request.prompt_len + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {request.prompt_len + request.max_new_tokens}"
+                f" cache positions but slots hold {self.max_len}")
+        request.submit_step = self.step
+        self.queue.append(request)
+
+    def admissions(self) -> List[Tuple[Slot, Request]]:
+        """Pair queued requests with FREE slots; marks them PREFILL."""
+        out = []
+        for slot in self.slots:
+            if not self.queue:
+                break
+            if slot.state == FREE:
+                req = self.queue.popleft()
+                req.admit_step = self.step
+                slot.request = req
+                slot.state = PREFILL
+                out.append((slot, req))
+        return out
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def record_token(self, slot: Slot, token: int) -> bool:
+        """Append one generated token; returns True when the request ends.
+
+        Called once after prefill (the token sampled from the last-prompt
+        logits) and once per decode step. On completion the slot moves to
+        DONE; the engine releases the cache row and calls ``free()``.
+        """
+        req = slot.request
+        req.out_tokens.append(token)
+        hit_eos = req.eos_token is not None and token == req.eos_token
+        if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            req.finish_step = self.step
+            slot.state = DONE
+            return True
+        if slot.state == PREFILL:       # first token -> start decoding
+            slot.next_pos = req.prompt_len
+        else:
+            slot.next_pos += 1
+        slot.last_token = token
+        slot.state = DECODE
+        return False
+
+    def free(self, slot: Slot) -> None:
+        assert slot.state == DONE, slot.state
+        slot.request = None
+        slot.state = FREE
+        slot.next_pos = 0
+        slot.last_token = 0
+
+    # -- queries -----------------------------------------------------------
+
+    def active(self) -> List[Slot]:
+        return [s for s in self.slots if s.state == DECODE]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.state != FREE for s in self.slots)
+
+    def all_idle(self) -> bool:
+        return all(s.state == FREE for s in self.slots)

@@ -1,0 +1,178 @@
+"""Property-testing shim: real ``hypothesis`` when installed, else a
+deterministic fallback.
+
+The CI box does not ship hypothesis, and the tier-1 command must collect
+and run on a clean checkout. Test modules import ``given`` / ``st`` /
+``hnp`` from here instead of from ``hypothesis`` directly. When the real
+library is available it is re-exported unchanged; otherwise a tiny
+deterministic sampler stands in: ``@given`` reruns the test body
+``max_examples`` times with values drawn from a per-test seeded
+``numpy`` Generator, so failures reproduce exactly across runs.
+
+Only the strategy surface this suite uses is implemented: ``floats``,
+``integers``, ``lists``, ``tuples``, ``just``, ``sampled_from`` and
+``hypothesis.extra.numpy.arrays``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _PROFILES = {"default": {"max_examples": 25}}
+    _ACTIVE = dict(_PROFILES["default"])
+
+    class settings:  # noqa: N801 - mirrors the hypothesis API
+        """API-compatible stub for the subset conftest.py touches."""
+
+        def __init__(self, **kwargs):
+            self.kwargs = kwargs
+
+        def __call__(self, fn):           # used as @settings(...) decorator
+            fn._compat_settings = self.kwargs
+            return fn
+
+        @staticmethod
+        def register_profile(name, **kwargs):
+            _PROFILES[name] = kwargs
+
+        @staticmethod
+        def load_profile(name):
+            _ACTIVE.clear()
+            _ACTIVE.update({"max_examples": 25})
+            _ACTIVE.update({k: v for k, v in _PROFILES[name].items()
+                            if k == "max_examples"})
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self.draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self.draw(rng)
+                    if pred(v):
+                        return v
+                raise RuntimeError("filter predicate too strict")
+            return _Strategy(draw)
+
+    def _as_strategy(obj):
+        return obj if isinstance(obj, _Strategy) else _Strategy(lambda rng: obj)
+
+    class st:  # noqa: N801 - mirrors hypothesis.strategies
+        @staticmethod
+        def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+                   allow_infinity=False, width=64):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                # mix uniform draws with boundary values, as hypothesis does
+                r = rng.random()
+                if r < 0.05:
+                    v = lo
+                elif r < 0.10:
+                    v = hi
+                elif r < 0.15 and lo <= 0.0 <= hi:
+                    v = 0.0
+                else:
+                    v = rng.uniform(lo, hi)
+                if width == 32:
+                    v = float(np.clip(np.float32(v), np.float32(lo),
+                                      np.float32(hi)))
+                return v
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            elements = _as_strategy(elements)
+
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strats):
+            strats = [_as_strategy(s) for s in strats]
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    class _HnpModule:
+        @staticmethod
+        def arrays(dtype, shape, elements=None):
+            shape_s = _as_strategy(shape)
+            elements = elements or st.floats(-1e3, 1e3, width=32)
+
+            def draw(rng):
+                shp = shape_s.draw(rng)
+                if isinstance(shp, (int, np.integer)):
+                    shp = (int(shp),)
+                flat = [elements.draw(rng) for _ in range(int(np.prod(shp)))]
+                return np.asarray(flat, dtype).reshape(shp)
+            return _Strategy(draw)
+
+    hnp = _HnpModule()
+
+    def given(*strats, **kwstrats):
+        strats = [_as_strategy(s) for s in strats]
+        kwstrats = {k: _as_strategy(v) for k, v in kwstrats.items()}
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # per-test deterministic seed so examples differ across tests
+                seed = zlib.adler32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                # canonical ordering puts @settings *above* @given, so the
+                # attribute lands on this wrapper; check it first, then the
+                # inner fn (@settings below @given), then the active profile
+                overrides = getattr(wrapper, "_compat_settings",
+                                    getattr(fn, "_compat_settings", _ACTIVE))
+                n = overrides.get("max_examples", _ACTIVE["max_examples"])
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strats]
+                    kdrawn = {k: v.draw(rng) for k, v in kwstrats.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+            # hide the drawn parameters from pytest's fixture resolution:
+            # like hypothesis, the wrapper's visible signature keeps only
+            # the parameters given() does not supply (self, real fixtures)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            if strats:
+                params = params[:len(params) - len(strats)]
+            params = [p for p in params if p.name not in kwstrats]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            wrapper.hypothesis_compat = True
+            return wrapper
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "hnp", "settings", "st"]

@@ -1,10 +1,15 @@
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# keep hypothesis fast on the single-core CI box
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+from _hypothesis_compat import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
+    # keep hypothesis fast on the single-core CI box; registered only when
+    # the real library is installed (the fallback shim has its own budget)
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

@@ -1,8 +1,7 @@
 """Paper §3.4: dual-stage NVFP4 worst-case error vs single-stage MXFP8."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_compat import given, hnp, st
 
 from repro.core import error_bounds as EB
 

@@ -95,3 +95,79 @@ def test_kernel_vs_core_quantizer_agreement(rng):
     np.testing.assert_allclose(np.asarray(deq_kernel),
                                np.asarray(qt.dequantize()), rtol=1e-6,
                                atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: broader interpret-mode regression coverage (CPU-only CI)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_m,block_k", [(8, 16), (64, 32), (256, 2048),
+                                             (10, 48)])
+def test_quant_kernel_tile_sweep(block_m, block_k, rng):
+    """Tiling (including the divisor-shrink fallback) never changes codes."""
+    x = jnp.asarray(rng.normal(size=(24, 96)).astype(np.float32) * 5)
+    c1, s1, t1 = nvfp4_quantize(x, interpret=True, block_m=block_m,
+                                block_k=block_k)
+    c2, s2, t2 = ref.ref_nvfp4_quantize(x)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    np.testing.assert_allclose(float(t1), float(t2), rtol=1e-6)
+
+
+def test_quant_kernel_calibrated_tensor_amax(rng):
+    """A fixed (calibrated) tensor amax reproduces the oracle bit-exactly."""
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    amax = jnp.float32(12.5)
+    c1, s1, _ = nvfp4_quantize(x, tensor_amax=amax, interpret=True)
+    c2, s2, _ = ref.ref_nvfp4_quantize(x, tensor_amax=amax)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_gemm_kernel_multi_ktile_accumulation(rng):
+    """K split over several grid steps accumulates like the one-shot ref."""
+    m, n, k = 16, 16, 512
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    xc, xs, _ = ref.ref_nvfp4_quantize(x)
+    wc, ws, _ = ref.ref_nvfp4_quantize(w)
+    y_ref = ref.ref_nvfp4_gemm(xc, xs, wc, ws)
+    for bk in (32, 128, 512):
+        y = nvfp4_gemm(xc, xs, wc, ws, interpret=True, block_m=16,
+                       block_n=16, block_k=bk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_gemm_kernel_augmented_interleaved_operands(rng):
+    """The unified GEMM consumes ARC-augmented interleaved tensors with no
+    special casing — kernel output matches the oracle on the same codes."""
+    m, n, k, s = 8, 16, 64, 32
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32) * 2)
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    gamma = jnp.ones((k,), jnp.float32)
+    order = jnp.asarray(rng.permutation(k).astype(np.int32))
+    ts = jnp.asarray([0.01, 0.001], jnp.float32)
+    xc, xs = arc_fused_quantize(x, gamma, order, ts, s, interpret=True)
+    wc, ws = ops.quantize_weight_interleaved(w, order, s, interpret=True)
+    y = nvfp4_gemm(xc, xs, wc, ws, interpret=True, block_m=8, block_n=8,
+                   block_k=32)
+    y_ref = ref.ref_nvfp4_gemm(xc, xs, wc, ws)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_kernel_input_dtypes(dtype, rng):
+    """The fused kernel upcasts internally; bf16 inputs match the oracle."""
+    m, k, s = 16, 64, 16
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32), dtype)
+    gamma = jnp.asarray(1 + 0.1 * rng.normal(size=(k,)).astype(np.float32),
+                        dtype)
+    order = jnp.asarray(rng.permutation(k).astype(np.int32))
+    ts = jnp.asarray([0.02, 0.002], jnp.float32)
+    c1, s1 = arc_fused_quantize(x, gamma, order, ts, s, interpret=True)
+    c2, s2 = ref.ref_arc_fused(x, gamma, order, ts, s)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)

@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_compat import given, hnp, st
 
 from repro.core import formats as F
 from repro.core import quant as Q
