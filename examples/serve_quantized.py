@@ -1,13 +1,23 @@
 """Serve a small model through the continuous-batching ARCQuant engine.
 
     PYTHONPATH=src python examples/serve_quantized.py --arch qwen2-1.5b
+    PYTHONPATH=src python examples/serve_quantized.py --backend pallas
 
 Pipeline (paper Fig. 5): calibrate -> offline weight quantization (packed
-NVFP4, ARC-augmented along K) -> per-request prefill into a free cache
-slot -> batched decode loop where every linear runs online activation
-quantization + the unified K+S GEMM. Finished requests free their slot
-between decode steps and the scheduler admits the next queued request
-into the row, so mixed-length workloads don't pay padding waste.
+NVFP4, ARC-augmented along K, interleaved channel layout) -> per-request
+prefill into a free cache slot -> batched decode loop where every linear
+runs online activation quantization + the unified K+S GEMM. Finished
+requests free their slot between decode steps and the scheduler admits
+the next queued request into the row, so mixed-length workloads don't pay
+padding waste.
+
+``--backend pallas`` serves through the fused kernel pipeline: each
+deployed linear is one ``arc_fused_quantize`` launch (RMSNorm + reorder +
+primary + residual quantization over every active slot at once) feeding
+one ``nvfp4_gemm`` over the packed 4-bit weights — the paper's deployment
+dataflow. On this CPU example it runs in interpret mode (bit-faithful,
+slow); on a TPU drop ``interpret`` for the compiled kernels. Greedy
+outputs are identical to ``--backend reference``.
 """
 import argparse
 
@@ -27,6 +37,8 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
@@ -49,10 +61,14 @@ def main():
                     temperature=args.temperature)
             for _ in range(args.requests)]
     engine = ServingEngine(qparams, cfg, quant, plans, batch_size=2,
-                           max_len=12 + args.new_tokens + 1)
+                           max_len=12 + args.new_tokens + 1,
+                           backend=args.backend,
+                           interpret=(args.backend == "pallas"
+                                      and jax.default_backend() == "cpu"))
     engine.run(reqs)
     s = engine.last_stats
-    print(f"served {len(reqs)} requests / {s.generated_tokens} tokens in "
+    print(f"backend={args.backend}: "
+          f"served {len(reqs)} requests / {s.generated_tokens} tokens in "
           f"{s.wall_seconds:.1f}s across {s.decode_steps} decode steps "
           f"(padding waste {100 * s.padding_waste:.1f}%)")
     for i, r in enumerate(reqs[:3]):

@@ -1,4 +1,6 @@
 from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
-                                    save_checkpoint)
+                                    load_serving_checkpoint, save_checkpoint,
+                                    save_serving_checkpoint)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "load_checkpoint", "load_serving_checkpoint",
+           "save_checkpoint", "save_serving_checkpoint"]

@@ -97,6 +97,47 @@ def load_checkpoint(directory: str | Path, params_like: Any,
     return params, opt, meta
 
 
+# ---------------------------------------------------------------------------
+# Serving (quantized-weight) checkpoints — layout-stamped
+# ---------------------------------------------------------------------------
+
+# the canonical augmented-weight layout current code produces; older
+# serving checkpoints (no stamp) used the concat-K layout
+WEIGHT_LAYOUT = "interleaved"
+_LEGACY_LAYOUT = "concat_k"
+
+
+def save_serving_checkpoint(directory: str | Path, step: int, qparams: Any,
+                            extra: Optional[Dict] = None) -> Path:
+    """Save offline-quantized serving weights, stamping the ARC layout."""
+    extra = dict(extra or {})
+    extra.setdefault("weight_layout", WEIGHT_LAYOUT)
+    return save_checkpoint(directory, step, qparams, extra=extra)
+
+
+def load_serving_checkpoint(directory: str | Path, params_like: Any,
+                            plans=None,
+                            step: Optional[int] = None) -> Tuple[Any, Dict]:
+    """Restore serving weights, re-interleaving legacy-layout checkpoints.
+
+    Checkpoints written before the interleaved unification stored
+    ARC-augmented QTensors as [primary | duplicated-outlier-tail]; their
+    meta carries no ``weight_layout`` stamp. Those are converted on read
+    (``quant.apply.reinterleave_legacy_qparams``, which needs ``plans``
+    for the per-layer outlier counts); stamped checkpoints load as-is.
+    """
+    params, _, meta = load_checkpoint(directory, params_like, step=step)
+    layout = meta.get("extra", {}).get("weight_layout", _LEGACY_LAYOUT)
+    if layout != WEIGHT_LAYOUT:
+        if plans is None:
+            raise ValueError(
+                f"checkpoint uses legacy '{layout}' augmented-weight layout; "
+                "pass the PlanBundle so it can be re-interleaved on read")
+        from repro.quant.apply import reinterleave_legacy_qparams
+        params = reinterleave_legacy_qparams(params, plans)
+    return params, meta
+
+
 class CheckpointManager:
     """Retention + cadence policy around save/load."""
 

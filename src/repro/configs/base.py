@@ -184,8 +184,18 @@ class QuantConfig:
     # across the whole activation tensor (batch included — the eval
     # default), "token" computes it per token row, which makes serving
     # numerics independent of batch composition (continuous batching
-    # requires a request's tokens not to change with its batch company)
-    act_scale: str = "tensor"        # tensor | token
+    # requires a request's tokens not to change with its batch company),
+    # "calibrated" uses the per-layer FP32 scales captured at calibration
+    # time (paper App. D deployed config; batch-invariant and one-pass,
+    # required by the fused Pallas quantization kernel)
+    act_scale: str = "tensor"        # tensor | token | calibrated
+    # kernel backend for deployed (QTensor-weight) linears: "reference"
+    # emulates the unified GEMM by dequantizing into the bf16 datapath;
+    # "pallas" runs arc_fused_quantize -> nvfp4_gemm over packed NVFP4
+    # operands (``interpret=True`` runs the same kernels bit-faithfully on
+    # CPU — the CI configuration)
+    backend: str = "reference"       # reference | pallas
+    interpret: bool = False
 
     @property
     def activation_fmt(self) -> str:

@@ -103,8 +103,14 @@ def _block_amax(x: jax.Array, g: int) -> jax.Array:
 
 
 def compute_scales(x: jax.Array, fmt: F.BlockFormat,
-                   tensor_amax: Optional[jax.Array] = None):
-    """Per-block effective scales for ``fmt`` (and the NVFP4 tensor scale)."""
+                   tensor_amax: Optional[jax.Array] = None,
+                   tensor_scale: Optional[jax.Array] = None):
+    """Per-block effective scales for ``fmt`` (and the NVFP4 tensor scale).
+
+    ``tensor_scale`` (NVFP4 only) bypasses the amax-derived FP32 scale with
+    a calibration-time constant — the deployed serving configuration, where
+    online activation quantization must not take a second pass over X.
+    """
     g = fmt.block_size
     amax = _block_amax(x, g)
     if fmt.scale_kind == "e8m0":
@@ -119,9 +125,12 @@ def compute_scales(x: jax.Array, fmt: F.BlockFormat,
     if fmt.scale_kind == "e4m3+tensor":
         # NVFP4: block scale is E4M3 *relative to* a per-tensor FP32 scale
         # chosen so the largest block scale maps to the top of E4M3 range.
-        if tensor_amax is None:
-            tensor_amax = jnp.max(jnp.abs(x))
-        t = tensor_amax / (fmt.element_max * F.E4M3_MAX)
+        if tensor_scale is not None:
+            t = jnp.asarray(tensor_scale, jnp.float32)
+        else:
+            if tensor_amax is None:
+                tensor_amax = jnp.max(jnp.abs(x))
+            t = tensor_amax / (fmt.element_max * F.E4M3_MAX)
         t = jnp.where(t > 0, t, 1.0)
         block = F.quantize_e4m3(amax / fmt.element_max / t)
         block = jnp.maximum(block, jnp.float32(2.0 ** -9))  # smallest e4m3 subnormal
@@ -135,7 +144,8 @@ def compute_scales(x: jax.Array, fmt: F.BlockFormat,
 
 
 def quantize(x: jax.Array, fmt: F.BlockFormat | str,
-             tensor_amax: Optional[jax.Array] = None) -> QTensor:
+             tensor_amax: Optional[jax.Array] = None,
+             tensor_scale: Optional[jax.Array] = None) -> QTensor:
     """Blockwise RTN quantization along the last axis (paper Eq. 1)."""
     if isinstance(fmt, str):
         fmt = F.get_format(fmt)
@@ -145,7 +155,7 @@ def quantize(x: jax.Array, fmt: F.BlockFormat | str,
     pad = (-k) % g
     if pad:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    scales, t = compute_scales(x, fmt, tensor_amax)
+    scales, t = compute_scales(x, fmt, tensor_amax, tensor_scale)
     xb = x.reshape(*x.shape[:-1], -1, g)
     q = fmt.quantize_element(xb / scales[..., None])
     q = jnp.clip(q, -fmt.element_max, fmt.element_max)

@@ -2,10 +2,18 @@
 
   nvfp4_quant      blockwise NVFP4 quantization (codes + E4M3 scales)
   arc_fused_quant  paper §3.3: RMSNorm + reorder + primary + residual quant,
-                   interleaved channel layout (Appendix D)
-  nvfp4_gemm       unified-precision GEMM over the augmented K+S dimension
+                   interleaved channel layout (Appendix D); the RMSNorm is
+                   optional (apply_norm) so pre-normalized projections share
+                   the same launch
+  nvfp4_gemm       unified-precision GEMM over the augmented K+S dimension;
+                   consumes packed serving weights (two codes/byte + E4M3
+                   scale codes decoded in-kernel) and switches to a decode
+                   fast path (single M tile, f32 scratch accumulator, each
+                   weight tile decoded once) at serving decode shapes
 
 Each kernel has a pure-jnp oracle in ref.py; tests run interpret=True.
+These are the kernels `QuantConfig.backend="pallas"` routes every deployed
+linear through (models/layers._arc_pallas_matmul).
 """
 from repro.kernels import common, ops, ref
 from repro.kernels.arc_fused_quant import arc_fused_quantize

@@ -38,13 +38,17 @@ def _quant_block(xr, t):
     return codes, scale
 
 
-def _fused_kernel(s, eps, order_ref, ts_ref, x_ref, gamma_ref,
+def _fused_kernel(s, eps, apply_norm, order_ref, ts_ref, x_ref, gamma_ref,
                   codes_ref, scales_ref):
     x = x_ref[...].astype(jnp.float32)
     bm, k = x.shape
-    # RMSNorm
-    var = jnp.mean(x * x, axis=-1, keepdims=True)
-    xn = x * jax.lax.rsqrt(var + eps) * gamma_ref[...].astype(jnp.float32)
+    if apply_norm:
+        # RMSNorm fused into the quantization pass (one HBM read of x)
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        xn = x * jax.lax.rsqrt(var + eps) * gamma_ref[...].astype(jnp.float32)
+    else:
+        # pre-normalized input (e.g. wo / w_down projections)
+        xn = x
     # channel reorder (outliers first)
     xr = jnp.take(xn, order_ref[...], axis=1)
     t1, t2 = ts_ref[0], ts_ref[1]
@@ -75,25 +79,35 @@ def _fused_kernel(s, eps, order_ref, ts_ref, x_ref, gamma_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("s", "eps", "block_m",
-                                             "interpret"))
+                                             "apply_norm", "interpret"))
 def arc_fused_quantize(x: jax.Array, gamma: jax.Array, order: jax.Array,
                        tensor_scales: jax.Array, s: int,
                        eps: float = 1e-6, block_m: int = 128,
+                       apply_norm: bool = True,
                        interpret: bool = False):
     """x: (M, K); order: (K,) i32; tensor_scales: (2,) f32 = (primary, residual).
 
     Returns (codes uint8 (M, K+S), scales f32 (M, (K+S)/16)) in the
-    interleaved channel layout.
+    interleaved channel layout. ``apply_norm=False`` skips the fused
+    RMSNorm (for linears whose input is not the residual-stream norm, e.g.
+    attention-output and down projections); ``gamma`` is then ignored.
+
+    One launch covers every row of ``x`` — the serving engine flattens all
+    active decode slots into M so a decode tick quantizes the whole batch
+    in a single fused pass. Ragged M pads up to the sublane tile (padded
+    rows quantize zeros and are sliced away) instead of shrinking the block
+    below hardware granularity.
     """
     m, k = x.shape
     assert k % GROUP == 0 and s % GROUP == 0 and s <= k
-    bm = min(block_m, m)
-    while m % bm:
-        bm //= 2
+    bm = max(min(block_m, -(-m // 8) * 8), 8)
+    mp = -(-m // bm) * bm
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
     ka = k + s
-    grid = (m // bm,)
+    grid = (mp // bm,)
 
-    kernel = functools.partial(_fused_kernel, s, eps)
+    kernel = functools.partial(_fused_kernel, s, eps, apply_norm)
     codes, scales = pl.pallas_call(
         kernel,
         grid=grid,
@@ -108,9 +122,9 @@ def arc_fused_quantize(x: jax.Array, gamma: jax.Array, order: jax.Array,
             pl.BlockSpec((bm, ka // GROUP), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, ka), jnp.uint8),
-            jax.ShapeDtypeStruct((m, ka // GROUP), jnp.float32),
+            jax.ShapeDtypeStruct((mp, ka), jnp.uint8),
+            jax.ShapeDtypeStruct((mp, ka // GROUP), jnp.float32),
         ],
         interpret=interpret,
     )(order, tensor_scales, x, gamma)
-    return codes, scales
+    return codes[:m], scales[:m]

@@ -9,6 +9,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+# In-kernel 8-bit scale decode / byte-pair unpack for packed weights. Both
+# core.formats implementations are gather-free (shifts, ldexp, where), so
+# they run inside Pallas kernel bodies directly — imported rather than
+# re-implemented, because packed-GEMM correctness depends on the decode
+# being the exact inverse of the encoder in core.formats.
+from repro.core.formats import decode_e4m3  # noqa: F401  (re-export)
+from repro.core.formats import unpack_e2m1  # noqa: F401  (re-export)
+
 E2M1_MAX = 6.0
 E4M3_MAX = 448.0
 

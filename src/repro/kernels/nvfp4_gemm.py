@@ -6,7 +6,28 @@ is dequantized in VMEM/VREGs and fed to the MXU with f32 accumulation. The
 augmented residual channels (paper §3.2) ride the same K loop — no special
 casing, which is exactly the paper's "unified GEMM execution" property.
 
-Grid: (M/bm, N/bn, Ka/bk), k-innermost accumulation into the out tile.
+Weight operands come in two storage modes:
+  * unpacked — uint8 holding one 4-bit code per byte + effective f32 scales
+    (what the quantization kernels emit for activations)
+  * packed (``w_packed=True``) — two codes per byte + 8-bit E4M3 scale codes
+    relative to the per-tensor FP32 scale: the serving checkpoint
+    representation (``QTensor.to_packed``). Unpack + scale decode happen
+    in-kernel, so HBM weight traffic stays at ~4.5 bits/value.
+
+Two schedules:
+  * generic (prefill): grid (M/bm, N/bn, Ka/bk), k-innermost accumulation
+    into the out tile. Weight tiles are re-decoded once per i.
+  * decode fast path — chosen when M (padded) fits one bm tile, the serving
+    decode shape (M = active slots): grid (N/bn, Ka/bk) with an f32 VMEM
+    scratch accumulator. Every weight tile is decoded exactly once per
+    (j, k) — (M/bm)x fewer weight decodes than running the generic schedule
+    over the same problem — and the out tile is written once at the last
+    k step instead of read-modify-written per step.
+
+Ragged M/N are padded up to the tile grid (zero codes decode to +0 and
+contribute nothing) instead of shrinking block sizes below hardware tiles —
+the old divisor-shrink loop degenerated for odd M (e.g. 3 active decode
+slots).
 """
 from __future__ import annotations
 
@@ -15,64 +36,189 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import common as C
 
 GROUP = 16
+SUBLANE = 8     # minimum second-to-last tile granularity we pad M/N to
 
 
-def _gemm_kernel(xc_ref, xs_ref, wc_ref, ws_ref, out_ref):
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _decode_x(xc_ref, xs_ref):
+    bm, bk = xc_ref.shape
+    x = C.decode_e2m1(xc_ref[...]).reshape(bm, bk // GROUP, GROUP)
+    x = x * xs_ref[...].astype(jnp.float32)[..., None]
+    return x.reshape(bm, bk)
+
+
+def _decode_w(wc_ref, ws_ref, wt_ref, w_packed: bool, bk: int):
+    bn = wc_ref.shape[0]
+    if w_packed:
+        codes = C.unpack_e2m1(wc_ref[...])
+        scales = C.decode_e4m3(ws_ref[...]) * wt_ref[0]
+    else:
+        codes = wc_ref[...]
+        scales = ws_ref[...].astype(jnp.float32)
+    w = C.decode_e2m1(codes).reshape(bn, bk // GROUP, GROUP)
+    return (w * scales[..., None]).reshape(bn, bk)
+
+
+def _mxu_dot(x, w):
+    # MXU matmul in bf16 with f32 accumulation (TPU-native datapath)
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _gemm_kernel(w_packed, bk, xc_ref, xs_ref, wc_ref, ws_ref, wt_ref,
+                 out_ref):
+    """Generic schedule: grid (M/bm, N/bn, Ka/bk), k innermost."""
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    bm, bk = xc_ref.shape
-    bn = wc_ref.shape[0]
-    x = C.decode_e2m1(xc_ref[...]).reshape(bm, bk // GROUP, GROUP)
-    x = (x * xs_ref[...].astype(jnp.float32)[..., None]).reshape(bm, bk)
-    w = C.decode_e2m1(wc_ref[...]).reshape(bn, bk // GROUP, GROUP)
-    w = (w * ws_ref[...].astype(jnp.float32)[..., None]).reshape(bn, bk)
-    # MXU matmul in bf16 with f32 accumulation (TPU-native datapath)
-    acc = jax.lax.dot_general(
-        x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
-        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    out_ref[...] += acc
+    x = _decode_x(xc_ref, xs_ref)
+    w = _decode_w(wc_ref, ws_ref, wt_ref, w_packed, bk)
+    out_ref[...] += _mxu_dot(x, w)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_m", "block_n", "block_k",
-                                    "interpret"))
-def nvfp4_gemm(x_codes: jax.Array, x_scales: jax.Array,
-               w_codes: jax.Array, w_scales: jax.Array,
-               block_m: int = 256, block_n: int = 256, block_k: int = 2048,
-               interpret: bool = False) -> jax.Array:
-    """(M, Ka) x (N, Ka) -> (M, N) f32. Ka includes the S augmented channels."""
-    m, ka = x_codes.shape
-    n, ka2 = w_codes.shape
-    assert ka == ka2 and ka % GROUP == 0
+def _gemm_kernel_decode(w_packed, bk, nk, xc_ref, xs_ref, wc_ref, ws_ref,
+                        wt_ref, out_ref, acc_ref):
+    """Decode fast path: grid (N/bn, Ka/bk); single M tile.
 
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, ka)
-    while m % bm:
-        bm //= 2
-    while n % bn:
+    The weight tile for (j, k) is decoded exactly once (there is no i loop
+    to re-decode it under); partial sums live in the f32 VMEM scratch and
+    the out tile is stored once at the final k step.
+    """
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = _decode_x(xc_ref, xs_ref)
+    w = _decode_w(wc_ref, ws_ref, wt_ref, w_packed, bk)
+    acc_ref[...] += _mxu_dot(x, w)
+
+    @pl.when(k_idx == nk - 1)
+    def _store():
+        out_ref[...] = acc_ref[...]
+
+
+def gemm_plan(m: int, n: int, ka: int, block_m: int = 256,
+              block_n: int = 256, block_k: int = 2048) -> dict:
+    """Static schedule description for a GEMM shape (no tracing).
+
+    ``weight_tile_decodes`` counts how many (bn, bk) weight tiles the
+    schedule dequantizes — the quantity the decode fast path minimizes
+    (benchmarks/deployed_serving.py reports it for both schedules).
+    """
+    assert ka % GROUP == 0, ka
+    # tile sizes: shrink toward a divisor but never below the hardware
+    # sublane; pad the ragged remainder instead of degenerating the tile
+    bm = max(min(block_m, _round_up(m, SUBLANE)), SUBLANE)
+    n8 = _round_up(n, SUBLANE)
+    bn = min(block_n, n8)
+    while n8 % bn and bn > SUBLANE:
         bn //= 2
+    bn = max(bn, SUBLANE)
+    bk = min(block_k, ka)
     while ka % bk:
         bk //= 2
     bk = max(bk, GROUP)
-    grid = (m // bm, n // bn, ka // bk)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    ni, nj, nk = mp // bm, np_ // bn, ka // bk
+    fast = ni == 1
+    return {
+        "path": "decode_fast" if fast else "generic",
+        "bm": bm, "bn": bn, "bk": bk, "mp": mp, "np": np_,
+        "grid": (nj, nk) if fast else (ni, nj, nk),
+        "weight_tile_decodes": nj * nk if fast else ni * nj * nk,
+    }
 
-    return pl.pallas_call(
-        _gemm_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bm, bk // GROUP), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
-            pl.BlockSpec((bn, bk // GROUP), lambda i, j, k: (j, k)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(x_codes, x_scales, w_codes, w_scales)
+
+def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
+    pad = rows - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_packed", "block_m", "block_n",
+                                    "block_k", "interpret"))
+def nvfp4_gemm(x_codes: jax.Array, x_scales: jax.Array,
+               w_codes: jax.Array, w_scales: jax.Array,
+               w_tensor_scale: jax.Array | None = None,
+               w_packed: bool = False,
+               block_m: int = 256, block_n: int = 256, block_k: int = 2048,
+               interpret: bool = False) -> jax.Array:
+    """(M, Ka) x (N, Ka) -> (M, N) f32. Ka includes the S augmented channels.
+
+    Unpacked weights: ``w_codes`` (N, Ka) uint8, ``w_scales`` (N, Ka/16) f32
+    effective scales. Packed weights (``w_packed=True``): ``w_codes``
+    (N, Ka/2) uint8 byte pairs, ``w_scales`` (N, Ka/16) uint8 E4M3 codes,
+    ``w_tensor_scale`` the FP32 per-tensor scale they are relative to.
+    """
+    m, ka = x_codes.shape
+    n = w_codes.shape[0]
+    ka2 = w_codes.shape[1] * 2 if w_packed else w_codes.shape[1]
+    assert ka == ka2 and ka % GROUP == 0, (ka, ka2)
+    if w_packed:
+        assert w_tensor_scale is not None, "packed weights need tensor scale"
+    wt = (jnp.asarray(w_tensor_scale, jnp.float32).reshape(1)
+          if w_tensor_scale is not None else jnp.ones((1,), jnp.float32))
+
+    plan = gemm_plan(m, n, ka, block_m, block_n, block_k)
+    bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
+    mp, np_ = plan["mp"], plan["np"]
+    nk = ka // bk
+
+    x_codes = _pad_rows(x_codes, mp)
+    x_scales = _pad_rows(x_scales, mp)
+    w_codes = _pad_rows(w_codes, np_)
+    w_scales = _pad_rows(w_scales, np_)
+
+    wc_cols = bk // 2 if w_packed else bk
+    wt_spec = pl.BlockSpec((1,), lambda *_: (0,))
+
+    if plan["path"] == "decode_fast":
+        kernel = functools.partial(_gemm_kernel_decode, w_packed, bk, nk)
+        out = pl.pallas_call(
+            kernel,
+            grid=(np_ // bn, nk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, k: (0, k)),
+                pl.BlockSpec((bm, bk // GROUP), lambda j, k: (0, k)),
+                pl.BlockSpec((bn, wc_cols), lambda j, k: (j, k)),
+                pl.BlockSpec((bn, bk // GROUP), lambda j, k: (j, k)),
+                wt_spec,
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j, k: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x_codes, x_scales, w_codes, w_scales, wt)
+    else:
+        kernel = functools.partial(_gemm_kernel, w_packed, bk)
+        out = pl.pallas_call(
+            kernel,
+            grid=(mp // bm, np_ // bn, nk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bm, bk // GROUP), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bn, wc_cols), lambda i, j, k: (j, k)),
+                pl.BlockSpec((bn, bk // GROUP), lambda i, j, k: (j, k)),
+                wt_spec,
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(x_codes, x_scales, w_codes, w_scales, wt)
+    return out[:m, :n]

@@ -4,6 +4,12 @@
 activations (RMSNorm + reorder + primary + residual, interleaved layout)
 followed by the unified NVFP4 GEMM over K+S — one fused quant pass and one
 stock GEMM call, exactly the deployment dataflow of Figure 4.
+
+``quantize_weight_interleaved`` is the single source of truth for the
+offline augmented-weight layout: every producer (the Pallas path here, the
+QTensor carrier path in ``quant/apply.py``) interleaves through the same
+``core.arc.interleaved_permutation``, so kernel and emulated consumers
+agree bit-for-bit on where each primary/residual block lives.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import formats as F
+from repro.core import quant as Q
 from repro.core.arc import interleaved_permutation
 from repro.kernels import ref
 from repro.kernels.arc_fused_quant import arc_fused_quantize
@@ -39,17 +47,40 @@ def quantize_weight_interleaved(w: jax.Array, order: jax.Array, s: int,
     return inter_c, inter_s
 
 
+def qtensor_gemm_operands(w: Q.QTensor):
+    """Map an offline-quantized weight QTensor (canonical interleaved
+    layout for ARC) to ``nvfp4_gemm`` operands.
+
+    Packed NVFP4 tensors feed the kernel directly (byte-pair codes + E4M3
+    scale codes + FP32 tensor scale: decode happens in-kernel, HBM traffic
+    stays at ~4.5 bits/value). Other storage re-derives unpacked codes and
+    effective f32 scales on the fly.
+
+    Returns (w_codes, w_scales, w_tensor_scale, w_packed).
+    """
+    if w.packed and w.fmt_name == "nvfp4":
+        return w.elements, w.scales, w.tensor_scale, True
+    if w.packed:
+        return F.unpack_e2m1(w.elements), w.scale_values(), None, False
+    return F.encode_e2m1(w.elements), w.scales, None, False
+
+
 def arc_linear(x: jax.Array, gamma: jax.Array, order: jax.Array,
                w_codes: jax.Array, w_scales: jax.Array,
                tensor_scales: jax.Array, s: int,
+               w_tensor_scale: jax.Array | None = None,
+               w_packed: bool = False, apply_norm: bool = True,
                interpret: bool = False) -> jax.Array:
     """Full ARCQuant linear: fused-quant(x) -> unified GEMM. Returns f32.
 
-    x: (M, K); w_codes/w_scales: interleaved offline weights (N, K+S...).
+    x: (M, K); w_codes/w_scales: interleaved offline weights (N, K+S...),
+    unpacked or packed (see ``nvfp4_gemm``).
     """
     x_codes, x_scales = arc_fused_quantize(x, gamma, order, tensor_scales,
-                                           s, interpret=interpret)
+                                           s, apply_norm=apply_norm,
+                                           interpret=interpret)
     return nvfp4_gemm(x_codes, x_scales, w_codes, w_scales,
+                      w_tensor_scale=w_tensor_scale, w_packed=w_packed,
                       interpret=interpret)
 
 

@@ -41,12 +41,16 @@ def ref_nvfp4_gemm(x_codes, x_scales, w_codes, w_scales) -> jax.Array:
     return jnp.matmul(x, w.T, preferred_element_type=jnp.float32)
 
 
-def ref_arc_fused(x, gamma, order, tensor_scales, s: int, eps: float = 1e-6):
+def ref_arc_fused(x, gamma, order, tensor_scales, s: int, eps: float = 1e-6,
+                  apply_norm: bool = True):
     """Oracle for arc_fused_quantize (interleaved layout)."""
     x = x.astype(jnp.float32)
     m, k = x.shape
-    var = jnp.mean(x * x, axis=-1, keepdims=True)
-    xn = x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    if apply_norm:
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        xn = x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    else:
+        xn = x
     xr = jnp.take(xn, order, axis=1)
     t1, t2 = tensor_scales[0], tensor_scales[1]
 

@@ -5,7 +5,10 @@
 
 Requests run through the continuous-batching engine (slot-based cache
 pool, FIFO admission between decode steps); ``--static`` selects the
-gang-scheduled fixed-batch baseline for comparison.
+gang-scheduled fixed-batch baseline for comparison. ``--backend pallas``
+routes every deployed linear through the fused Pallas pipeline
+(arc_fused_quantize -> packed nvfp4_gemm); add ``--interpret`` to run
+those kernels bit-faithfully on CPU.
 """
 from __future__ import annotations
 
@@ -61,6 +64,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="gang-scheduled fixed-batch baseline engine")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="deployed-linear kernel backend (pallas = fused "
+                         "quant + packed NVFP4 GEMM)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run Pallas kernels in interpret mode (CPU)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples per request")
     ap.add_argument("--mixed-lengths", action="store_true",
@@ -76,7 +85,8 @@ def main():
     params = init_params(cfg, key)
 
     t0 = time.time()
-    qparams, quant, plans = calibrate_and_quantize(params, cfg, args.method)
+    qparams, quant, plans = calibrate_and_quantize(params, cfg, args.method,
+                                                   fmt=args.fmt)
     t_quant = time.time() - t0
     print(f"calibration+quantization: {t_quant:.1f}s "
           f"(paper Table 4 analogue); method={args.method} fmt={args.fmt}")
@@ -92,9 +102,12 @@ def main():
             max_new_tokens=new, temperature=args.temperature))
     cls = StaticBatchEngine if args.static else ServingEngine
     engine = cls(qparams, cfg, quant, plans, batch_size=args.batch,
-                 max_len=16 + args.new_tokens + 1, seed=args.seed)
+                 max_len=16 + args.new_tokens + 1, seed=args.seed,
+                 backend=args.backend, interpret=args.interpret)
     engine.run(reqs)
     s = engine.last_stats
+    print(f"backend={args.backend}"
+          f"{' (interpret)' if args.interpret else ''}")
     print(f"{'static' if args.static else 'continuous'} engine: "
           f"served {len(reqs)} requests, {s.generated_tokens} tokens in "
           f"{s.wall_seconds:.1f}s ({s.summary()['wall_tokens_per_s']:.1f} "

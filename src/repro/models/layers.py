@@ -22,6 +22,9 @@ from repro.core import arc as ARC
 from repro.core import baselines as BL
 from repro.core import quant as Q
 from repro.configs.base import ModelConfig, QuantConfig
+from repro.kernels import ops as KOPS
+from repro.kernels.arc_fused_quant import arc_fused_quantize
+from repro.kernels.nvfp4_gemm import nvfp4_gemm
 from repro.parallel.sharding import maybe_shard
 
 
@@ -40,6 +43,10 @@ class LayerCtx:
     plan_meta: Optional[Dict[str, int]] = None
     # calibration capture: mutated dict name -> (K,) absmax
     capture: Optional[Dict[str, jax.Array]] = None
+    # deployed fused-norm serving: name -> RMSNorm gamma for linears whose
+    # input arrives *pre-norm* (the norm is folded into the quantization
+    # pass — in-kernel for backend="pallas", in f32 jnp for "reference")
+    fused_gamma: Optional[Dict[str, jax.Array]] = None
 
     def plan_for(self, name: str):
         if self.plan_arrays is None or name not in self.plan_arrays:
@@ -120,15 +127,26 @@ def _act_amax(x: jax.Array, q: QuantConfig):
     serving numerics) or None to let ``Q.quantize`` reduce over the whole
     tensor (``act_scale="tensor"``, the calibration/eval default). Only
     NVFP4's e4m3+tensor scaling consumes it; other formats ignore it.
+    ``act_scale="calibrated"`` normally never reaches this helper (the ARC
+    deployed path consumes the plan's static scales directly); linears
+    without calibrated scales fall back to the batch-invariant per-token
+    granularity.
     """
-    if q.act_scale == "token":
+    if q.act_scale in ("token", "calibrated"):
         return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     return None
 
 
 def _arc_sim_matmul(x, w, order, s: int, q: QuantConfig):
-    """ARC with a traced channel order (scan-friendly) — simulated GEMM."""
+    """ARC with a traced channel order (scan-friendly) — simulated GEMM.
+
+    Augmented operands are laid out in the canonical interleaved channel
+    order (Appendix D) — the same layout the offline weights and the Pallas
+    pipeline use — so the simulated and deployed paths reduce over K+S in
+    an identical column order (bit-equal accumulation).
+    """
     fmt = q.fmt
+    k = x.shape[-1]
     xr = jnp.take(x, order, axis=-1)
     wr = jnp.take(w, order, axis=-1)
     xq = Q.quantize(xr, fmt, _act_amax(xr, q))
@@ -138,15 +156,23 @@ def _arc_sim_matmul(x, w, order, s: int, q: QuantConfig):
     g = xq.fmt.block_size
     r_o = xr[..., :s] - xq.dequantize()[..., :s]
     rq = Q.quantize(r_o, fmt, _act_amax(r_o, q))
-    x_aug = Q.concat_k(xq, rq)
+    x_aug = ARC.to_interleaved(Q.concat_k(xq, rq), k, s)
     w_o = Q.QTensor(wq.elements[..., :s], wq.scales[..., : s // g],
                     wq.fmt_name, s, wq.tensor_scale)
-    w_aug = Q.concat_k(wq, w_o)
+    w_aug = ARC.to_interleaved(Q.concat_k(wq, w_o), k, s)
     return Q.qmatmul(x_aug, w_aug)
 
 
 def _deployed_matmul(ctx: LayerCtx, name: str, x, w: Q.QTensor, method: str):
-    """Weights are pre-quantized offline (QTensor); activations online."""
+    """Weights are pre-quantized offline (QTensor); activations online.
+
+    The ARC path routes through the selected kernel backend: "reference"
+    emulates the unified GEMM with QTensor ops in the bf16 datapath;
+    "pallas" launches ``arc_fused_quantize`` + ``nvfp4_gemm`` over the
+    packed interleaved weights. Both consume the same canonical
+    interleaved weight layout and (with ``act_scale="calibrated"``) the
+    same calibration-time tensor scales, so they compute the same math.
+    """
     q = ctx.quant
     xf = x.astype(jnp.float32)
     if method in ("none", "rtn"):
@@ -154,15 +180,76 @@ def _deployed_matmul(ctx: LayerCtx, name: str, x, w: Q.QTensor, method: str):
         return Q.qmatmul(xq, w)
     if method == "arc":
         arrs, s = ctx.plan_for(name)
-        order = arrs["order"]
-        xr = jnp.take(xf, order, axis=-1)
-        xq = Q.quantize(xr, q.activation_fmt, _act_amax(xr, q))
-        if s:
-            r_o = xr[..., :s] - xq.dequantize()[..., :s]
-            rq = Q.quantize(r_o, q.activation_fmt, _act_amax(r_o, q))
-            xq = Q.concat_k(xq, rq)
-        return Q.qmatmul(xq, w)
+        gamma = (ctx.fused_gamma or {}).get(name)
+        ts = None
+        if q.act_scale == "calibrated" and arrs and "act_scales" in arrs:
+            ts = arrs["act_scales"]                       # (2,) f32 traced
+        if q.backend == "pallas":
+            if q.activation_fmt != "nvfp4" or w.fmt_name != "nvfp4":
+                raise ValueError(
+                    "backend='pallas' supports nvfp4 operands only, got "
+                    f"activation_fmt={q.activation_fmt!r} / "
+                    f"weight fmt={w.fmt_name!r}")
+            if ts is None:
+                raise ValueError(
+                    "backend='pallas' needs calibrated activation scales: "
+                    "set QuantConfig.act_scale='calibrated' and build plans "
+                    "with make_plan_bundle (act_scales entry)")
+            return _arc_pallas_matmul(ctx, xf, w, arrs["order"], s, ts, gamma)
+        return _arc_reference_matmul(ctx, xf, w, arrs["order"], s, ts, gamma)
     raise ValueError(f"deployed path supports rtn/arc, got {method}")
+
+
+def _rmsnorm_f32(xf: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm kept in f32 — the fused-kernel numerics (no bf16 round-trip)."""
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+
+
+def _arc_reference_matmul(ctx: LayerCtx, xf, w: Q.QTensor, order, s: int,
+                          ts, gamma):
+    """Emulated unified GEMM over the interleaved augmented operands."""
+    q = ctx.quant
+    fmt = q.activation_fmt
+    if gamma is not None:
+        xf = _rmsnorm_f32(xf, gamma, ctx.cfg.norm_eps)
+    k = xf.shape[-1]
+    xr = jnp.take(xf, order, axis=-1)
+    if ts is not None:
+        xq = Q.quantize(xr, fmt, tensor_scale=ts[0])
+    else:
+        xq = Q.quantize(xr, fmt, _act_amax(xr, q))
+    if s:
+        r_o = xr[..., :s] - xq.dequantize()[..., :s]
+        if ts is not None:
+            rq = Q.quantize(r_o, fmt, tensor_scale=ts[1])
+        else:
+            rq = Q.quantize(r_o, fmt, _act_amax(r_o, q))
+        xq = ARC.to_interleaved(Q.concat_k(xq, rq), k, s)
+    return Q.qmatmul(xq, w)
+
+
+def _arc_pallas_matmul(ctx: LayerCtx, xf, w: Q.QTensor, order, s: int,
+                       ts, gamma):
+    """Fused Pallas pipeline: one quant launch over every row (all serving
+    slots batched together), one unified NVFP4 GEMM over packed weights."""
+    q = ctx.quant
+    lead, k = xf.shape[:-1], xf.shape[-1]
+    x2 = xf.reshape(-1, k)
+    if gamma is None:
+        gamma_arr = jnp.ones((k,), jnp.float32)
+        apply_norm = False
+    else:
+        gamma_arr = gamma
+        apply_norm = True
+    x_codes, x_scales = arc_fused_quantize(
+        x2, gamma_arr, order, ts, s, eps=ctx.cfg.norm_eps,
+        apply_norm=apply_norm, interpret=q.interpret)
+    w_codes, w_scales, w_t, w_packed = KOPS.qtensor_gemm_operands(w)
+    y = nvfp4_gemm(x_codes, x_scales, w_codes, w_scales,
+                   w_tensor_scale=w_t, w_packed=w_packed,
+                   interpret=q.interpret)
+    return y.reshape(*lead, y.shape[-1])
 
 
 # ---------------------------------------------------------------------------

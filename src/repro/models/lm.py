@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.configs.base import (DENSE_FFN, FULL_ATTN, LOCAL_ATTN, MAMBA,
                                 MOE_FFN, RWKV, ModelConfig, QuantConfig)
+from repro.core import quant as Q
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.parallel.sharding import maybe_shard
@@ -212,11 +213,35 @@ def forward(params: Dict, cfg: ModelConfig,
             meta = {k[len(pref):]: v for k, v in plan_meta.items()
                     if k.startswith(pref)}
             caps_i: Dict[str, jax.Array] = {}
+            # deployed fused-norm serving: when this position's linears are
+            # offline-quantized QTensors on the ARC serving path
+            # (backend="pallas", or the reference backend running the same
+            # calibrated one-pass configuration), the residual-stream
+            # RMSNorms fold into the per-linear quantization pass — the
+            # attention qkv and MLP gate/up projections receive pre-norm x
+            # and dense() applies the norm inside the (fused) quantizer.
+            serving_fused = (quant.method == "arc" and arrs
+                             and (quant.backend == "pallas"
+                                  or quant.act_scale == "calibrated"))
+            fuse_attn = (serving_fused and mixer in (FULL_ATTN, LOCAL_ATTN)
+                         and "attn.wq" in arrs
+                         and isinstance(p["attn"]["wq"], Q.QTensor))
+            fuse_mlp = (serving_fused and ffn_kind == DENSE_FFN
+                        and "mlp.w_gate" in arrs
+                        and isinstance(p["mlp"]["w_gate"], Q.QTensor))
+            fused_gamma: Dict[str, jax.Array] = {}
+            if fuse_attn:
+                fused_gamma.update({f"attn.{l}": p["norm1"]
+                                    for l in ("wq", "wk", "wv")})
+            if fuse_mlp:
+                fused_gamma.update({f"mlp.{l}": p["norm2"]
+                                    for l in ("w_gate", "w_up")})
             ctx = L.LayerCtx(cfg, quant, plan_arrays=arrs or None,
                              plan_meta=meta or None,
-                             capture=caps_i if capture else None)
+                             capture=caps_i if capture else None,
+                             fused_gamma=fused_gamma or None)
 
-            h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+            h = x if fuse_attn else L.rmsnorm(x, p["norm1"], cfg.norm_eps)
             nc = {}
             if mixer in (FULL_ATTN, LOCAL_ATTN):
                 window = cfg.sliding_window if mixer == LOCAL_ATTN else None
@@ -239,7 +264,7 @@ def forward(params: Dict, cfg: ModelConfig,
                 raise ValueError(mixer)
             x = x + out.astype(x.dtype)
 
-            h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+            h2 = x if fuse_mlp else L.rmsnorm(x, p["norm2"], cfg.norm_eps)
             if ffn_kind == MOE_FFN:
                 out2, aux = L.moe_layer(ctx, "moe", p["moe"], h2)
                 moe_loss = moe_loss + aux

@@ -1,4 +1,7 @@
 from repro.quant.apply import (make_plan_bundle, plan_summary,
-                               quantize_weights_for_serving)
+                               quantize_weights_for_serving,
+                               reinterleave_legacy_qparams,
+                               reinterleave_qtensor)
 
-__all__ = ["make_plan_bundle", "plan_summary", "quantize_weights_for_serving"]
+__all__ = ["make_plan_bundle", "plan_summary", "quantize_weights_for_serving",
+           "reinterleave_legacy_qparams", "reinterleave_qtensor"]

@@ -8,6 +8,7 @@ Quantization" (§3.2).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional
 
 import jax
@@ -16,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.core import arc as ARC
+from repro.core import formats as F
 from repro.core import quant as Q
 from repro.models.lm import PlanBundle
 
@@ -38,13 +40,23 @@ def make_plan_bundle(stats: Dict[str, jax.Array], cfg: ModelConfig,
         if st.ndim == 1:
             st = st[None]
         orders = []
+        act_scales = []
         s_max = 0
         for row in st:
             plan = ARC.select_outliers(row, quant.fmt,
                                        max_fraction=quant.max_outlier_fraction)
             orders.append(plan.order)
             s_max = max(s_max, plan.s)
-        entry = {"order": jnp.asarray(np.stack(orders))}
+            # calibrated per-tensor FP32 activation scales (primary,
+            # residual) for the deployed one-pass quantization path: the
+            # residual of an E2M1 block is bounded by its block scale
+            # ~ amax / element_max, so its tensor scale sits one
+            # element_max factor below the primary's.
+            amax = float(row.max())
+            t1 = amax / (F.E2M1_MAX * F.E4M3_MAX) if amax > 0 else 1.0
+            act_scales.append((t1, t1 / F.E2M1_MAX))
+        entry = {"order": jnp.asarray(np.stack(orders)),
+                 "act_scales": jnp.asarray(act_scales, jnp.float32)}
         if params is not None:
             w = _lookup_weight(params, name)
             if w is not None:
@@ -98,8 +110,12 @@ def quantize_weights_for_serving(params: Dict, cfg: ModelConfig,
 
     * method == "rtn": plain blockwise quantization.
     * method == "arc": reorder along K per the plan, quantize, duplicate the
-      quantized outlier columns (paper §3.2 "Offline Weight Quantization").
+      quantized outlier columns (paper §3.2 "Offline Weight Quantization"),
+      stored in the canonical interleaved channel layout (Appendix D) that
+      both the emulated path and the Pallas kernels consume.
     Non-weight leaves (biases, norms, recurrence params) pass through.
+    With ``pack=True`` the QTensors use the deployment storage (two E2M1
+    codes/byte + 8-bit scale codes) that ``nvfp4_gemm`` decodes in-kernel.
     """
     new_blocks = []
     for i, block in enumerate(params["blocks"]):
@@ -142,6 +158,10 @@ def quantize_weights_for_serving(params: Dict, cfg: ModelConfig,
 
 
 def _augment_weight(w: jax.Array, order: jax.Array, s: int, fmt: str) -> Q.QTensor:
+    """Reorder, quantize, duplicate the S outlier columns, and emit the
+    canonical interleaved layout [P0|R0|P1|R1|...] — the same permutation
+    (``core.arc.interleaved_permutation``) the Pallas pipeline uses, so
+    QTensor consumers and ``nvfp4_gemm`` agree on channel placement."""
     wr = jnp.take(w, order, axis=-1)
     wq = Q.quantize(wr, fmt)
     if s == 0:
@@ -149,7 +169,58 @@ def _augment_weight(w: jax.Array, order: jax.Array, s: int, fmt: str) -> Q.QTens
     g = wq.fmt.block_size
     dup = Q.QTensor(wq.elements[..., :s], wq.scales[..., : s // g],
                     wq.fmt_name, s, wq.tensor_scale)
-    return Q.concat_k(wq, dup)
+    return ARC.to_interleaved(Q.concat_k(wq, dup), w.shape[-1], s)
+
+
+def reinterleave_qtensor(qt: Q.QTensor, s: int) -> Q.QTensor:
+    """Convert a legacy concat-K augmented QTensor ([primary | dup-tail])
+    into the canonical interleaved layout. Works on both storage modes
+    (f32 carrier and packed byte pairs); a no-op when s == 0."""
+    if s == 0:
+        return qt
+    g = qt.fmt.block_size
+    k = qt.valid_k - s
+    perm = np.asarray(ARC.interleaved_permutation(k, s, g))
+    scale_perm = jnp.asarray(perm[::g] // g)
+    scales = jnp.take(qt.scales, scale_perm, axis=-1)
+    if qt.packed:
+        codes = F.unpack_e2m1(qt.elements)
+        elements = F.pack_e2m1(jnp.take(codes, jnp.asarray(perm), axis=-1))
+    else:
+        elements = jnp.take(qt.elements, jnp.asarray(perm), axis=-1)
+    return Q.QTensor(elements, scales, qt.fmt_name, qt.valid_k,
+                     qt.tensor_scale, qt.packed)
+
+
+def reinterleave_legacy_qparams(params: Dict, plans: PlanBundle) -> Dict:
+    """Loader shim: re-layout a pre-interleave serving checkpoint.
+
+    Older checkpoints stored ARC-augmented weights as
+    [primary_0..K-1 | dup_0..S-1] (concat-K); the kernels and the unified
+    emulated path now expect the interleaved layout. Applies
+    ``reinterleave_qtensor`` to every quantized linear named in ``plans``.
+    """
+    new_blocks = []
+    for i, block in enumerate(params["blocks"]):
+        nb = dict(block)
+        for module, leaves in QUANTIZABLE.items():
+            if module not in block:
+                continue
+            sub = dict(block[module])
+            for leaf in leaves:
+                w = sub[leaf]
+                name = f"b{i}.{module}.{leaf}"
+                s = plans.meta.get(name, 0)
+                if isinstance(w, Q.QTensor) and s:
+                    fn = functools.partial(reinterleave_qtensor, s=s)
+                    for _ in range(w.elements.ndim - 2):
+                        fn = jax.vmap(fn)
+                    sub[leaf] = fn(w)
+            nb[module] = sub
+        new_blocks.append(nb)
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
 
 
 def plan_summary(plans: PlanBundle) -> Dict[str, dict]:

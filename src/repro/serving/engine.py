@@ -93,11 +93,22 @@ class ServingEngine:
     def __init__(self, qparams, cfg: ModelConfig, quant: QuantConfig,
                  plans: PlanBundle | None, batch_size: int = 4,
                  max_len: int = 512, seed: int = 0,
-                 act_scale: str = "token"):
-        # per-token activation FP32 scales: a request's quantization must
-        # not see its batch company, or swapping a finished slot for a new
-        # request would perturb every other in-flight generation
+                 act_scale: str = "calibrated", backend: str | None = None,
+                 interpret: bool | None = None):
+        # activation FP32 scales must not see a request's batch company, or
+        # swapping a finished slot for a new request would perturb every
+        # other in-flight generation. "calibrated" (static per-layer scales
+        # from the plan — the paper's App. D deployed config, and what the
+        # fused Pallas kernel consumes) is batch-invariant by construction;
+        # linears without calibrated scales fall back to per-token scales.
         quant = dataclasses.replace(quant, act_scale=act_scale)
+        # kernel backend for deployed linears: "reference" (emulated GEMM)
+        # or "pallas" (fused quant + packed NVFP4 GEMM); interpret=True
+        # runs the Pallas kernels bit-faithfully on CPU.
+        if backend is not None:
+            quant = dataclasses.replace(quant, backend=backend)
+        if interpret is not None:
+            quant = dataclasses.replace(quant, interpret=interpret)
         self.qparams = qparams
         self.cfg = cfg
         self.quant = quant
