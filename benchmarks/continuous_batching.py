@@ -12,9 +12,11 @@ Reported per engine:
   * decode steps to drain the workload
   * padding waste: fraction of slot-rows swept by decode that emitted no
     token for a live request
-  * simulated tokens/s: generated tokens per decode step (each step costs
-    one full-batch forward regardless of occupancy) scaled by measured
-    per-step wall time
+  * simulated tokens/s: decode-generated tokens per decode step (each
+    step costs one full-batch forward regardless of occupancy) scaled by
+    measured per-step wall time. Tokens sampled at prefill cost no decode
+    step and are reported separately — folding them in (as the stats did
+    before EngineStats split the counters) overstated decode throughput.
 
 Run: PYTHONPATH=src python -m benchmarks.continuous_batching
 """
@@ -61,7 +63,8 @@ def run(n_requests: int = 12, slots: int = 4, seed: int = 0):
         step_s = s.wall_seconds / max(s.decode_steps, 1)
         emit(f"serve_{name}", s.wall_seconds * 1e6,
              f"steps={s.decode_steps} waste={s.padding_waste:.3f} "
-             f"tok_per_step={s.tokens_per_step:.3f} "
+             f"decode_tok_per_step={s.tokens_per_step:.3f} "
+             f"prefill_sampled={s.prefill_sampled_tokens} "
              f"sim_tok_per_s={s.tokens_per_step / step_s:.1f}")
         results[name] = (s, served)
 

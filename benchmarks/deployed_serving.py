@@ -114,6 +114,13 @@ def bench_decode_fast_path(wc, ws, wt, packed, order, ts, s, k,
     emit("decode_gemm_weight_tile_decodes_fast",
          float(plan_fast["weight_tile_decodes"]),
          f"M={slots} grid={plan_fast['grid']}")
+    # ragged-M padding waste: the tile rule pads at sublane granularity,
+    # not up to a full block (M=257 used to compute 512 rows)
+    ragged = gemm_plan(257, n, ka)
+    emit("prefill_gemm_ragged_padding_waste",
+         float(ragged["padding_waste"]),
+         f"M=257 bm={ragged['bm']} mp={ragged['mp']} "
+         f"flops={ragged['flops']} useful={ragged['useful_flops']}")
 
     def fast(a, b):
         return nvfp4_gemm(a, b, wc, ws, w_tensor_scale=wt, w_packed=packed,
@@ -167,11 +174,14 @@ def bench_engine(cfg, quant, plans, qparams, backend: str, interpret: bool,
     summ = st.summary()
     emit(f"engine_{backend}_tokens_per_s",
          float(summ["wall_tokens_per_s"]),
-         f"{st.generated_tokens} tokens, {st.decode_steps} steps")
+         f"{st.generated_tokens} tokens ({st.decode_tokens} decode + "
+         f"{st.prefill_sampled_tokens} prefill-sampled), "
+         f"{st.decode_steps} steps")
     if st.decode_steps:
         emit(f"engine_{backend}_us_per_decode_step",
              1e6 * st.wall_seconds / st.decode_steps,
-             f"batch={slots} (wall time incl. prefills)")
+             f"batch={slots} decode_tok_per_step={st.tokens_per_step:.3f} "
+             "(wall time incl. prefills)")
     return [r.out_tokens for r in reqs]
 
 

@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.launch.serve import calibrate_and_quantize
 from repro.models import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import PagedServingEngine, Request, ServingEngine
 
 
 def main():
@@ -39,6 +39,10 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"])
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache pool (block "
+                         "tables + on-demand page allocation) instead of "
+                         "per-slot max_len rows")
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
@@ -60,17 +64,22 @@ def main():
                     max_new_tokens=int(rng.integers(lo, args.new_tokens + 1)),
                     temperature=args.temperature)
             for _ in range(args.requests)]
-    engine = ServingEngine(qparams, cfg, quant, plans, batch_size=2,
-                           max_len=12 + args.new_tokens + 1,
-                           backend=args.backend,
-                           interpret=(args.backend == "pallas"
-                                      and jax.default_backend() == "cpu"))
+    cls = PagedServingEngine if args.paged else ServingEngine
+    engine = cls(qparams, cfg, quant, plans, batch_size=2,
+                 max_len=12 + args.new_tokens + 1,
+                 backend=args.backend,
+                 interpret=(args.backend == "pallas"
+                            and jax.default_backend() == "cpu"))
     engine.run(reqs)
     s = engine.last_stats
     print(f"backend={args.backend}: "
           f"served {len(reqs)} requests / {s.generated_tokens} tokens in "
           f"{s.wall_seconds:.1f}s across {s.decode_steps} decode steps "
           f"(padding waste {100 * s.padding_waste:.1f}%)")
+    if args.paged:
+        print(f"  page pool: {s.num_pages} pages, peak {s.peak_pages}, "
+              f"mean utilization {100 * s.page_utilization:.1f}%, "
+              f"{s.preemptions} preemptions")
     for i, r in enumerate(reqs[:3]):
         print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} "
               f"admitted@{r.admit_step} -> {r.out_tokens}")

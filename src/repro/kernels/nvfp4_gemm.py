@@ -111,23 +111,32 @@ def _gemm_kernel_decode(w_packed, bk, nk, xc_ref, xs_ref, wc_ref, ws_ref,
         out_ref[...] = acc_ref[...]
 
 
+def _tile(dim: int, block: int) -> int:
+    """Tile size for one padded dimension: the fewest tiles that cover
+    ``dim`` under the ``block`` cap, each rounded up to the hardware
+    sublane. Padding is bounded below ``tiles * SUBLANE`` rows — the old
+    rule padded ``dim`` up to a multiple of ``block`` (m=257 with bm=256
+    computed 512 rows, ~2x wasted work; this computes 272)."""
+    tiles = max(-(-dim // block), 1)
+    return min(_round_up(-(-dim // tiles), SUBLANE), _round_up(block, SUBLANE))
+
+
 def gemm_plan(m: int, n: int, ka: int, block_m: int = 256,
               block_n: int = 256, block_k: int = 2048) -> dict:
     """Static schedule description for a GEMM shape (no tracing).
 
     ``weight_tile_decodes`` counts how many (bn, bk) weight tiles the
-    schedule dequantizes — the quantity the decode fast path minimizes
-    (benchmarks/deployed_serving.py reports it for both schedules).
+    schedule dequantizes — the quantity the decode fast path minimizes.
+    ``flops`` / ``useful_flops`` account the padded vs requested work so
+    callers can see the ragged-tail waste the tile choice bounds
+    (benchmarks/deployed_serving.py reports both).
     """
     assert ka % GROUP == 0, ka
-    # tile sizes: shrink toward a divisor but never below the hardware
-    # sublane; pad the ragged remainder instead of degenerating the tile
-    bm = max(min(block_m, _round_up(m, SUBLANE)), SUBLANE)
-    n8 = _round_up(n, SUBLANE)
-    bn = min(block_n, n8)
-    while n8 % bn and bn > SUBLANE:
-        bn //= 2
-    bn = max(bn, SUBLANE)
+    # M/N tiles: minimal tile count first, then the smallest sublane-
+    # aligned tile covering the dim — the ragged remainder is padded at
+    # SUBLANE granularity instead of up to a full block
+    bm = _tile(m, block_m)
+    bn = _tile(n, block_n)
     bk = min(block_k, ka)
     while ka % bk:
         bk //= 2
@@ -135,11 +144,16 @@ def gemm_plan(m: int, n: int, ka: int, block_m: int = 256,
     mp, np_ = _round_up(m, bm), _round_up(n, bn)
     ni, nj, nk = mp // bm, np_ // bn, ka // bk
     fast = ni == 1
+    flops = 2 * mp * np_ * ka
+    useful = 2 * m * n * ka
     return {
         "path": "decode_fast" if fast else "generic",
         "bm": bm, "bn": bn, "bk": bk, "mp": mp, "np": np_,
         "grid": (nj, nk) if fast else (ni, nj, nk),
         "weight_tile_decodes": nj * nk if fast else ni * nj * nk,
+        "flops": flops,
+        "useful_flops": useful,
+        "padding_waste": 1.0 - useful / flops,
     }
 
 

@@ -5,10 +5,13 @@
 
 Requests run through the continuous-batching engine (slot-based cache
 pool, FIFO admission between decode steps); ``--static`` selects the
-gang-scheduled fixed-batch baseline for comparison. ``--backend pallas``
-routes every deployed linear through the fused Pallas pipeline
-(arc_fused_quantize -> packed nvfp4_gemm); add ``--interpret`` to run
-those kernels bit-faithfully on CPU.
+gang-scheduled fixed-batch baseline for comparison and ``--paged`` the
+paged KV cache pool (block tables + on-demand page allocation;
+``--num-pages`` shrinks the pool below slot parity to exercise page-gated
+admission and preemption). ``--backend pallas`` routes every deployed
+linear through the fused Pallas pipeline (arc_fused_quantize -> packed
+nvfp4_gemm); add ``--interpret`` to run those kernels bit-faithfully on
+CPU.
 """
 from __future__ import annotations
 
@@ -23,7 +26,8 @@ from repro.configs.base import QuantConfig
 from repro.data import SyntheticLM, make_calibration_set
 from repro.models import capture_stats, init_params
 from repro.quant import make_plan_bundle, quantize_weights_for_serving
-from repro.serving import Request, ServingEngine, StaticBatchEngine
+from repro.serving import (PagedServingEngine, Request, ServingEngine,
+                           StaticBatchEngine)
 
 
 def calibrate_and_quantize(params, cfg, method: str = "arc",
@@ -64,6 +68,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="gang-scheduled fixed-batch baseline engine")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache pool (block tables, on-demand "
+                         "page allocation, preemption when pages run dry)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size for --paged (default: slot "
+                         "parity; smaller shares memory and may preempt)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="positions per KV page for --paged")
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"],
                     help="deployed-linear kernel backend (pallas = fused "
@@ -100,21 +112,34 @@ def main():
         reqs.append(Request(
             prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=new, temperature=args.temperature))
-    cls = StaticBatchEngine if args.static else ServingEngine
+    if args.static and args.paged:
+        ap.error("--static and --paged are mutually exclusive")
+    kw = {}
+    if args.paged:
+        cls = PagedServingEngine
+        kw = {"num_pages": args.num_pages, "block_size": args.block_size}
+    else:
+        cls = StaticBatchEngine if args.static else ServingEngine
     engine = cls(qparams, cfg, quant, plans, batch_size=args.batch,
                  max_len=16 + args.new_tokens + 1, seed=args.seed,
-                 backend=args.backend, interpret=args.interpret)
+                 backend=args.backend, interpret=args.interpret, **kw)
     engine.run(reqs)
     s = engine.last_stats
     print(f"backend={args.backend}"
           f"{' (interpret)' if args.interpret else ''}")
-    print(f"{'static' if args.static else 'continuous'} engine: "
+    mode = ("paged" if args.paged
+            else "static" if args.static else "continuous")
+    print(f"{mode} engine: "
           f"served {len(reqs)} requests, {s.generated_tokens} tokens in "
           f"{s.wall_seconds:.1f}s ({s.summary()['wall_tokens_per_s']:.1f} "
           f"tok/s on CPU emulation)")
     print(f"decode steps: {s.decode_steps}  padding waste: "
           f"{100 * s.padding_waste:.1f}%  tokens/step: "
           f"{s.tokens_per_step:.2f}")
+    if args.paged:
+        print(f"page pool: {s.num_pages} pages, peak {s.peak_pages}, "
+              f"mean utilization {100 * s.page_utilization:.1f}%, "
+              f"{s.preemptions} preemptions")
     lat = [r.latency_steps for r in reqs]
     print(f"latency (decode-step ticks): p50={int(np.median(lat))} "
           f"max={max(lat)}")

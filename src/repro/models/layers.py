@@ -515,11 +515,16 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
 
 def attention_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
                     positions: jax.Array, cache: Optional[Dict] = None,
-                    window: Optional[int] = None):
+                    window: Optional[int] = None,
+                    block_table: Optional[jax.Array] = None):
     """x: (B, S, d); positions (B, S) or (B, S, 3) for M-RoPE.
 
-    Returns (out, new_cache). With a cache, k/v are written at
-    ``positions % cache_len`` (ring buffer for windowed layers).
+    Returns (out, new_cache). With a slot cache ({"k","v","pos"}), k/v are
+    written at ``positions % cache_len`` (ring buffer for windowed
+    layers). With a paged cache ({"kp","vp","posp"} page pool +
+    ``block_table`` (B, max_blocks)), the decode token scatters into the
+    tail page named by the table and K/V are gathered page-wise on read;
+    rows with position < 0 are inert (write dropped, mask empty).
     """
     cfg = ctx.cfg
     B, S, _ = x.shape
@@ -545,6 +550,32 @@ def attention_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
     if cache is None:
         k_all, v_all, kv_pos = k, v, pos1d
         new_cache = None
+    elif "kp" in cache:
+        # paged decode: the cache is a page pool shared across requests.
+        # Prefill populates pages through write_cache_pages (a contiguous
+        # batch-1 cache scattered at admission), so this path only ever
+        # sees single-token decode steps.
+        assert S == 1, "paged attention cache is decode-only"
+        num_pages, bs = cache["posp"].shape
+        nblocks = block_table.shape[1]
+        p = pos1d[:, 0]                                  # (B,) absolute pos
+        blk = jnp.clip(p // bs, 0, nblocks - 1)
+        page = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+        # rows with p < 0 (inactive slots / ragged padding) route the
+        # write out of bounds so the scatter drops it
+        page = jnp.where(p >= 0, page, num_pages)
+        off = jnp.clip(p, 0, None) % bs
+        ck = cache["kp"].at[page, off].set(
+            k[:, 0].astype(cache["kp"].dtype), mode="drop")
+        cv = cache["vp"].at[page, off].set(
+            v[:, 0].astype(cache["vp"].dtype), mode="drop")
+        cp = cache["posp"].at[page, off].set(p, mode="drop")
+        new_cache = {"kp": ck, "vp": cv, "posp": cp}
+        # gather this row's logical view: unallocated table entries point
+        # at the null page whose positions are -1 (masked out)
+        k_all = ck[block_table].reshape(B, nblocks * bs, hkv, hd)
+        v_all = cv[block_table].reshape(B, nblocks * bs, hkv, hd)
+        kv_pos = cp[block_table].reshape(B, nblocks * bs)
     else:
         L = cache["k"].shape[1]
         # per-row scatter: continuous batching decodes slots at different
@@ -572,6 +603,22 @@ def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
         "k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
         "pos": jnp.full((batch, L), -1, jnp.int32),
+    }
+
+
+def init_attention_page_pool(cfg: ModelConfig, num_pages: int,
+                             block_size: int, dtype=jnp.bfloat16) -> Dict:
+    """Paged K/V pool: fixed-size pages shared by all requests.
+
+    Page 0 is the null page — never allocated, so its positions stay -1
+    and unallocated block-table entries gather nothing but masked slots.
+    """
+    return {
+        "kp": jnp.zeros((num_pages, block_size, cfg.num_kv_heads,
+                         cfg.head_dim), dtype),
+        "vp": jnp.zeros((num_pages, block_size, cfg.num_kv_heads,
+                         cfg.head_dim), dtype),
+        "posp": jnp.full((num_pages, block_size), -1, jnp.int32),
     }
 
 

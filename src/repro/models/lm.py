@@ -129,21 +129,130 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
-def reset_cache_slot(cache: list, slot) -> list:
-    """Clear batch row ``slot`` of a pooled cache.
+# leaves of a paged attention cache dict that live in the shared page
+# pool; any other leaf in the same dict (e.g. an ssm-family hybrid's
+# cmix_shift riding a full-attention position) stays slot-resident
+PAGE_KEYS = ("kp", "vp", "posp")
 
-    Attention ``pos`` entries become -1 (the invalid marker the causal mask
-    respects); every other leaf (k/v, conv/ssm/wkv/shift states) zeroes.
-    ``slot`` may be a traced scalar, so one jitted reset serves all slots.
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     block_size: int, max_len: int,
+                     dtype=jnp.bfloat16) -> list:
+    """Pool cache with *paged* full-attention K/V (scan xs).
+
+    Full-attention layers store K/V in a shared pool of fixed-size pages
+    ``(num_pages, block_size, heads, head_dim)`` plus per-page absolute
+    positions ``posp`` (-1 = unwritten); requests map logical blocks to
+    physical pages through a block table handed to ``forward`` at decode
+    time. Physical page 0 is the permanent *null page* — never allocated,
+    never written — so unallocated table entries gather positions of -1
+    and fall out of the causal mask.
+
+    State whose footprint does not grow with ``max_len`` stays
+    slot-resident exactly as in :func:`init_cache`: sliding-window rings
+    are already O(window) and SSM/RWKV recurrent state is O(1) per
+    request, so paging them would add table indirection for zero memory
+    reclaim. Only the O(max_len) full-attention tail is pooled.
+    """
+    assert max_len % block_size == 0, (max_len, block_size)
+    caches = []
+    for mixer, _ in zip(cfg.mixer_pattern, cfg.ffn_pattern):
+        if mixer == FULL_ATTN:
+            c = L.init_attention_page_pool(cfg, num_pages, block_size, dtype)
+        elif mixer == LOCAL_ATTN:
+            c = L.init_attention_cache(cfg, num_slots, max_len,
+                                       cfg.sliding_window, dtype)
+        elif mixer == MAMBA:
+            c = S.init_mamba_cache(cfg, num_slots, jnp.float32)
+        elif mixer == RWKV:
+            c = S.init_rwkv_cache(cfg, num_slots, jnp.float32)
+        else:
+            raise ValueError(mixer)
+        if cfg.family == "ssm":
+            c["cmix_shift"] = jnp.zeros((num_slots, cfg.d_model), jnp.float32)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_periods, *x.shape)), c)
+        caches.append(stacked)
+    return caches
+
+
+def write_cache_pages(cache: list, src: list, table, slot) -> list:
+    """Install a prefilled batch-1 contiguous cache into a paged pool.
+
+    ``src`` comes from prefilling one request into ``init_cache(cfg, 1,
+    max_blocks * block_size)``; its attention rows are split into logical
+    blocks and scattered to the physical pages named by ``table``
+    (``(max_blocks,)`` int32; entries >= num_pages mark unallocated blocks
+    and are dropped). Slot-resident leaves (rings, recurrent state) are
+    row-overwritten at ``slot`` as in :func:`write_cache_slot`. Both
+    ``table`` and ``slot`` may be traced, so one jitted write serves every
+    admission.
+    """
+    out = []
+    for c, s in zip(cache, src):
+        if "kp" in c:
+            num_periods, _, bs = c["posp"].shape
+            nblocks = table.shape[0]
+            nc = {}
+            for name, sname in (("kp", "k"), ("vp", "v"), ("posp", "pos")):
+                leaf = c[name]
+                sv = s[sname][:, 0]                  # (P, nblocks*bs, ...)
+                sv = sv.reshape(num_periods, nblocks, bs,
+                                *sv.shape[2:]).astype(leaf.dtype)
+                nc[name] = leaf.at[:, table].set(sv, mode="drop")
+            for name, leaf in c.items():             # slot-resident riders
+                if name not in PAGE_KEYS:
+                    nc[name] = _write_slot_row(leaf, s[name], slot)
+            out.append(nc)
+        else:
+            out.append({name: _write_slot_row(leaf, s[name], slot)
+                        for name, leaf in c.items()})
+    return out
+
+
+def release_cache_pages(cache: list, pages, slot) -> list:
+    """Return a request's pages to the pool and clear its slot row.
+
+    ``pages`` is ``(max_blocks,)`` int32 physical page ids (entries >=
+    num_pages are dropped). Released pages only need their positions
+    invalidated (pos -> -1): k/v bytes are masked out by the causal mask
+    and fully overwritten when the page is reallocated. Slot-resident
+    leaves reset exactly as :func:`reset_cache_slot`.
     """
     out = []
     for c in cache:
-        nc = {}
-        for name, leaf in c.items():
-            fill = jnp.asarray(-1 if name == "pos" else 0, leaf.dtype)
-            nc[name] = leaf.at[:, slot].set(fill)
-        out.append(nc)
+        if "kp" in c:
+            nc = dict(c)
+            nc["posp"] = c["posp"].at[:, pages].set(-1, mode="drop")
+            for name, leaf in c.items():             # slot-resident riders
+                if name not in PAGE_KEYS:
+                    nc[name] = _reset_slot_row(name, leaf, slot)
+            out.append(nc)
+        else:
+            out.append({name: _reset_slot_row(name, leaf, slot)
+                        for name, leaf in c.items()})
     return out
+
+
+def _write_slot_row(leaf, src_leaf, slot):
+    """Overwrite batch row ``slot`` of a pooled leaf with row 0 of ``src``."""
+    return leaf.at[:, slot].set(src_leaf[:, 0].astype(leaf.dtype))
+
+
+def _reset_slot_row(name: str, leaf, slot):
+    """Clear batch row ``slot``: ``pos`` entries become -1 (the invalid
+    marker the causal mask respects); every other leaf zeroes."""
+    fill = jnp.asarray(-1 if name == "pos" else 0, leaf.dtype)
+    return leaf.at[:, slot].set(fill)
+
+
+def reset_cache_slot(cache: list, slot) -> list:
+    """Clear batch row ``slot`` of a pooled cache.
+
+    ``slot`` may be a traced scalar, so one jitted reset serves all slots.
+    """
+    return [{name: _reset_slot_row(name, leaf, slot)
+             for name, leaf in c.items()} for c in cache]
 
 
 def write_cache_slot(cache: list, src: list, slot) -> list:
@@ -154,12 +263,8 @@ def write_cache_slot(cache: list, src: list, slot) -> list:
     makes admission of a new request into a freed slot a pure row
     overwrite — the continuous-batching primitive.
     """
-    out = []
-    for c, s in zip(cache, src):
-        nc = {name: leaf.at[:, slot].set(s[name][:, 0].astype(leaf.dtype))
-              for name, leaf in c.items()}
-        out.append(nc)
-    return out
+    return [{name: _write_slot_row(leaf, s[name], slot)
+             for name, leaf in c.items()} for c, s in zip(cache, src)]
 
 
 # ---------------------------------------------------------------------------
@@ -176,8 +281,20 @@ def forward(params: Dict, cfg: ModelConfig,
             plans: Optional[PlanBundle] = None,
             capture: bool = False,
             compute_logits: bool = True,
-            remat: bool = False):
-    """Returns (logits, new_cache, aux) where aux = {"moe_loss", "capture"}."""
+            remat: bool = False,
+            block_tables: Optional[jax.Array] = None,
+            slot_ids: Optional[jax.Array] = None):
+    """Returns (logits, new_cache, aux) where aux = {"moe_loss", "capture"}.
+
+    ``block_tables`` (B, max_blocks) int32 maps each batch row's logical
+    blocks to physical pages of a paged cache (required when ``cache``
+    came from :func:`init_paged_cache`; unallocated entries must point at
+    the null page 0). ``slot_ids`` (B,) int32 optionally names the pool
+    row each batch row occupies, letting a ragged decode batch (B = the
+    active-request bucket, smaller than the pool) gather/scatter the
+    slot-resident cache rows it touches; entries >= pool size are padding
+    rows whose writes are dropped.
+    """
     if embeds is None:
         x = jnp.take(params["embed"], tokens, axis=0)
     else:
@@ -205,7 +322,19 @@ def forward(params: Dict, cfg: ModelConfig,
             mixer, ffn = cfg.mixer_pattern[i], cfg.ffn_pattern[i]
             ffn_kind = "rwkv_cmix" if cfg.family == "ssm" else ffn
             p = block_list[i]
-            c = cache_list[i] if has_cache else None
+            c_pool = cache_list[i] if has_cache else None
+            paged = c_pool is not None and "kp" in c_pool
+            if c_pool is not None and slot_ids is not None:
+                # ragged decode: the batch is a bucket of active requests;
+                # pull their slot-resident rows out of the pool (OOB padding
+                # ids clamp — those rows compute garbage that is dropped on
+                # the scatter back below). Page-pool leaves are row-agnostic
+                # and pass through untouched.
+                c = {name: (leaf if paged and name in PAGE_KEYS
+                            else leaf[slot_ids])
+                     for name, leaf in c_pool.items()}
+            else:
+                c = c_pool
             # per-period plan slices for this position's layers
             pref = f"b{i}."
             arrs = {k[len(pref):]: v for k, v in plan_arrs.items()
@@ -245,9 +374,18 @@ def forward(params: Dict, cfg: ModelConfig,
             nc = {}
             if mixer in (FULL_ATTN, LOCAL_ATTN):
                 window = cfg.sliding_window if mixer == LOCAL_ATTN else None
-                ac = {k: c[k] for k in ("k", "v", "pos")} if c is not None else None
+                if paged:
+                    ac = {k: c[k] for k in ("kp", "vp", "posp")}
+                    if block_tables is None:
+                        raise ValueError("paged cache requires block_tables")
+                elif c is not None:
+                    ac = {k: c[k] for k in ("k", "v", "pos")}
+                else:
+                    ac = None
                 out, nac = L.attention_layer(ctx, "attn", p["attn"], h,
-                                             positions, ac, window)
+                                             positions, ac, window,
+                                             block_table=block_tables
+                                             if paged else None)
                 if nac is not None:
                     nc.update(nac)
             elif mixer == MAMBA:
@@ -279,6 +417,13 @@ def forward(params: Dict, cfg: ModelConfig,
 
             if capture:
                 caps.update({f"b{i}.{k}": v for k, v in caps_i.items()})
+            if c_pool is not None and slot_ids is not None:
+                # scatter the bucket's updated rows back into the pool;
+                # padding rows (slot_ids >= pool size) are dropped
+                nc = {name: (v if paged and name in PAGE_KEYS
+                             else c_pool[name].at[slot_ids].set(
+                                 v.astype(c_pool[name].dtype), mode="drop"))
+                      for name, v in nc.items()}
             new_caches.append(nc)
 
         x = maybe_shard(x, "batch", "seq_model", None)   # keep carry SP-sharded

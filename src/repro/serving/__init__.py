@@ -1,9 +1,9 @@
-from repro.serving.cache_manager import SlotCacheManager
-from repro.serving.engine import (EngineStats, Request, ServingEngine,
-                                  StaticBatchEngine)
+from repro.serving.cache_manager import PagedCacheManager, SlotCacheManager
+from repro.serving.engine import (EngineStats, PagedServingEngine, Request,
+                                  ServingEngine, StaticBatchEngine)
 from repro.serving.scheduler import (DECODE, DONE, FREE, PREFILL, Scheduler,
                                      Slot)
 
-__all__ = ["DECODE", "DONE", "EngineStats", "FREE", "PREFILL", "Request",
-           "Scheduler", "ServingEngine", "SlotCacheManager", "Slot",
-           "StaticBatchEngine"]
+__all__ = ["DECODE", "DONE", "EngineStats", "FREE", "PREFILL",
+           "PagedCacheManager", "PagedServingEngine", "Request", "Scheduler",
+           "ServingEngine", "SlotCacheManager", "Slot", "StaticBatchEngine"]

@@ -1,31 +1,39 @@
-"""Slot-based KV/recurrent cache pool for continuous batching.
+"""Cache pools for continuous batching: slot rows or paged blocks.
 
-The pool is one batched cache pytree (``lm.init_cache(cfg, num_slots,
-max_len)``) whose batch rows are *slots*. The batch-major, position-
-indexed layout means both lifecycle operations are pure row writes:
+``SlotCacheManager`` is the PR-1 layout: one batched cache pytree
+(``lm.init_cache(cfg, num_slots, max_len)``) whose batch rows are
+*slots* — every slot permanently reserves ``max_len`` positions, so pool
+memory scales with the worst case even when traffic is short.
 
-  * admission: a request prefilled into a batch-1 cache is scattered into
-    its slot row (``lm.write_cache_slot``)
-  * release:   the row is cleared (``lm.reset_cache_slot``) before the
-    scheduler returns the slot to its free pool
+``PagedCacheManager`` replaces the full-attention rows with a pool of
+fixed-size pages plus per-slot block tables (vLLM-style). Pages are
+allocated on demand (prefill blocks at admission, the tail block as
+decode crosses a page boundary) and returned to a free list when the
+request finishes or is preempted, so concurrency is bounded by *tokens
+actually resident*, not ``num_slots * max_len``. Sliding-window rings and
+SSM/RWKV recurrent state stay slot-resident (O(window)/O(1) per request —
+nothing to reclaim).
 
-Both are jitted once with the slot index traced, so serving any number of
-requests compiles exactly two cache ops; the pool buffers are donated
-through every call (no per-step reallocation).
+All device ops are jitted once with slot/table indices traced, so serving
+any number of requests compiles a fixed handful of cache ops; the pool
+buffers are donated through every call (no per-step reallocation).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
 # module-level jits: the trace cache survives across pool instances, so
-# repeated engine runs reuse the two compiled cache ops instead of
-# re-tracing them per SlotCacheManager
+# repeated engine runs reuse the compiled cache ops instead of re-tracing
+# them per manager instance
 _WRITE_SLOT = jax.jit(lm.write_cache_slot, donate_argnums=(0,))
 _RESET_SLOT = jax.jit(lm.reset_cache_slot, donate_argnums=(0,))
+_WRITE_PAGES = jax.jit(lm.write_cache_pages, donate_argnums=(0,))
+_RELEASE_PAGES = jax.jit(lm.release_cache_pages, donate_argnums=(0,))
 
 
 class SlotCacheManager:
@@ -64,3 +72,122 @@ class SlotCacheManager:
     def fresh_prefill_cache(self) -> list:
         """Batch-1 cache matching the pool's row shapes, for one prefill."""
         return lm.init_cache(self.cfg, 1, self.max_len, self.dtype)
+
+
+class PagedCacheManager:
+    """Paged K/V pool: ``num_pages`` fixed-size pages + per-slot block tables.
+
+    The Python side owns the free-page list and the ``(num_slots,
+    max_blocks)`` block tables (-1 = unallocated); the device side holds
+    the page arrays. Physical page 0 is reserved as the null page (read
+    target of unallocated table entries), so ``usable_pages = num_pages -
+    1``. ``num_pages=None`` sizes the pool to full slot-cache parity
+    (every slot can hold ``max_len`` tokens) — pass something smaller to
+    actually share memory.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 num_pages: int | None = None, block_size: int = 16,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.block_size = block_size
+        self.max_blocks = -(-max_len // block_size)
+        self.padded_len = self.max_blocks * block_size
+        if num_pages is None:
+            num_pages = num_slots * self.max_blocks + 1
+        assert num_pages >= 2, "need at least the null page + one real page"
+        self.num_pages = num_pages
+        self.usable_pages = num_pages - 1
+        self.dtype = dtype
+        self.cache = lm.init_paged_cache(cfg, num_slots, num_pages,
+                                         block_size, self.padded_len, dtype)
+        self._free = list(range(num_pages - 1, 0, -1))   # page 0 = null
+        self.tables = np.full((num_slots, self.max_blocks), -1, np.int32)
+
+    # -- accounting --------------------------------------------------------
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-max(tokens, 1) // self.block_size)
+
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    def can_admit(self, prefill_len: int, reserved: int = 0) -> bool:
+        """Pages available for the prefill plus the first decode write.
+
+        ``reserved`` discounts pages already promised to earlier
+        admissions in the same tick (the engine's gate reserves as it
+        approves, before any allocation happens).
+        """
+        return (self.free_page_count - reserved
+                >= self.blocks_for(prefill_len + 1))
+
+    def check_capacity(self, total_tokens: int) -> None:
+        """Liveness bound: a request must fit the pool when running alone
+        (otherwise preemption could cycle forever) and its block table."""
+        if self.blocks_for(total_tokens) > self.usable_pages:
+            raise ValueError(
+                f"request needs {self.blocks_for(total_tokens)} pages but "
+                f"the pool holds {self.usable_pages}")
+        if total_tokens > self.padded_len:
+            raise ValueError(
+                f"request needs {total_tokens} positions but block tables "
+                f"address {self.padded_len}")
+
+    # -- allocation --------------------------------------------------------
+
+    def allocate_prefill(self, slot: int, prefill_len: int) -> None:
+        """Claim the pages that will hold a prefilled request's K/V."""
+        assert (self.tables[slot] < 0).all(), "slot still owns pages"
+        nb = self.blocks_for(prefill_len)
+        if nb > len(self._free):
+            raise RuntimeError("admission without enough free pages")
+        for b in range(nb):
+            self.tables[slot, b] = self._free.pop()
+
+    def ensure(self, slot: int, block: int) -> bool:
+        """Allocate ``block`` for ``slot`` if needed; False when out of
+        pages (the engine preempts a request and retries)."""
+        if self.tables[slot, block] >= 0:
+            return True
+        if not self._free:
+            return False
+        self.tables[slot, block] = self._free.pop()
+        return True
+
+    # -- device ops --------------------------------------------------------
+
+    def write(self, slot: int, src_cache: list) -> None:
+        """Scatter a prefilled batch-1 cache into the slot's pages (and
+        its slot-resident rows)."""
+        table = np.where(self.tables[slot] >= 0, self.tables[slot],
+                         self.num_pages).astype(np.int32)
+        self.cache = _WRITE_PAGES(self.cache, src_cache,
+                                  jnp.asarray(table), jnp.int32(slot))
+
+    def release(self, slot: int) -> None:
+        """Invalidate the slot's pages (pos -> -1), reset its slot-resident
+        rows, and return the pages to the free list."""
+        owned = self.tables[slot][self.tables[slot] >= 0]
+        table = np.full((self.max_blocks,), self.num_pages, np.int32)
+        table[: len(owned)] = owned
+        self.cache = _RELEASE_PAGES(self.cache, jnp.asarray(table),
+                                    jnp.int32(slot))
+        self._free.extend(int(p) for p in owned)
+        self.tables[slot] = -1
+
+    # -- views -------------------------------------------------------------
+
+    def read_tables(self) -> np.ndarray:
+        """(num_slots, max_blocks) gather tables: unallocated -> null page."""
+        return np.where(self.tables >= 0, self.tables, 0).astype(np.int32)
+
+    def fresh_prefill_cache(self) -> list:
+        """Batch-1 contiguous cache whose rows split evenly into blocks."""
+        return lm.init_cache(self.cfg, 1, self.padded_len, self.dtype)

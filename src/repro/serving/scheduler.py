@@ -4,6 +4,8 @@ The scheduler owns the dynamic state the jitted model functions must not
 see: the FIFO admission queue and the per-slot lifecycle
 
     FREE -> PREFILL -> DECODE -> DONE -> FREE
+                 ^        |
+                 +--------+   (preempt: back to the queue front)
 
 Between decode steps the engine asks for ``admissions()`` — queued
 requests paired with FREE slots — prefills each one into its cache row,
@@ -43,10 +45,18 @@ class Request:
     submit_step: int = -1
     admit_step: int = -1
     finish_step: int = -1
+    preemptions: int = 0                # times evicted to free cache pages
 
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    @property
+    def resume_prefill_len(self) -> int:
+        """Tokens a (re-)admission must prefill: the prompt plus every
+        generated token except the last, which is fed at the next decode
+        step (fresh requests: just the prompt)."""
+        return self.prompt_len + max(len(self.out_tokens) - 1, 0)
 
     @property
     def queue_wait_steps(self) -> int:
@@ -90,13 +100,21 @@ class Scheduler:
         request.submit_step = self.step
         self.queue.append(request)
 
-    def admissions(self) -> List[Tuple[Slot, Request]]:
-        """Pair queued requests with FREE slots; marks them PREFILL."""
+    def admissions(self, can_admit=None) -> List[Tuple[Slot, Request]]:
+        """Pair queued requests with FREE slots; marks them PREFILL.
+
+        ``can_admit(request) -> bool`` gates each admission on resource
+        availability (the paged engine passes the free-page check). The
+        queue stays strictly FIFO: when the head request cannot be
+        admitted, nothing behind it jumps ahead.
+        """
         out = []
         for slot in self.slots:
             if not self.queue:
                 break
             if slot.state == FREE:
+                if can_admit is not None and not can_admit(self.queue[0]):
+                    break
                 req = self.queue.popleft()
                 req.admit_step = self.step
                 slot.request = req
@@ -135,6 +153,33 @@ class Scheduler:
         slot.state = FREE
         slot.next_pos = 0
         slot.last_token = 0
+
+    def preempt(self, slot: Slot) -> Request:
+        """Evict a decoding request to reclaim its cache pages.
+
+        The request returns to the *front* of the queue (FIFO order is
+        preserved) keeping its generated tokens; re-admission prefills
+        ``prompt + out_tokens[:-1]`` to rebuild the K/V it lost and then
+        resumes decoding (``resume``) without re-sampling anything.
+        """
+        assert slot.state == DECODE, slot.state
+        req = slot.request
+        req.preemptions += 1
+        self.queue.appendleft(req)
+        slot.request = None
+        slot.state = FREE
+        slot.next_pos = 0
+        slot.last_token = 0
+        return req
+
+    def resume(self, slot: Slot) -> None:
+        """Move a re-admitted (previously preempted) slot straight to
+        DECODE: its next token was already sampled before eviction."""
+        req = slot.request
+        assert slot.state == PREFILL and req.out_tokens
+        slot.next_pos = req.prompt_len + len(req.out_tokens) - 1
+        slot.last_token = req.out_tokens[-1]
+        slot.state = DECODE
 
     # -- queries -----------------------------------------------------------
 

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow      # interpret-mode Pallas, end-to-end
+
 from repro.checkpoint import load_serving_checkpoint, save_serving_checkpoint
 from repro.configs import ARCHS
 from repro.configs.base import QuantConfig

@@ -8,6 +8,10 @@ from repro.core import arc, quant as Q
 from repro.kernels import (arc_fused_quantize, nvfp4_gemm, nvfp4_quantize,
                            ops, ref)
 
+# interpret-mode Pallas is bit-faithful but slow on CPU; CI runs these in
+# the dedicated `slow` job
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("m,k", [(16, 64), (32, 256), (8, 48), (64, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

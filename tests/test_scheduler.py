@@ -141,6 +141,7 @@ def _mixed_workload(cfg, rng, n=5):
     return reqs
 
 
+@pytest.mark.slow
 def test_continuous_matches_static_greedy_trace(served):
     """Token-for-token parity on a deterministic mixed-length trace."""
     cont, stat, cfg = _engines(served)
@@ -156,6 +157,7 @@ def test_continuous_matches_static_greedy_trace(served):
     assert cont.last_stats.padding_waste <= stat.last_stats.padding_waste
 
 
+@pytest.mark.slow
 def test_slot_reuse_more_requests_than_slots(served):
     """6 requests through 2 slots: freed rows admit queued requests."""
     cont, _, cfg = _engines(served)
@@ -170,6 +172,7 @@ def test_slot_reuse_more_requests_than_slots(served):
     assert any(r.admit_step > 0 for r in reqs)
 
 
+@pytest.mark.slow
 def test_cache_does_not_leak_across_requests(served):
     """A request decodes identically alone and after a slot reuse."""
     qparams, cfg, quant, plans = served
@@ -184,6 +187,7 @@ def test_cache_does_not_leak_across_requests(served):
     assert served_b_after_a.out_tokens == served_b_alone.out_tokens
 
 
+@pytest.mark.slow
 def test_eos_truncates_generation(served):
     cont, _, cfg = _engines(served)
     rng = np.random.default_rng(11)
@@ -198,6 +202,7 @@ def test_eos_truncates_generation(served):
     assert cut.done
 
 
+@pytest.mark.slow
 def test_single_token_request_finishes_at_prefill(served):
     cont, _, cfg = _engines(served)
     rng = np.random.default_rng(13)
@@ -208,6 +213,7 @@ def test_single_token_request_finishes_at_prefill(served):
     assert cont.last_stats.decode_steps == 0
 
 
+@pytest.mark.slow
 def test_temperature_sampling_runs_and_varies_by_seed(served):
     qparams, cfg, quant, plans = served
     rng = np.random.default_rng(17)
@@ -226,6 +232,7 @@ def test_temperature_sampling_runs_and_varies_by_seed(served):
     assert len(draws) > 1                    # high temperature actually samples
 
 
+@pytest.mark.slow
 def test_engine_metrics_consistency(served):
     cont, _, cfg = _engines(served)
     rng = np.random.default_rng(23)

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow      # end-to-end serving runs
+
 from repro.configs import ARCHS
 from repro.configs.base import QuantConfig
 from repro.models import capture_stats, init_params
