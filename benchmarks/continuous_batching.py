@@ -18,6 +18,13 @@ Reported per engine:
     step and are reported separately — folding them in (as the stats did
     before EngineStats split the counters) overstated decode throughput.
 
+A second phase serves a workload salted with one long prompt twice —
+one-shot prefill vs ``prefill_chunk=8`` — and reports time-to-first-token
+(ticks) plus the *admission stall*: the most prefill tokens a single
+tick had to compute before its decode could run. Chunked prefill bounds
+the stall by slots x chunk regardless of prompt length, with final
+tokens unchanged.
+
 Run: PYTHONPATH=src python -m benchmarks.continuous_batching
 """
 from __future__ import annotations
@@ -78,7 +85,53 @@ def run(n_requests: int = 12, slots: int = 4, seed: int = 0):
     # greedy parity: scheduling must not change any request's tokens
     for a, b in zip(results["static"][1], results["continuous"][1]):
         assert a.out_tokens == b.out_tokens, "scheduling changed outputs"
+
+    run_chunked_prefill(cfg, qparams, quant, plans, slots=slots, seed=seed)
     return speedup
+
+
+def run_chunked_prefill(cfg, qparams, quant, plans, slots: int = 4,
+                        seed: int = 0, long_prompt: int = 40,
+                        chunk: int = 8):
+    """Admission stall with one long prompt: one-shot vs chunked prefill.
+
+    Both runs share one engine's jit traces (cores differ only in
+    ``prefill_chunk``), so the comparison isolates the schedule.
+    """
+    rng = np.random.default_rng(seed)
+    reqs = mixed_workload(cfg.vocab_size, 6, seed)
+    # the stall: a long prompt arriving mid-stream
+    reqs.insert(3, Request(
+        prompt=rng.integers(0, cfg.vocab_size, long_prompt).astype(np.int32),
+        max_new_tokens=8))
+    eng = ServingEngine(qparams, cfg, quant, plans, batch_size=slots,
+                        max_len=long_prompt + 32)
+
+    results = {}
+    for name, pchunk in (("oneshot", None), ("chunked", chunk)):
+        core = eng.make_core(prefill_chunk=pchunk)
+        rids = [core.add_request(r.to_generation_request()) for r in reqs]
+        while core.has_unfinished():
+            core.step()
+        states = [core.states[rid] for rid in rids]
+        ttft = [st.ttft_steps for st in states]
+        emit(f"serve_prefill_{name}", core.stats.wall_seconds * 1e6,
+             f"stall_tokens={core.stats.max_prefill_tokens_per_step} "
+             f"ttft_p50={int(np.median(ttft))} ttft_max={max(ttft)} "
+             f"decode_steps={core.stats.decode_steps}")
+        results[name] = (core.stats, [st.out_tokens for st in states])
+
+    one, chk = results["oneshot"][0], results["chunked"][0]
+    assert results["chunked"][1] == results["oneshot"][1], \
+        "chunked prefill changed greedy tokens"
+    assert chk.max_prefill_tokens_per_step < one.max_prefill_tokens_per_step,\
+        "chunked prefill should bound the admission stall"
+    assert chk.max_prefill_tokens_per_step <= slots * chunk
+    emit("chunked_prefill_stall", 0.0,
+         f"worst tick prefill tokens {one.max_prefill_tokens_per_step}->"
+         f"{chk.max_prefill_tokens_per_step} (bound={slots * chunk}), "
+         f"tokens unchanged")
+    return one.max_prefill_tokens_per_step, chk.max_prefill_tokens_per_step
 
 
 if __name__ == "__main__":

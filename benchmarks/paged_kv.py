@@ -95,9 +95,11 @@ def run(n_requests: int = 16, slots: int = 4, max_len: int = 64,
             extra = (f" page_util={s.page_utilization:.3f}"
                      f" peak_pages={s.peak_pages}"
                      f" preempt={s.preemptions}")
+        ttft = [r.ttft_steps for r in served]    # set once a token emitted
         emit(f"paged_kv_{name}", s.wall_seconds * 1e6,
              f"slots={eng.batch_size} steps={s.decode_steps} "
-             f"kv_bytes={mem} waste={s.padding_waste:.3f}"
+             f"kv_bytes={mem} waste={s.padding_waste:.3f} "
+             f"ttft_p50={int(np.median(ttft))} ttft_max={max(ttft)}"
              f"{extra}")
         results[name] = (s, [r.out_tokens for r in served], mem)
 

@@ -1,4 +1,4 @@
-"""Serve a small model through the continuous-batching ARCQuant engine.
+"""Serve a small model through the step-driven ARCQuant serving core.
 
     PYTHONPATH=src python examples/serve_quantized.py --arch qwen2-1.5b
     PYTHONPATH=src python examples/serve_quantized.py --backend pallas
@@ -6,10 +6,16 @@
 Pipeline (paper Fig. 5): calibrate -> offline weight quantization (packed
 NVFP4, ARC-augmented along K, interleaved channel layout) -> per-request
 prefill into a free cache slot -> batched decode loop where every linear
-runs online activation quantization + the unified K+S GEMM. Finished
-requests free their slot between decode steps and the scheduler admits
-the next queued request into the row, so mixed-length workloads don't pay
-padding waste.
+runs online activation quantization + the unified K+S GEMM.
+
+This example drives the step-driven ``EngineCore`` directly to show the
+serving API end to end:
+
+  * tokens print per tick as the core emits them (streaming deltas);
+  * a new request is submitted *mid-flight* (``add_request`` between
+    ticks) and picks up a freed slot without waiting for the batch;
+  * ``--prefill-chunk`` feeds long prompts in fixed-size slices across
+    ticks so their prefill never stalls in-flight decodes.
 
 ``--backend pallas`` serves through the fused kernel pipeline: each
 deployed linear is one ``arc_fused_quantize`` launch (RMSNorm + reorder +
@@ -27,14 +33,15 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.launch.serve import calibrate_and_quantize
 from repro.models import init_params
-from repro.serving import PagedServingEngine, Request, ServingEngine
+from repro.serving import (GenerationRequest, PagedServingEngine,
+                           SamplingParams, ServingEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--method", default="arc")
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--backend", default="reference",
@@ -43,6 +50,8 @@ def main():
                     help="serve through the paged KV cache pool (block "
                          "tables + on-demand page allocation) instead of "
                          "per-slot max_len rows")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunked prefill slice size (0 = one-shot)")
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
@@ -56,33 +65,62 @@ def main():
     print(f"weights: {orig/1e6:.1f}MB fp32 -> {packed/1e6:.1f}MB packed NVFP4 "
           f"({orig/packed:.1f}x)")
 
-    # mixed-length workload: this is where continuous batching pays off
+    # mixed-length workload, salted with one long prompt so chunked
+    # prefill has a stall to remove
     rng = np.random.default_rng(0)
     lo = min(2, args.new_tokens)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
-                                        int(rng.integers(4, 13))).astype(np.int32),
-                    max_new_tokens=int(rng.integers(lo, args.new_tokens + 1)),
-                    temperature=args.temperature)
-            for _ in range(args.requests)]
+
+    def make_request(plen):
+        return GenerationRequest(
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            sampling=SamplingParams(
+                max_new_tokens=int(rng.integers(lo, args.new_tokens + 1)),
+                temperature=args.temperature))
+
+    long_prompt = 24
     cls = PagedServingEngine if args.paged else ServingEngine
     engine = cls(qparams, cfg, quant, plans, batch_size=2,
-                 max_len=12 + args.new_tokens + 1,
+                 max_len=long_prompt + args.new_tokens + 1,
                  backend=args.backend,
                  interpret=(args.backend == "pallas"
-                            and jax.default_backend() == "cpu"))
-    engine.run(reqs)
-    s = engine.last_stats
-    print(f"backend={args.backend}: "
-          f"served {len(reqs)} requests / {s.generated_tokens} tokens in "
-          f"{s.wall_seconds:.1f}s across {s.decode_steps} decode steps "
-          f"(padding waste {100 * s.padding_waste:.1f}%)")
+                            and jax.default_backend() == "cpu"),
+                 prefill_chunk=args.prefill_chunk or None)
+
+    core = engine.make_core()
+    for _ in range(args.requests - 2):
+        core.add_request(make_request(int(rng.integers(4, 13))))
+    core.add_request(make_request(long_prompt))     # exercises chunking
+
+    late_id = None
+    while core.has_unfinished():
+        out = core.step()
+        for ro in out.outputs:
+            tag = f" [{ro.finish_reason}]" if ro.finished else ""
+            late = " (mid-flight)" if ro.request_id == late_id else ""
+            print(f"tick {out.step:3d}  req{ro.request_id}{late}: "
+                  f"+{ro.new_tokens} ({ro.num_generated} total){tag}")
+        if late_id is None and (out.step >= 2 or not core.has_unfinished()):
+            # a request arriving while others are mid-generation: it
+            # queues now and takes over the first slot that frees up
+            # (submitted no later than the drain, so it always runs)
+            late_id = core.add_request(make_request(6))
+            print(f"tick {out.step:3d}  >>> add_request(req{late_id}) "
+                  f"submitted mid-flight")
+
+    s = core.stats
+    print(f"\nbackend={args.backend}: "
+          f"served {len(core.states)} requests / {s.generated_tokens} tokens "
+          f"in {s.wall_seconds:.1f}s across {s.decode_steps} decode steps "
+          f"(padding waste {100 * s.padding_waste:.1f}%, worst-tick prefill "
+          f"{s.max_prefill_tokens_per_step} tokens)")
     if args.paged:
         print(f"  page pool: {s.num_pages} pages, peak {s.peak_pages}, "
               f"mean utilization {100 * s.page_utilization:.1f}%, "
               f"{s.preemptions} preemptions")
-    for i, r in enumerate(reqs[:3]):
-        print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} "
-              f"admitted@{r.admit_step} -> {r.out_tokens}")
+    for rid, st in sorted(core.states.items())[:4]:
+        print(f"  req{rid}: prompt_len={st.prompt_len} "
+              f"admitted@{st.admit_step} ttft={st.ttft_steps} "
+              f"-> {st.out_tokens}")
 
 
 if __name__ == "__main__":

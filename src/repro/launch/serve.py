@@ -11,7 +11,10 @@ paged KV cache pool (block tables + on-demand page allocation;
 admission and preemption). ``--backend pallas`` routes every deployed
 linear through the fused Pallas pipeline (arc_fused_quantize -> packed
 nvfp4_gemm); add ``--interpret`` to run those kernels bit-faithfully on
-CPU.
+CPU. ``--prefill-chunk N`` feeds long prompts in N-token slices across
+ticks (chunked prefill — bounds the admission stall a long prompt
+imposes on in-flight decodes) and ``--stream`` prints tokens per tick as
+the step-driven core emits them instead of waiting for completion.
 """
 from __future__ import annotations
 
@@ -86,6 +89,12 @@ def main():
                     help="0 = greedy; >0 samples per request")
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="vary prompt/generation lengths across requests")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: feed prompts longer than N in "
+                         "N-token slices across ticks (0 = one-shot)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-request token deltas as each tick "
+                         "emits them (the streaming API)")
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
@@ -122,8 +131,15 @@ def main():
         cls = StaticBatchEngine if args.static else ServingEngine
     engine = cls(qparams, cfg, quant, plans, batch_size=args.batch,
                  max_len=16 + args.new_tokens + 1, seed=args.seed,
-                 backend=args.backend, interpret=args.interpret, **kw)
-    engine.run(reqs)
+                 backend=args.backend, interpret=args.interpret,
+                 prefill_chunk=args.prefill_chunk or None, **kw)
+    if args.stream:
+        for out in engine.stream(reqs):
+            tag = (f" [{out.finish_reason}]" if out.finished else "")
+            print(f"  req{out.request_id}: +{out.new_tokens} "
+                  f"({out.num_generated} total){tag}")
+    else:
+        engine.run(reqs)
     s = engine.last_stats
     print(f"backend={args.backend}"
           f"{' (interpret)' if args.interpret else ''}")

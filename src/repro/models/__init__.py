@@ -1,8 +1,10 @@
 from repro.models import layers, lm, ssm
 from repro.models.lm import (PlanBundle, capture_stats, forward, init_cache,
                              init_params, next_token_loss, padded_vocab,
+                             prefill_chunk,
                              perplexity, reset_cache_slot, write_cache_slot)
 
 __all__ = ["layers", "lm", "ssm", "PlanBundle", "capture_stats", "forward",
            "init_cache", "init_params", "next_token_loss", "padded_vocab",
+           "prefill_chunk",
            "perplexity", "reset_cache_slot", "write_cache_slot"]

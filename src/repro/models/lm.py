@@ -458,6 +458,27 @@ def forward(params: Dict, cfg: ModelConfig,
     return logits, (list(new_cache) if has_cache else None), aux
 
 
+def prefill_chunk(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                  positions: jax.Array, cache: list,
+                  quant: QuantConfig = QuantConfig(),
+                  plans: Optional[PlanBundle] = None) -> list:
+    """Advance an in-progress prefill by one token chunk.
+
+    Chunked-prefill entry: ``cache`` already holds positions
+    ``[0, positions[0, 0])`` of the same sequence (attention K/V written
+    per absolute position; SSM/RWKV recurrent state threaded through), so
+    feeding the prompt in slices across calls builds exactly the cache a
+    one-shot prefill would — attention reads mask on stored positions and
+    the recurrent scans consume tokens in the same order. Skips the
+    logits head (``compute_logits=False``): only the final chunk needs
+    logits, via :func:`forward`.
+    """
+    _, cache, _ = forward(params, cfg, tokens=tokens, positions=positions,
+                          cache=cache, quant=quant, plans=plans,
+                          compute_logits=False)
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # Loss / eval helpers
 # ---------------------------------------------------------------------------

@@ -1,9 +1,17 @@
+from repro.serving.backend import PagedBackend, SlotBackend
 from repro.serving.cache_manager import PagedCacheManager, SlotCacheManager
-from repro.serving.engine import (EngineStats, PagedServingEngine, Request,
-                                  ServingEngine, StaticBatchEngine)
+from repro.serving.core import EngineCore, EngineFns, EngineStats
+from repro.serving.engine import (PagedServingEngine, ServingEngine,
+                                  StaticBatchEngine)
+from repro.serving.request import (FINISH_EOS, FINISH_LENGTH,
+                                   GenerationRequest, Request, RequestOutput,
+                                   RequestState, SamplingParams, StepOutput)
 from repro.serving.scheduler import (DECODE, DONE, FREE, PREFILL, Scheduler,
                                      Slot)
 
-__all__ = ["DECODE", "DONE", "EngineStats", "FREE", "PREFILL",
-           "PagedCacheManager", "PagedServingEngine", "Request", "Scheduler",
-           "ServingEngine", "SlotCacheManager", "Slot", "StaticBatchEngine"]
+__all__ = ["DECODE", "DONE", "EngineCore", "EngineFns", "EngineStats",
+           "FINISH_EOS", "FINISH_LENGTH", "FREE", "GenerationRequest",
+           "PREFILL", "PagedBackend", "PagedCacheManager",
+           "PagedServingEngine", "Request", "RequestOutput", "RequestState",
+           "SamplingParams", "Scheduler", "ServingEngine", "SlotCacheManager",
+           "Slot", "StaticBatchEngine", "StepOutput"]

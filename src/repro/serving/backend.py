@@ -1,0 +1,189 @@
+"""Cache backends: the pluggable seam between EngineCore and pool layout.
+
+The step-driven core is backend-agnostic; everything layout-specific —
+slot rows vs paged blocks, admission gating, per-chunk page allocation,
+preemption when the pool runs dry, and how a decode launch names its
+rows — lives behind these two small classes instead of engine subclass
+method overrides.
+
+``SlotBackend`` is the trivial case: every slot permanently owns a
+``max_len`` cache row, so admission needs nothing beyond a FREE slot and
+decode always launches the full slot count.
+
+``PagedBackend`` manages the paged K/V pool: admission is gated on free
+pages (strict FIFO head-of-line), chunked prefill allocates each chunk's
+blocks as the prompt cursor advances, decode allocates the tail block on
+demand, and when the pool runs dry the latest-admitted request —
+decoding *or* mid chunked prefill — is preempted (pages reclaimed,
+request requeued at the front). ``decode_buckets=True`` shrinks each
+decode launch to the active-request count rounded up to a power of two.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.cache_manager import PagedCacheManager, SlotCacheManager
+from repro.serving.scheduler import DECODE, PREFILL, Scheduler, Slot
+from repro.serving.request import RequestState
+
+
+class SlotBackend:
+    """Slot-row pool: every slot reserves ``max_len`` positions."""
+
+    paged = False
+    decode_fn = "decode"            # EngineCore fns attribute to launch
+
+    def make_pool(self, cfg: ModelConfig, num_slots: int, max_len: int):
+        return SlotCacheManager(cfg, num_slots, max_len)
+
+    def check_capacity(self, pool, total_tokens: int) -> None:
+        pass                        # Scheduler.submit enforces max_len
+
+    def admission_gate(self, pool):
+        return None                 # a FREE slot suffices
+
+    def on_admit(self, pool, slot: Slot, prefill_len: int) -> None:
+        pass                        # the row already exists
+
+    def alloc_prefill_chunk(self, pool, sched: Scheduler, stats,
+                            slot: Slot, upto_tokens: int) -> bool:
+        return True                 # the row already exists
+
+    def pre_decode(self, pool, sched: Scheduler, stats,
+                   active: List[Slot]) -> List[Slot]:
+        return active               # rows never run out
+
+    def decode_rows(self, pool, active: List[Slot], num_slots: int
+                    ) -> Tuple[int, Dict[int, Slot], dict]:
+        """Launch width, row->slot mapping, and backend-extra jit args."""
+        return num_slots, {s.index: s for s in active}, {}
+
+
+class PagedBackend(SlotBackend):
+    """Paged K/V pool: block tables, on-demand pages, preemption."""
+
+    paged = True
+    decode_fn = "decode_paged"
+
+    def __init__(self, num_pages: Optional[int] = None,
+                 block_size: int = 16, decode_buckets: bool = False):
+        self.num_pages = num_pages
+        self.block_size = block_size
+        self.decode_buckets = decode_buckets
+
+    def make_pool(self, cfg: ModelConfig, num_slots: int, max_len: int):
+        return PagedCacheManager(cfg, num_slots, max_len,
+                                 num_pages=self.num_pages,
+                                 block_size=self.block_size)
+
+    def check_capacity(self, pool, total_tokens: int) -> None:
+        pool.check_capacity(total_tokens)
+
+    def admission_gate(self, pool):
+        # admissions() gates the whole batch before the engine allocates
+        # any pages, so the gate must reserve as it approves: otherwise
+        # two requests could both pass against the same free pages
+        reserved = 0
+
+        def gate(st: RequestState) -> bool:
+            nonlocal reserved
+            if not pool.can_admit(st.resume_prefill_len, reserved):
+                return False
+            # reserve the first decode write's block too (what can_admit
+            # checked) or a same-tick admission could take it and force an
+            # immediate preemption
+            reserved += pool.blocks_for(st.resume_prefill_len + 1)
+            return True
+
+        return gate
+
+    def on_admit(self, pool, slot: Slot, prefill_len: int) -> None:
+        pool.allocate_prefill(slot.index, prefill_len)
+
+    def alloc_prefill_chunk(self, pool, sched: Scheduler, stats,
+                            slot: Slot, upto_tokens: int) -> bool:
+        """Claim the blocks covering prompt positions [0, upto_tokens).
+
+        Chunked prefill allocates pages as the prompt cursor advances
+        instead of all at admission, so pool pressure tracks the K/V
+        actually resident. When the pool runs dry mid-prefill (decode
+        tail allocations got there first), the *latest-admitted* request
+        is preempted — which is usually the prefilling slot itself (ties
+        on admit_step also self-preempt): a new prompt must not evict
+        older in-flight decodes. Returns False when ``slot`` was
+        preempted (its partial chunk cache is discarded and it
+        re-prefills from the queue front).
+        """
+        # blocks below the cursor were ensured on earlier chunks (a
+        # self-preemption restarts from prefill_pos=0, so they are
+        # always resident) — only walk the blocks this chunk adds
+        first = slot.prefill_pos // pool.block_size
+        for block in range(first, pool.blocks_for(upto_tokens)):
+            while not pool.ensure(slot.index, block):
+                victims = [s for s in sched.slots
+                           if s.state in (DECODE, PREFILL)
+                           and s.req is not None]
+                newest = max(v.req.admit_step for v in victims)
+                victim = (slot if slot.req.admit_step == newest else
+                          max(victims, key=lambda v: v.req.admit_step))
+                self._evict(pool, sched, stats, victim)
+                if victim is slot:
+                    return False
+        return True
+
+    def pre_decode(self, pool, sched: Scheduler, stats,
+                   active: List[Slot]) -> List[Slot]:
+        """Allocate each active slot's tail page, preempting the latest-
+        admitted request when the pool is exhausted."""
+        for s in active:
+            if s.state != DECODE:   # already preempted this tick
+                continue
+            block = s.next_pos // pool.block_size
+            while not pool.ensure(s.index, block):
+                if not self._reclaim(pool, sched, stats, protect=s):
+                    self._evict(pool, sched, stats, s)
+                    break
+        return [s for s in active if s.state == DECODE]
+
+    def _reclaim(self, pool, sched: Scheduler, stats, protect: Slot) -> bool:
+        """Preempt the latest-admitted request other than ``protect`` —
+        decoding or mid chunked prefill — returning its pages to the free
+        list. False when there is nothing left to reclaim."""
+        victims = [s for s in sched.slots
+                   if s.state in (DECODE, PREFILL) and s is not protect]
+        if not victims:
+            return False
+        self._evict(pool, sched, stats,
+                    max(victims, key=lambda v: v.req.admit_step))
+        return True
+
+    @staticmethod
+    def _evict(pool, sched: Scheduler, stats, victim: Slot) -> None:
+        """Reclaim one request's pages and requeue it at the front."""
+        pool.release(victim.index)
+        sched.preempt(victim)
+        stats.preemptions += 1
+
+    def decode_rows(self, pool, active: List[Slot], num_slots: int
+                    ) -> Tuple[int, Dict[int, Slot], dict]:
+        m = (_bucket_pow2(len(active), num_slots) if self.decode_buckets
+             else num_slots)
+        rows = ({i: s for i, s in enumerate(active)} if self.decode_buckets
+                else {s.index: s for s in active})
+        tables = np.zeros((m, pool.max_blocks), np.int32)
+        slot_ids = np.full((m,), num_slots, np.int32)    # OOB = padding
+        read_tables = pool.read_tables()
+        for i, s in rows.items():
+            tables[i] = read_tables[s.index]
+            slot_ids[i] = s.index
+        return m, rows, {"tables": tables, "slot_ids": slot_ids}
+
+
+def _bucket_pow2(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)

@@ -17,6 +17,14 @@ nothing to reclaim).
 All device ops are jitted once with slot/table indices traced, so serving
 any number of requests compiles a fixed handful of cache ops; the pool
 buffers are donated through every call (no per-step reallocation).
+
+Which pool an ``EngineCore`` drives — and when pages are claimed — is
+decided by the cache backends in ``backend.py``: prefill (one-shot or
+chunk-by-chunk via ``fresh_prefill_cache``) always builds a batch-1
+contiguous cache that ``write`` installs into the pool in one scatter;
+with chunked prefill the paged backend claims each chunk's blocks as the
+prompt cursor advances (``ensure``), so pool accounting tracks the K/V
+actually resident before the install.
 """
 from __future__ import annotations
 

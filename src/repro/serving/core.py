@@ -1,0 +1,434 @@
+"""Step-driven serving core: add_request / step / has_unfinished.
+
+``EngineCore`` is the single engine underneath every serving facade
+(slot, paged, static). One ``step()`` call is one engine *tick*:
+
+  1. **admission** — queued requests are paired with FREE slots (gated
+     by the cache backend). Short prompts prefill in one shot, exactly
+     as before; prompts longer than ``prefill_chunk`` enter the chunked
+     PREFILL phase instead.
+  2. **chunked prefill** — every PREFILL slot advances by at most
+     ``prefill_chunk`` prompt tokens (the paged backend allocates that
+     chunk's pages as the cursor moves). The final chunk samples the
+     first token and installs the built cache into the pool, so a long
+     prompt's compute is spread across ticks instead of serializing in
+     front of one tick's decode — the admission stall is bounded by the
+     chunk size.
+  3. **decode** — one batched decode step over every DECODE slot.
+
+Every tick returns a :class:`StepOutput` carrying the per-request token
+deltas it produced, so callers can stream tokens as they are emitted and
+``add_request`` at any tick. The batch-blocking ``run()`` of the engine
+facades is a thin wrapper that drives ``step()`` to completion.
+
+Sampling is *slot-invariant*: each request draws from a PRNG stream
+derived from ``(engine seed, request id, token index)`` via ``fold_in``,
+never from a per-tick batch key, so temperature>0 outputs are identical
+across slot assignments, preemption/resume, and streaming-vs-``run()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.backend import SlotBackend
+from repro.serving.request import (Request, RequestOutput, RequestState,
+                                   StepOutput)
+from repro.serving.scheduler import PREFILL, Scheduler, Slot
+
+__all__ = ["EngineCore", "EngineFns", "EngineStats", "request_key",
+           "sample_rows"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate serving metrics for one core lifetime (one ``run`` /
+    ``stream`` call of a facade engine).
+
+    ``slot_steps`` counts slot-rows swept by decode steps (steps x slots);
+    ``useful_slot_steps`` counts the ones that emitted a token for a live
+    request. Their gap is the padding waste continuous batching removes.
+    ``generated_tokens`` splits into ``prefill_sampled_tokens`` (the token
+    sampled from each admission's last-prompt logits — no decode step
+    spent) and ``decode_tokens`` (one decode step each), so per-step
+    throughput is not inflated by prefill-time samples.
+    ``max_prefill_tokens_per_step`` is the admission-stall bound: the
+    most prefill tokens a single tick had to compute before its decode
+    could run (chunked prefill caps it near ``prefill_chunk``).
+    """
+
+    num_slots: int = 0
+    decode_steps: int = 0
+    slot_steps: int = 0
+    useful_slot_steps: int = 0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    prefill_sampled_tokens: int = 0
+    decode_tokens: int = 0
+    max_prefill_tokens_per_step: int = 0
+    wall_seconds: float = 0.0
+    # paged-pool metrics (zero on the slot pool)
+    num_pages: int = 0
+    page_step_sum: int = 0              # sum over decode steps of pages in use
+    peak_pages: int = 0
+    preemptions: int = 0
+
+    @property
+    def padding_waste(self) -> float:
+        if not self.slot_steps:
+            return 0.0
+        return 1.0 - self.useful_slot_steps / self.slot_steps
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Decode throughput: decode-generated tokens per batched decode
+        step (prefill-sampled tokens cost no decode step and are excluded
+        — counting them overstated throughput)."""
+        if not self.decode_steps:
+            return 0.0
+        return self.decode_tokens / self.decode_steps
+
+    @property
+    def page_utilization(self) -> float:
+        """Mean fraction of the page pool in use across decode steps."""
+        if not (self.decode_steps and self.num_pages):
+            return 0.0
+        return self.page_step_sum / (self.decode_steps * self.num_pages)
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "decode_steps": self.decode_steps,
+            "generated_tokens": self.generated_tokens,
+            "prefill_sampled_tokens": self.prefill_sampled_tokens,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "max_prefill_tokens_per_step": self.max_prefill_tokens_per_step,
+            "padding_waste": round(self.padding_waste, 4),
+            "tokens_per_step": round(self.tokens_per_step, 4),
+            "wall_seconds": round(self.wall_seconds, 3),
+            "wall_tokens_per_s": round(
+                self.generated_tokens / self.wall_seconds, 2)
+            if self.wall_seconds else 0.0,
+        }
+        if self.num_pages:
+            out.update({
+                "num_pages": self.num_pages,
+                "page_utilization": round(self.page_utilization, 4),
+                "peak_pages": self.peak_pages,
+                "preemptions": self.preemptions,
+            })
+        return out
+
+
+@dataclasses.dataclass
+class EngineFns:
+    """The jitted model entry points one core drives (built once per
+    facade engine; trace caches are shared across its cores).
+
+    prefill(qp, cache, tokens, positions, last_idx) -> (logits, cache)
+    prefill_chunk(qp, cache, tokens, positions) -> cache
+    decode(qp, cache, tokens, positions, temps, rids, tok_idx, seed)
+        -> (next_tokens, cache)
+    decode_paged(..., tables, slot_ids, temps, rids, tok_idx, seed)
+    sample(logits, temp, rid, tok_idx, seed) -> token
+    """
+
+    prefill: callable
+    prefill_chunk: callable
+    decode: callable
+    decode_paged: callable
+    sample: callable
+
+
+def request_key(seed_key: jax.Array, rid: jax.Array,
+                tok_idx: jax.Array) -> jax.Array:
+    """Per-token PRNG key from (engine seed, request id, token index).
+
+    Independent of slot assignment, batch composition, and tick count, so
+    sampled outputs are reproducible across scheduling decisions."""
+    return jax.random.fold_in(jax.random.fold_in(seed_key, rid), tok_idx)
+
+
+def sample_rows(logits: jax.Array, temps: jax.Array, rids: jax.Array,
+                tok_idx: jax.Array, seed_key: jax.Array) -> jax.Array:
+    """Per-row greedy/temperature sampling. logits (B, V), temps (B,)."""
+    greedy = jnp.argmax(logits, axis=-1)
+    keys = jax.vmap(request_key, in_axes=(None, 0, 0))(seed_key, rids,
+                                                       tok_idx)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+
+class EngineCore:
+    """Step-driven request engine over one cache pool.
+
+    Requests arrive at any tick via :meth:`add_request`; every
+    :meth:`step` surfaces the tokens it produced. Construction is cheap —
+    the jitted functions are built (and their traces cached) by the
+    facade engine and shared across cores.
+    """
+
+    def __init__(self, fns: EngineFns, qparams, cfg: ModelConfig,
+                 cache_backend: Optional[SlotBackend] = None,
+                 num_slots: int = 4, max_len: int = 512, seed: int = 0,
+                 continuous: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 bucket_prompts: bool = False):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.fns = fns
+        self.qparams = qparams
+        self.cfg = cfg
+        self.backend = cache_backend or SlotBackend()
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.continuous = continuous
+        self.prefill_chunk = prefill_chunk
+        self.bucket_prompts = bucket_prompts
+        self.sched = Scheduler(num_slots, max_len)
+        self.pool = self.backend.make_pool(cfg, num_slots, max_len)
+        self.stats = EngineStats(num_slots=num_slots,
+                                 num_pages=getattr(self.pool, "usable_pages",
+                                                   0))
+        self.states: Dict[int, RequestState] = {}
+        self._seed_key = jax.random.PRNGKey(seed)
+        self._next_id = 0
+        self._tick_prefill = 0
+        self._t0: Optional[float] = None    # starts at the first tick, so
+        # a step-driven core's idle time never dilutes its throughput
+
+    # -- public API --------------------------------------------------------
+
+    def add_request(self, request) -> int:
+        """Queue a request (any tick); returns its resolved request id.
+
+        Accepts a :class:`GenerationRequest` or a legacy :class:`Request`
+        (converted). An explicit ``request_id`` pins the PRNG stream;
+        otherwise the next monotonic id is assigned.
+        """
+        if isinstance(request, Request):
+            request = request.to_generation_request()
+        rid = request.request_id
+        if rid is None:
+            rid = self._next_id
+        if rid in self.states:
+            raise ValueError(f"duplicate request_id {rid}")
+        self._next_id = max(self._next_id, rid + 1)
+        state = RequestState(request=request, rid=rid)
+        self.backend.check_capacity(
+            self.pool, state.prompt_len + state.sampling.max_new_tokens)
+        self.sched.submit(state)        # validates lengths, stamps submit
+        self.states[rid] = state
+        return rid
+
+    def pop_request(self, rid: int) -> RequestState:
+        """Remove and return a *finished* request's state.
+
+        ``states`` retains every request so ``run()``/``stream()`` can
+        read results back; a long-lived core serving an open-ended stream
+        should pop each request once its results are consumed, or the
+        map grows without bound."""
+        state = self.states[rid]
+        if not state.done:
+            raise ValueError(f"request {rid} is still in flight")
+        return self.states.pop(rid)
+
+    def has_unfinished(self) -> bool:
+        return self.sched.has_work()
+
+    def step(self) -> StepOutput:
+        """Advance the engine by one tick; returns the tokens it emitted."""
+        tick = self.sched.step
+        if self._t0 is None:
+            self._t0 = time.time()
+        self._tick_prefill = 0
+        deltas: Dict[int, RequestOutput] = {}
+        # admission: continuous mode refills any free slot every tick;
+        # the static baseline waits for the whole gang to drain
+        if self.continuous or self.sched.all_idle():
+            self._admit(deltas)
+        self._advance_chunked_prefills(deltas)
+        active = self.sched.active()
+        if active:
+            self._decode_tick(deltas, active)
+        self.sched.step += 1
+        self.stats.max_prefill_tokens_per_step = max(
+            self.stats.max_prefill_tokens_per_step, self._tick_prefill)
+        self.stats.wall_seconds = time.time() - self._t0
+        return StepOutput(step=tick, outputs=list(deltas.values()))
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, deltas: Dict[int, RequestOutput]) -> None:
+        gate = self.backend.admission_gate(self.pool)
+        for slot, st in self.sched.admissions(gate):
+            toks = self._prefill_token_seq(st)
+            if (self.prefill_chunk is not None
+                    and len(toks) > self.prefill_chunk):
+                # enter the chunked PREFILL phase: the partial batch-1
+                # cache rides on the slot; chunks advance each tick
+                # (starting this one) in _advance_chunked_prefills
+                slot.prefill_cache = self.pool.fresh_prefill_cache()
+                slot.prefill_pos = 0
+                continue
+            self.backend.on_admit(self.pool, slot, len(toks))
+            logits, src = self._prefill_tokens(toks)
+            self.pool.write(slot.index, src)
+            self._count_prefill(len(toks))
+            self._finish_prefill(slot, st, logits, deltas)
+
+    def _advance_chunked_prefills(self, deltas: Dict[int, RequestOutput]
+                                  ) -> None:
+        """Feed each PREFILL slot one ``prefill_chunk``-token slice."""
+        for slot in self.sched.prefilling():
+            if slot.state != PREFILL:   # preempted by an earlier reclaim
+                continue
+            st = slot.req
+            toks = self._prefill_token_seq(st)
+            start = slot.prefill_pos
+            end = min(start + self.prefill_chunk, len(toks))
+            if not self.backend.alloc_prefill_chunk(
+                    self.pool, self.sched, self.stats, slot, end):
+                continue                # the slot preempted itself
+            self._count_prefill(end - start)
+            if end < len(toks):
+                chunk = np.asarray(toks[start:end], np.int32)[None]
+                positions = np.arange(start, end, dtype=np.int32)[None]
+                slot.prefill_cache = self.fns.prefill_chunk(
+                    self.qparams, slot.prefill_cache, jnp.asarray(chunk),
+                    jnp.asarray(positions))
+                slot.prefill_pos = end
+                continue
+            # final chunk: on full-attention models, pad it to the chunk
+            # size so mixed tail lengths share one trace (the same
+            # argument as one-shot bucketing: pad writes land beyond the
+            # prompt, where the causal mask hides them until decode
+            # overwrites). Recurrent/windowed models stay exact-length.
+            pad_end = (min(start + self.prefill_chunk, self.max_len)
+                       if self.bucket_prompts else end)
+            buf = np.zeros((1, pad_end - start), np.int32)
+            buf[0, : end - start] = toks[start:end]
+            positions = np.arange(start, pad_end, dtype=np.int32)[None]
+            logits, src = self.fns.prefill(
+                self.qparams, slot.prefill_cache, jnp.asarray(buf),
+                jnp.asarray(positions), jnp.int32(end - start - 1))
+            slot.prefill_cache = None
+            self.pool.write(slot.index, src)
+            self._finish_prefill(slot, st, logits, deltas)
+
+    def _finish_prefill(self, slot: Slot, st: RequestState, logits,
+                        deltas: Dict[int, RequestOutput]) -> None:
+        if st.out_tokens:
+            # the preempted request's next token was sampled before
+            # eviction; rebuild its K/V and keep decoding
+            self.sched.resume(slot)
+            return
+        tok = int(self.fns.sample(
+            logits, jnp.float32(st.sampling.temperature), jnp.int32(st.rid),
+            jnp.int32(0), self._seed_key))
+        self.stats.prefill_sampled_tokens += 1
+        self._record(slot, tok, deltas)
+
+    def _prefill_token_seq(self, st: RequestState) -> np.ndarray:
+        """Tokens this admission must prefill (resume includes generated
+        tokens up to, not including, the last sampled one)."""
+        if st.out_tokens:
+            return np.concatenate([np.asarray(st.prompt, np.int32),
+                                   np.asarray(st.out_tokens[:-1], np.int32)])
+        return np.asarray(st.prompt, np.int32)
+
+    def _prefill_tokens(self, toks: np.ndarray):
+        """Prefill one token sequence alone; returns (last logits, cache)."""
+        p = len(toks)
+        plen = self._bucket_len(p) if self.bucket_prompts else p
+        buf = np.zeros((1, plen), np.int32)
+        buf[0, :p] = toks
+        positions = np.arange(plen, dtype=np.int32)[None]
+        cache = self.pool.fresh_prefill_cache()
+        return self.fns.prefill(self.qparams, cache, jnp.asarray(buf),
+                                jnp.asarray(positions), jnp.int32(p - 1))
+
+    def _bucket_len(self, p: int) -> int:
+        b = 16
+        while b < p:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _count_prefill(self, n: int) -> None:
+        self.stats.prefill_tokens += n
+        self._tick_prefill += n
+
+    # -- decode ------------------------------------------------------------
+
+    def _decode_tick(self, deltas: Dict[int, RequestOutput],
+                     active: List[Slot]) -> None:
+        active = self.backend.pre_decode(self.pool, self.sched, self.stats,
+                                         active)
+        if not active:
+            return
+        m, rows, extra = self.backend.decode_rows(self.pool, active,
+                                                  self.num_slots)
+        last = np.zeros((m, 1), np.int32)
+        # inert rows: the paged write drops pos < 0; the slot pool's
+        # harmless pos-0 write is fully overwritten at the next admission
+        pos = np.full((m, 1), -1 if self.backend.paged else 0, np.int32)
+        temps = np.zeros((m,), np.float32)
+        rids = np.zeros((m,), np.int32)
+        tok_idx = np.zeros((m,), np.int32)
+        for i, s in rows.items():
+            last[i, 0] = s.last_token
+            pos[i, 0] = s.next_pos
+            temps[i] = s.req.sampling.temperature
+            rids[i] = s.req.rid
+            tok_idx[i] = len(s.req.out_tokens)
+        args = [self.qparams, self.pool.cache, jnp.asarray(last),
+                jnp.asarray(pos)]
+        if extra:
+            args += [jnp.asarray(extra["tables"]),
+                     jnp.asarray(extra["slot_ids"])]
+        fn = getattr(self.fns, self.backend.decode_fn)
+        nxt, self.pool.cache = fn(*args, jnp.asarray(temps),
+                                  jnp.asarray(rids), jnp.asarray(tok_idx),
+                                  self._seed_key)
+        nxt = np.asarray(nxt)
+        self.stats.decode_steps += 1
+        # rows the decode launch actually swept: the full slot count, or
+        # the bucket width when ragged decode shrank the launch
+        self.stats.slot_steps += m
+        self.stats.useful_slot_steps += len(active)
+        self.stats.decode_tokens += len(active)
+        in_use = getattr(self.pool, "pages_in_use", 0)
+        self.stats.page_step_sum += in_use
+        self.stats.peak_pages = max(self.stats.peak_pages, in_use)
+        for i, s in rows.items():
+            self._record(s, int(nxt[i]), deltas)
+
+    # -- bookkeeping -------------------------------------------------------
+
+    def _record(self, slot: Slot, token: int,
+                deltas: Dict[int, RequestOutput]) -> bool:
+        """Append one emitted token to the request and this tick's delta;
+        on completion, release the cache row/pages and free the slot."""
+        st = slot.req
+        finished = self.sched.record_token(slot, token)
+        ro = deltas.get(st.rid)
+        if ro is None:
+            ro = deltas[st.rid] = RequestOutput(request_id=st.rid,
+                                                new_tokens=[],
+                                                num_generated=0)
+        ro.new_tokens.append(token)
+        ro.num_generated = len(st.out_tokens)
+        self.stats.generated_tokens += 1
+        if finished:
+            ro.finished = True
+            ro.finish_reason = st.finish_reason
+            self.pool.release(slot.index)
+            self.sched.free(slot)
+        return finished

@@ -1,136 +1,116 @@
-"""Continuous-batching serving engine over the ARCQuant quantized model.
+"""Serving facades over the step-driven ``EngineCore``.
 
 Flow (paper Figure 5, deployment side):
   1. offline: calibrate -> plans -> quantize weights (packed NVFP4, ARC-
      augmented along K)
-  2. admission: each queued request is prefilled alone (exact prompt
-     length, or a power-of-two bucket for pure-attention models) into a
-     batch-1 cache that is then installed into the pool — a slot-row
-     overwrite (``SlotCacheManager``) or a page scatter through the
-     request's block table (``PagedCacheManager``)
-  3. decode: one batched ``_decode`` step per tick over every DECODE slot
+  2. admission: each queued request is prefilled — in one shot, or in
+     ``prefill_chunk``-token slices spread across ticks — into a batch-1
+     cache that is then installed into the pool: a slot-row overwrite
+     (``SlotCacheManager``) or a page scatter through the request's
+     block table (``PagedCacheManager``)
+  3. decode: one batched decode step per tick over every DECODE slot
      (fused online activation quantization + unified GEMMs), greedy or
      per-request temperature sampling at per-slot positions
 
 The jitted functions are static-shaped and scheduling state never enters
-a trace. The Python-side ``Scheduler`` swaps finished rows for queued
-requests *between* decode steps (slot lifecycle FREE -> PREFILL ->
-DECODE -> DONE -> FREE), so a short request's slot is reused immediately
-instead of idling as padding until the batch's slowest member finishes.
+a trace; all dynamic bookkeeping lives in the Python-side ``EngineCore``
+(see ``core.py``). The facades here differ only in admission policy and
+cache backend:
 
-Engines:
   * ``ServingEngine`` — continuous batching over the slot-row pool (every
     slot reserves ``max_len`` positions).
   * ``StaticBatchEngine`` — gang-scheduled baseline (admission only when
     every slot is idle); what ``benchmarks/continuous_batching.py``
     measures padding waste against.
-  * ``PagedServingEngine`` — continuous batching over the paged K/V pool:
-    admission is gated on free pages (FIFO head-of-line), the tail page
-    is allocated on demand as decode crosses block boundaries, and when
-    the pool runs dry the latest-admitted request is preempted (pages
-    reclaimed, request re-queued at the front and later re-prefilled from
-    its own tokens). Block tables ride into the jitted decode as a
-    ``(batch, max_blocks)`` int32 input. With ``decode_buckets=True`` the
-    decode batch is the active-request count rounded up to a power of two
-    instead of the full slot count (ragged decode: compute scales with
-    load; one retrace per bucket size).
+  * ``PagedServingEngine`` — continuous batching over the paged K/V pool
+    (block tables, on-demand page allocation, preemption + exact-
+    recompute resume, optional ragged ``decode_buckets``).
+
+Each facade offers three entry points:
+
+  * ``make_core()`` — a fresh :class:`EngineCore` for step-driven use
+    (``add_request`` at any tick, ``step()`` per tick).
+  * ``stream(requests)`` — generator yielding per-request
+    :class:`RequestOutput` token deltas as each tick produces them.
+  * ``run(requests)`` — batch-blocking compatibility wrapper: drives
+    ``step()`` to completion and returns the legacy ``Request`` records
+    with results filled in, exactly as before the redesign.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List
+from typing import Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FULL_ATTN, ModelConfig, QuantConfig
 from repro.models import lm
 from repro.models.lm import PlanBundle
-from repro.serving.cache_manager import PagedCacheManager, SlotCacheManager
-from repro.serving.scheduler import DECODE, Request, Scheduler, Slot
+from repro.serving.backend import PagedBackend, SlotBackend
+from repro.serving.core import (EngineCore, EngineFns, EngineStats,
+                                sample_rows)
+from repro.serving.request import GenerationRequest, Request, RequestOutput
 
 __all__ = ["EngineStats", "PagedServingEngine", "Request", "ServingEngine",
            "StaticBatchEngine"]
 
 
-@dataclasses.dataclass
-class EngineStats:
-    """Aggregate serving metrics for one ``run`` call.
+def _build_fns(cfg: ModelConfig, quant: QuantConfig,
+               plans: Optional[PlanBundle]) -> EngineFns:
+    """Jit the model entry points one engine's cores share."""
 
-    ``slot_steps`` counts slot-rows swept by decode steps (steps x slots);
-    ``useful_slot_steps`` counts the ones that emitted a token for a live
-    request. Their gap is the padding waste continuous batching removes.
-    ``generated_tokens`` splits into ``prefill_sampled_tokens`` (the token
-    sampled from each admission's last-prompt logits — no decode step
-    spent) and ``decode_tokens`` (one decode step each), so per-step
-    throughput is not inflated by prefill-time samples.
-    """
+    def prefill(qp, cache, tokens, positions, last_idx):
+        logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
+                                      positions=positions, cache=cache,
+                                      quant=quant, plans=plans)
+        return logits[0, last_idx], cache
 
-    num_slots: int = 0
-    decode_steps: int = 0
-    slot_steps: int = 0
-    useful_slot_steps: int = 0
-    prefill_tokens: int = 0
-    generated_tokens: int = 0
-    prefill_sampled_tokens: int = 0
-    decode_tokens: int = 0
-    wall_seconds: float = 0.0
-    # paged-pool metrics (zero on the slot pool)
-    num_pages: int = 0
-    page_step_sum: int = 0              # sum over decode steps of pages in use
-    peak_pages: int = 0
-    preemptions: int = 0
+    def prefill_chunk(qp, cache, tokens, positions):
+        return lm.prefill_chunk(qp, cfg, tokens=tokens, positions=positions,
+                                cache=cache, quant=quant, plans=plans)
 
-    @property
-    def padding_waste(self) -> float:
-        if not self.slot_steps:
-            return 0.0
-        return 1.0 - self.useful_slot_steps / self.slot_steps
+    def decode(qp, cache, tokens, positions, temps, rids, tok_idx, seed):
+        logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
+                                      positions=positions, cache=cache,
+                                      quant=quant, plans=plans)
+        lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
+        nxt = sample_rows(lg, temps, rids, tok_idx, seed)
+        return nxt, cache
 
-    @property
-    def tokens_per_step(self) -> float:
-        """Decode throughput: decode-generated tokens per batched decode
-        step (prefill-sampled tokens cost no decode step and are excluded
-        — counting them overstated throughput)."""
-        if not self.decode_steps:
-            return 0.0
-        return self.decode_tokens / self.decode_steps
+    def decode_paged(qp, cache, tokens, positions, tables, slot_ids, temps,
+                     rids, tok_idx, seed):
+        logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
+                                      positions=positions, cache=cache,
+                                      quant=quant, plans=plans,
+                                      block_tables=tables, slot_ids=slot_ids)
+        lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
+        nxt = sample_rows(lg, temps, rids, tok_idx, seed)
+        return nxt, cache
 
-    @property
-    def page_utilization(self) -> float:
-        """Mean fraction of the page pool in use across decode steps."""
-        if not (self.decode_steps and self.num_pages):
-            return 0.0
-        return self.page_step_sum / (self.decode_steps * self.num_pages)
+    def sample(logits, temp, rid, tok_idx, seed):
+        lg = logits[: cfg.vocab_size].astype(jnp.float32)
+        return sample_rows(lg[None], temp[None], rid[None], tok_idx[None],
+                           seed)[0]
 
-    def summary(self) -> Dict[str, float]:
-        out = {
-            "decode_steps": self.decode_steps,
-            "generated_tokens": self.generated_tokens,
-            "prefill_sampled_tokens": self.prefill_sampled_tokens,
-            "decode_tokens": self.decode_tokens,
-            "prefill_tokens": self.prefill_tokens,
-            "padding_waste": round(self.padding_waste, 4),
-            "tokens_per_step": round(self.tokens_per_step, 4),
-            "wall_seconds": round(self.wall_seconds, 3),
-            "wall_tokens_per_s": round(
-                self.generated_tokens / self.wall_seconds, 2)
-            if self.wall_seconds else 0.0,
-        }
-        if self.num_pages:
-            out.update({
-                "num_pages": self.num_pages,
-                "page_utilization": round(self.page_utilization, 4),
-                "peak_pages": self.peak_pages,
-                "preemptions": self.preemptions,
-            })
-        return out
+    return EngineFns(
+        prefill=jax.jit(prefill, donate_argnums=(1,)),
+        prefill_chunk=jax.jit(prefill_chunk, donate_argnums=(1,)),
+        decode=jax.jit(decode, donate_argnums=(1,)),
+        decode_paged=jax.jit(decode_paged, donate_argnums=(1,)),
+        sample=jax.jit(sample),
+    )
 
 
 class ServingEngine:
-    """Continuous-batching engine: ``batch_size`` slots over one cache pool."""
+    """Continuous-batching engine: ``batch_size`` slots over one cache
+    pool, served by a step-driven :class:`EngineCore` per call.
+
+    ``prefill_chunk`` bounds the admission stall: prompts longer than the
+    chunk prefill in ``prefill_chunk``-token slices across ticks instead
+    of serializing their whole prefill in front of one tick's decode
+    (``None`` keeps one-shot prefill).
+    """
 
     continuous = True
     paged = False
@@ -139,7 +119,8 @@ class ServingEngine:
                  plans: PlanBundle | None, batch_size: int = 4,
                  max_len: int = 512, seed: int = 0,
                  act_scale: str = "calibrated", backend: str | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 prefill_chunk: int | None = None):
         # activation FP32 scales must not see a request's batch company, or
         # swapping a finished slot for a new request would perturb every
         # other in-flight generation. "calibrated" (static per-layer scales
@@ -161,169 +142,74 @@ class ServingEngine:
         self.batch_size = batch_size
         self.max_len = max_len
         self.seed = seed
+        self.prefill_chunk = prefill_chunk
         self.last_stats = EngineStats()
-        # prompt-length bucketing pads prefill up to a power of two, which
-        # bounds compile count. Right-padding is exact for full attention
-        # (pad writes land at positions the causal mask hides and decode
-        # later overwrites) but would pollute ring buffers and recurrent
-        # state, so windowed/SSM/hybrid models prefill at exact length.
+        # prompt-length bucketing pads one-shot prefill up to a power of
+        # two, which bounds compile count. Right-padding is exact for full
+        # attention (pad writes land at positions the causal mask hides and
+        # decode later overwrites) but would pollute ring buffers and
+        # recurrent state, so windowed/SSM/hybrid models prefill at exact
+        # length. Chunked prefill always runs exact-length chunks.
         self._bucket_prompts = all(m == FULL_ATTN for m in cfg.mixer_pattern)
+        self.fns = _build_fns(cfg, quant, plans)
+        self.cache_backend = self._make_backend()
 
-        def prefill(qp, cache, tokens, positions, last_idx):
-            logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
-                                          positions=positions, cache=cache,
-                                          quant=quant, plans=plans)
-            return logits[0, last_idx], cache
-
-        def decode(qp, cache, tokens, positions, temps, key):
-            logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
-                                          positions=positions, cache=cache,
-                                          quant=quant, plans=plans)
-            lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
-            nxt = _sample_batch(lg, temps, key)
-            return nxt, cache
-
-        def decode_paged(qp, cache, tokens, positions, tables, slot_ids,
-                         temps, key):
-            logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
-                                          positions=positions, cache=cache,
-                                          quant=quant, plans=plans,
-                                          block_tables=tables,
-                                          slot_ids=slot_ids)
-            lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
-            nxt = _sample_batch(lg, temps, key)
-            return nxt, cache
-
-        def sample(logits, temp, key):
-            lg = logits[: cfg.vocab_size].astype(jnp.float32)
-            return _sample_batch(lg[None], temp[None], key)[0]
-
-        self._prefill = jax.jit(prefill, donate_argnums=(1,))
-        self._decode = jax.jit(decode, donate_argnums=(1,))
-        self._decode_paged = jax.jit(decode_paged, donate_argnums=(1,))
-        self._sample = jax.jit(sample)
+    def _make_backend(self) -> SlotBackend:
+        return SlotBackend()
 
     # -- public API --------------------------------------------------------
 
+    def make_core(self, prefill_chunk: int | None = None) -> EngineCore:
+        """A fresh step-driven core over a new cache pool. Jit trace
+        caches are shared across cores of the same engine.
+        ``prefill_chunk`` overrides the engine default for this core
+        (``0`` forces one-shot prefill, as in the CLIs)."""
+        if prefill_chunk is None:
+            chunk = self.prefill_chunk
+        else:
+            chunk = prefill_chunk or None   # 0 -> one-shot
+        return EngineCore(self.fns, self.qparams, self.cfg,
+                          cache_backend=self.cache_backend,
+                          num_slots=self.batch_size, max_len=self.max_len,
+                          seed=self.seed, continuous=self.continuous,
+                          prefill_chunk=chunk,
+                          bucket_prompts=self._bucket_prompts)
+
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve ``requests`` to completion; fills per-request metrics."""
-        t0 = time.time()
-        sched = Scheduler(self.batch_size, self.max_len)
-        pool = self._make_pool()
-        stats = EngineStats(num_slots=self.batch_size,
-                            num_pages=getattr(pool, "usable_pages", 0))
-        key = jax.random.PRNGKey(self.seed)
-        for r in requests:
-            self._check_capacity(pool, r)
-            sched.submit(r)
+        """Serve ``requests`` to completion (compatibility wrapper).
 
-        while sched.has_work():
-            # admission: continuous mode refills any free slot every tick;
-            # the static baseline waits for the whole gang to drain
-            if self.continuous or sched.all_idle():
-                key = self._admit(sched, pool, stats, key)
-            active = sched.active()
-            if not active:
-                continue    # everything admitted finished at prefill
-            key = self._decode_tick(sched, pool, stats, active, key)
-
-        stats.generated_tokens = sum(len(r.out_tokens) for r in requests)
-        stats.wall_seconds = time.time() - t0
-        self.last_stats = stats
+        Drives a core's ``step()`` until every request finishes and
+        copies results back into the legacy records, reconstituting the
+        pre-redesign return shape.
+        """
+        core = self.make_core()
+        self.last_stats = core.stats        # mutated in place per tick
+        rids = [core.add_request(r.to_generation_request()) for r in requests]
+        while core.has_unfinished():
+            core.step()
+        for rid, r in zip(rids, requests):
+            r.absorb(core.states[rid])
         return requests
 
-    # -- admission ---------------------------------------------------------
-
-    def _admit(self, sched: Scheduler, pool, stats: EngineStats, key):
-        for slot, req in sched.admissions(self._admission_gate(pool)):
-            resumed = bool(req.out_tokens)
-            toks = (np.concatenate([np.asarray(req.prompt, np.int32),
-                                    np.asarray(req.out_tokens[:-1],
-                                               np.int32)])
-                    if resumed else np.asarray(req.prompt, np.int32))
-            self._pool_admit(pool, slot, len(toks))
-            logits, src = self._prefill_tokens(toks, pool)
-            pool.write(slot.index, src)
-            stats.prefill_tokens += len(toks)
-            if resumed:
-                # the preempted request's next token was sampled before
-                # eviction; rebuild its K/V and keep decoding
-                sched.resume(slot)
-                continue
-            key, kp = jax.random.split(key)
-            tok = int(self._sample(logits, jnp.float32(req.temperature), kp))
-            stats.prefill_sampled_tokens += 1
-            if sched.record_token(slot, tok):
-                pool.release(slot.index)
-                sched.free(slot)
-        return key
-
-    def _admission_gate(self, pool):
-        return None                     # slot pool: a FREE slot suffices
-
-    def _pool_admit(self, pool, slot: Slot, prefill_len: int) -> None:
-        pass                            # slot pool: the row already exists
-
-    def _check_capacity(self, pool, req: Request) -> None:
-        pass                            # Scheduler.submit enforces max_len
-
-    # -- decode ------------------------------------------------------------
-
-    def _decode_tick(self, sched: Scheduler, pool, stats: EngineStats,
-                     active: List[Slot], key):
-        B = self.batch_size
-        last = np.zeros((B, 1), np.int32)
-        pos = np.zeros((B, 1), np.int32)
-        temps = np.zeros((B,), np.float32)
-        for s in active:
-            last[s.index, 0] = s.last_token
-            pos[s.index, 0] = s.next_pos
-            temps[s.index] = s.request.temperature
-        key, kd = jax.random.split(key)
-        nxt, pool.cache = self._decode(
-            self.qparams, pool.cache, jnp.asarray(last), jnp.asarray(pos),
-            jnp.asarray(temps), kd)
-        nxt = np.asarray(nxt)
-        self._finish_tick(sched, pool, stats, active,
-                          {s.index: int(nxt[s.index]) for s in active})
-        return key
-
-    def _finish_tick(self, sched: Scheduler, pool, stats: EngineStats,
-                     active: List[Slot], tokens: Dict[int, int],
-                     swept: int | None = None) -> None:
-        sched.step += 1
-        stats.decode_steps += 1
-        # rows the decode launch actually swept: the full slot count, or
-        # the bucket width when ragged decode shrank the launch
-        stats.slot_steps += self.batch_size if swept is None else swept
-        stats.useful_slot_steps += len(active)
-        stats.decode_tokens += len(active)
-        for s in active:
-            if sched.record_token(s, tokens[s.index]):
-                pool.release(s.index)
-                sched.free(s)
-
-    # -- internals ---------------------------------------------------------
-
-    def _make_pool(self):
-        return SlotCacheManager(self.cfg, self.batch_size, self.max_len)
-
-    def _prefill_tokens(self, toks: np.ndarray, pool):
-        """Prefill one token sequence alone; returns (last logits, cache)."""
-        p = len(toks)
-        plen = self._bucket_len(p) if self._bucket_prompts else p
-        buf = np.zeros((1, plen), np.int32)
-        buf[0, :p] = toks
-        positions = np.arange(plen, dtype=np.int32)[None]
-        cache = pool.fresh_prefill_cache()
-        return self._prefill(self.qparams, cache, jnp.asarray(buf),
-                             jnp.asarray(positions), jnp.int32(p - 1))
-
-    def _bucket_len(self, p: int) -> int:
-        b = 16
-        while b < p:
-            b *= 2
-        return min(b, self.max_len)
+    def stream(self, requests: Iterable[Request | GenerationRequest]
+               ) -> Iterator[RequestOutput]:
+        """Serve ``requests``, yielding per-request token deltas as each
+        tick emits them (``RequestOutput.new_tokens``). Legacy ``Request``
+        records get their results absorbed as they finish. For mid-flight
+        submission drive a ``make_core()`` directly."""
+        core = self.make_core()
+        self.last_stats = core.stats        # mutated in place per tick, so
+        # stats stay truthful even when the consumer breaks out early
+        legacy = {}
+        for r in requests:
+            rid = core.add_request(r)
+            if isinstance(r, Request):
+                legacy[rid] = r
+        while core.has_unfinished():
+            for ro in core.step().outputs:
+                if ro.finished and ro.request_id in legacy:
+                    legacy[ro.request_id].absorb(core.states[ro.request_id])
+                yield ro
 
 
 class StaticBatchEngine(ServingEngine):
@@ -342,6 +228,8 @@ class PagedServingEngine(ServingEngine):
     oversubscribe memory, more slots to raise concurrency in the same
     bytes. ``decode_buckets=True`` shrinks each decode launch to the
     active-request count rounded up to a power of two (ragged decode).
+    Chunked prefill allocates each chunk's pages as the prompt cursor
+    advances.
     """
 
     paged = True
@@ -349,107 +237,12 @@ class PagedServingEngine(ServingEngine):
     def __init__(self, *args, num_pages: int | None = None,
                  block_size: int = 16, decode_buckets: bool = False,
                  **kwargs):
-        super().__init__(*args, **kwargs)
         self.num_pages = num_pages
         self.block_size = block_size
         self.decode_buckets = decode_buckets
+        super().__init__(*args, **kwargs)
 
-    def _make_pool(self):
-        return PagedCacheManager(self.cfg, self.batch_size, self.max_len,
-                                 num_pages=self.num_pages,
-                                 block_size=self.block_size)
-
-    def _admission_gate(self, pool):
-        # admissions() gates the whole batch before the engine allocates
-        # any pages, so the gate must reserve as it approves: otherwise
-        # two requests could both pass against the same free pages
-        reserved = 0
-
-        def gate(req):
-            nonlocal reserved
-            if not pool.can_admit(req.resume_prefill_len, reserved):
-                return False
-            # reserve the first decode write's block too (what can_admit
-            # checked) or a same-tick admission could take it and force an
-            # immediate preemption
-            reserved += pool.blocks_for(req.resume_prefill_len + 1)
-            return True
-
-        return gate
-
-    def _pool_admit(self, pool, slot: Slot, prefill_len: int) -> None:
-        pool.allocate_prefill(slot.index, prefill_len)
-
-    def _check_capacity(self, pool, req: Request) -> None:
-        pool.check_capacity(req.prompt_len + req.max_new_tokens)
-
-    def _decode_tick(self, sched: Scheduler, pool, stats: EngineStats,
-                     active: List[Slot], key):
-        active = self._ensure_pages(sched, pool, stats, active)
-        if not active:
-            return key
-        m = (_bucket_pow2(len(active), self.batch_size)
-             if self.decode_buckets else self.batch_size)
-        last = np.zeros((m, 1), np.int32)
-        pos = np.full((m, 1), -1, np.int32)    # -1 rows are inert
-        temps = np.zeros((m,), np.float32)
-        tables = np.zeros((m, pool.max_blocks), np.int32)
-        slot_ids = np.full((m,), self.batch_size, np.int32)  # OOB = padding
-        read_tables = pool.read_tables()
-        rows = ({i: s for i, s in enumerate(active)} if self.decode_buckets
-                else {s.index: s for s in active})
-        for i, s in rows.items():
-            last[i, 0] = s.last_token
-            pos[i, 0] = s.next_pos
-            temps[i] = s.request.temperature
-            tables[i] = read_tables[s.index]
-            slot_ids[i] = s.index
-        key, kd = jax.random.split(key)
-        nxt, pool.cache = self._decode_paged(
-            self.qparams, pool.cache, jnp.asarray(last), jnp.asarray(pos),
-            jnp.asarray(tables), jnp.asarray(slot_ids), jnp.asarray(temps),
-            kd)
-        nxt = np.asarray(nxt)
-        stats.page_step_sum += pool.pages_in_use
-        stats.peak_pages = max(stats.peak_pages, pool.pages_in_use)
-        self._finish_tick(sched, pool, stats, active,
-                          {s.index: int(nxt[i]) for i, s in rows.items()},
-                          swept=m)
-        return key
-
-    def _ensure_pages(self, sched: Scheduler, pool, stats: EngineStats,
-                      active: List[Slot]) -> List[Slot]:
-        """Allocate each active slot's tail page, preempting the latest-
-        admitted request when the pool is exhausted."""
-        for s in active:
-            if s.state != DECODE:       # already preempted this tick
-                continue
-            block = s.next_pos // pool.block_size
-            while not pool.ensure(s.index, block):
-                victims = [v for v in active
-                           if v.state == DECODE and v is not s]
-                victim = (max(victims, key=lambda v: v.request.admit_step)
-                          if victims else s)
-                pool.release(victim.index)
-                sched.preempt(victim)
-                stats.preemptions += 1
-                if victim is s:
-                    break
-        return [s for s in active if s.state == DECODE]
-
-
-def _bucket_pow2(n: int, cap: int) -> int:
-    b = 1
-    while b < n:
-        b *= 2
-    return min(b, cap)
-
-
-def _sample_batch(logits: jax.Array, temps: jax.Array,
-                  key: jax.Array) -> jax.Array:
-    """Per-row greedy/temperature sampling. logits (B, V), temps (B,)."""
-    greedy = jnp.argmax(logits, axis=-1)
-    keys = jax.random.split(key, logits.shape[0])
-    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
-    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
-    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+    def _make_backend(self) -> PagedBackend:
+        return PagedBackend(num_pages=self.num_pages,
+                            block_size=self.block_size,
+                            decode_buckets=self.decode_buckets)

@@ -1,0 +1,215 @@
+"""Request/response types for the step-driven serving API.
+
+The old ``Request`` dataclass mixed immutable inputs with engine-owned
+mutable state; the step-driven core splits them:
+
+  * :class:`SamplingParams` + :class:`GenerationRequest` — what the
+    caller submits. Immutable; safe to share and resubmit.
+  * :class:`RequestState` — engine-owned progress: generated tokens,
+    finish reason, tick-clock metrics, preemption count. Owned by one
+    ``EngineCore``; callers read it, never mutate it.
+  * :class:`RequestOutput` / :class:`StepOutput` — what one engine tick
+    surfaces: the per-request token *delta* produced by that tick, so a
+    caller can stream tokens as they are emitted.
+  * :class:`Request` — the legacy record the batch-blocking ``run()``
+    compatibility wrapper still accepts and returns (inputs and results
+    in one object, as before the redesign).
+
+Metrics are in *ticks* of the engine clock (one ``EngineCore.step()``
+call each). They are ``None`` until the underlying event has happened —
+a never-admitted request has no queue wait, an unfinished one no
+latency — instead of the nonsense negatives the old properties returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+# finish reasons surfaced on RequestOutput / RequestState
+FINISH_LENGTH = "length"            # hit max_new_tokens
+FINISH_EOS = "eos"                  # sampled the request's eos_token
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How to sample and when to stop. Immutable and shareable."""
+
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    temperature: float = 0.0        # 0 -> greedy
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GenerationRequest:
+    """Immutable generation inputs: prompt tokens + sampling params.
+
+    ``request_id`` may be supplied by the caller (it seeds the request's
+    PRNG stream, so pinning it makes temperature>0 traces reproducible
+    across runs and batch compositions); when ``None`` the core assigns
+    the next monotonic id at ``add_request``.
+    """
+
+    prompt: np.ndarray              # (prompt_len,) int32
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    request_id: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+class _TickMetrics:
+    """Guarded tick-clock metrics shared by RequestState and the legacy
+    Request record. Each returns ``None`` until its event happened."""
+
+    submit_step: int
+    admit_step: int
+    first_token_step: int
+    finish_step: int
+
+    @property
+    def queue_wait_steps(self) -> Optional[int]:
+        """Ticks spent queued before (last) admission; None if never
+        admitted."""
+        if self.submit_step < 0 or self.admit_step < 0:
+            return None
+        return self.admit_step - self.submit_step
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        """Ticks from submission to the first emitted token; None until a
+        token has been emitted."""
+        if self.submit_step < 0 or self.first_token_step < 0:
+            return None
+        return self.first_token_step - self.submit_step
+
+    @property
+    def latency_steps(self) -> Optional[int]:
+        """Ticks from submission to completion; None while unfinished."""
+        if self.submit_step < 0 or self.finish_step < 0:
+            return None
+        return self.finish_step - self.submit_step
+
+
+@dataclasses.dataclass
+class RequestState(_TickMetrics):
+    """Engine-owned progress of one request.
+
+    Created by ``EngineCore.add_request``; mutated only by the scheduler
+    and core. ``rid`` is the resolved request id (explicit or assigned)
+    and seeds the request's PRNG stream.
+    """
+
+    request: GenerationRequest
+    rid: int = -1
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_reason: Optional[str] = None
+    # tick-clock metrics (-1 = not yet)
+    submit_step: int = -1
+    admit_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
+    preemptions: int = 0            # times evicted to free cache pages
+
+    @property
+    def sampling(self) -> SamplingParams:
+        return self.request.sampling
+
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.request.prompt
+
+    @property
+    def prompt_len(self) -> int:
+        return self.request.prompt_len
+
+    @property
+    def resume_prefill_len(self) -> int:
+        """Tokens a (re-)admission must prefill: the prompt plus every
+        generated token except the last, which is fed at the next decode
+        step (fresh requests: just the prompt)."""
+        return self.prompt_len + max(len(self.out_tokens) - 1, 0)
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One request's progress surfaced by one engine tick.
+
+    ``new_tokens`` is the *delta* — only the tokens this tick emitted
+    (normally one; the tick that finishes chunked prefill emits the
+    prefill-sampled token). Concatenating every tick's ``new_tokens``
+    reproduces the request's full ``out_tokens``.
+    """
+
+    request_id: int
+    new_tokens: List[int]
+    num_generated: int              # cumulative tokens so far
+    finished: bool = False
+    finish_reason: Optional[str] = None
+
+
+@dataclasses.dataclass
+class StepOutput:
+    """Everything one ``EngineCore.step()`` tick produced."""
+
+    step: int                       # tick index that produced these
+    outputs: List[RequestOutput]    # one entry per request that emitted
+
+    def __bool__(self) -> bool:
+        return bool(self.outputs)
+
+
+@dataclasses.dataclass
+class Request(_TickMetrics):
+    """Legacy batch-API record: inputs and results in one object.
+
+    Accepted and returned by the engines' ``run()`` compatibility
+    wrapper, which converts it to a :class:`GenerationRequest` on the way
+    in and copies the :class:`RequestState` results back on the way out.
+    New code should submit :class:`GenerationRequest` to an
+    ``EngineCore`` (or ``stream()``) instead.
+    """
+
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    temperature: float = 0.0        # 0 -> greedy
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_reason: Optional[str] = None
+    # per-request metrics, in ticks of the engine clock (-1 = not yet;
+    # the guarded _TickMetrics properties return None until then)
+    submit_step: int = -1
+    admit_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
+    preemptions: int = 0            # times evicted to free cache pages
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    def to_generation_request(self,
+                              request_id: Optional[int] = None
+                              ) -> GenerationRequest:
+        return GenerationRequest(
+            prompt=self.prompt,
+            sampling=SamplingParams(max_new_tokens=self.max_new_tokens,
+                                    eos_token=self.eos_token,
+                                    temperature=self.temperature),
+            request_id=request_id)
+
+    def absorb(self, state: RequestState) -> None:
+        """Copy a finished (or in-flight) state's results back in."""
+        self.out_tokens = list(state.out_tokens)
+        self.done = state.done
+        self.finish_reason = state.finish_reason
+        self.submit_step = state.submit_step
+        self.admit_step = state.admit_step
+        self.first_token_step = state.first_token_step
+        self.finish_step = state.finish_step
+        self.preemptions = state.preemptions

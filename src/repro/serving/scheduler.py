@@ -4,27 +4,33 @@ The scheduler owns the dynamic state the jitted model functions must not
 see: the FIFO admission queue and the per-slot lifecycle
 
     FREE -> PREFILL -> DECODE -> DONE -> FREE
-                 ^        |
-                 +--------+   (preempt: back to the queue front)
+       ^         |        |
+       +---------+--------+   (preempt: back to the queue front)
 
 Between decode steps the engine asks for ``admissions()`` — queued
 requests paired with FREE slots — prefills each one into its cache row,
-then runs one batched decode step over every DECODE slot. Finished
-requests (EOS or per-request ``max_new_tokens``) move their slot through
-DONE back to FREE, so the next queued request takes the row over without
-waiting for the rest of the batch: no decode step is spent padding a
-short request to its batch's slowest member.
+then runs one batched decode step over every DECODE slot. With chunked
+prefill a slot *stays* in PREFILL across ticks while its prompt is fed
+in ``prefill_chunk``-token slices (``Slot.prefill_pos`` is the prompt
+cursor, ``Slot.prefill_cache`` the partial batch-1 cache the engine
+threads through the chunk passes), so a long prompt no longer serializes
+its whole prefill in front of one tick's decode. Finished requests (EOS
+or per-request ``max_new_tokens``) move their slot through DONE back to
+FREE, so the next queued request takes the row over without waiting for
+the rest of the batch.
 
 All bookkeeping here is plain Python over numpy token ids; nothing is
-traced, so scheduling decisions never trigger recompilation.
+traced, so scheduling decisions never trigger recompilation. The
+scheduler operates on engine-owned :class:`~repro.serving.request.
+RequestState` objects; immutable inputs live on ``state.request``.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+import dataclasses
+from typing import Any, Deque, List, Optional, Tuple
 
-import numpy as np
+from repro.serving.request import FINISH_EOS, FINISH_LENGTH, RequestState
 
 # slot lifecycle states
 FREE = "FREE"
@@ -34,48 +40,27 @@ DONE = "DONE"
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray                  # (prompt_len,) int32
-    max_new_tokens: int = 16
-    eos_token: Optional[int] = None
-    temperature: float = 0.0            # 0 -> greedy
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    # per-request metrics, in decode-step ticks of the engine clock
-    submit_step: int = -1
-    admit_step: int = -1
-    finish_step: int = -1
-    preemptions: int = 0                # times evicted to free cache pages
-
-    @property
-    def prompt_len(self) -> int:
-        return int(len(self.prompt))
-
-    @property
-    def resume_prefill_len(self) -> int:
-        """Tokens a (re-)admission must prefill: the prompt plus every
-        generated token except the last, which is fed at the next decode
-        step (fresh requests: just the prompt)."""
-        return self.prompt_len + max(len(self.out_tokens) - 1, 0)
-
-    @property
-    def queue_wait_steps(self) -> int:
-        return self.admit_step - self.submit_step
-
-    @property
-    def latency_steps(self) -> int:
-        return self.finish_step - self.submit_step
-
-
-@dataclasses.dataclass
 class Slot:
     """One cache row's lifecycle state."""
 
     index: int
     state: str = FREE
-    request: Optional[Request] = None
-    next_pos: int = 0                   # absolute position of next decode write
-    last_token: int = 0                 # token fed at the next decode step
+    req: Optional[RequestState] = None
+    next_pos: int = 0               # absolute position of next decode write
+    last_token: int = 0             # token fed at the next decode step
+    # chunked prefill: prompt tokens already fed, and the partial batch-1
+    # cache the engine threads through the chunk passes (None once the
+    # prefill is installed into the pool)
+    prefill_pos: int = 0
+    prefill_cache: Any = None
+
+    def clear(self) -> None:
+        self.req = None
+        self.state = FREE
+        self.next_pos = 0
+        self.last_token = 0
+        self.prefill_pos = 0
+        self.prefill_cache = None
 
 
 class Scheduler:
@@ -83,28 +68,29 @@ class Scheduler:
 
     def __init__(self, num_slots: int, max_len: int):
         self.slots = [Slot(i) for i in range(num_slots)]
-        self.queue: Deque[Request] = deque()
+        self.queue: Deque[RequestState] = deque()
         self.max_len = max_len
-        self.step = 0                   # decode-step clock
+        self.step = 0               # engine tick clock
 
     # -- queue -------------------------------------------------------------
 
-    def submit(self, request: Request) -> None:
-        if request.max_new_tokens < 1:
+    def submit(self, state: RequestState) -> None:
+        sp = state.sampling
+        if sp.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (prefill always "
                              "samples the first token)")
-        if request.prompt_len + request.max_new_tokens > self.max_len:
+        if state.prompt_len + sp.max_new_tokens > self.max_len:
             raise ValueError(
-                f"request needs {request.prompt_len + request.max_new_tokens}"
+                f"request needs {state.prompt_len + sp.max_new_tokens}"
                 f" cache positions but slots hold {self.max_len}")
-        request.submit_step = self.step
-        self.queue.append(request)
+        state.submit_step = self.step
+        self.queue.append(state)
 
-    def admissions(self, can_admit=None) -> List[Tuple[Slot, Request]]:
+    def admissions(self, can_admit=None) -> List[Tuple[Slot, RequestState]]:
         """Pair queued requests with FREE slots; marks them PREFILL.
 
-        ``can_admit(request) -> bool`` gates each admission on resource
-        availability (the paged engine passes the free-page check). The
+        ``can_admit(state) -> bool`` gates each admission on resource
+        availability (the paged backend passes the free-page check). The
         queue stays strictly FIFO: when the head request cannot be
         admitted, nothing behind it jumps ahead.
         """
@@ -115,11 +101,13 @@ class Scheduler:
             if slot.state == FREE:
                 if can_admit is not None and not can_admit(self.queue[0]):
                     break
-                req = self.queue.popleft()
-                req.admit_step = self.step
-                slot.request = req
+                st = self.queue.popleft()
+                st.admit_step = self.step
+                slot.req = st
                 slot.state = PREFILL
-                out.append((slot, req))
+                slot.prefill_pos = 0
+                slot.prefill_cache = None
+                out.append((slot, st))
         return out
 
     # -- lifecycle ---------------------------------------------------------
@@ -131,16 +119,20 @@ class Scheduler:
         logits) and once per decode step. On completion the slot moves to
         DONE; the engine releases the cache row and calls ``free()``.
         """
-        req = slot.request
-        req.out_tokens.append(token)
-        hit_eos = req.eos_token is not None and token == req.eos_token
-        if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
-            req.done = True
-            req.finish_step = self.step
+        st = slot.req
+        st.out_tokens.append(token)
+        if st.first_token_step < 0:
+            st.first_token_step = self.step
+        sp = st.sampling
+        hit_eos = sp.eos_token is not None and token == sp.eos_token
+        if hit_eos or len(st.out_tokens) >= sp.max_new_tokens:
+            st.done = True
+            st.finish_reason = FINISH_EOS if hit_eos else FINISH_LENGTH
+            st.finish_step = self.step
             slot.state = DONE
             return True
         if slot.state == PREFILL:       # first token -> start decoding
-            slot.next_pos = req.prompt_len
+            slot.next_pos = st.prompt_len
         else:
             slot.next_pos += 1
         slot.last_token = token
@@ -149,42 +141,44 @@ class Scheduler:
 
     def free(self, slot: Slot) -> None:
         assert slot.state == DONE, slot.state
-        slot.request = None
-        slot.state = FREE
-        slot.next_pos = 0
-        slot.last_token = 0
+        slot.clear()
 
-    def preempt(self, slot: Slot) -> Request:
-        """Evict a decoding request to reclaim its cache pages.
+    def preempt(self, slot: Slot) -> RequestState:
+        """Evict a request to reclaim its cache pages.
 
         The request returns to the *front* of the queue (FIFO order is
         preserved) keeping its generated tokens; re-admission prefills
         ``prompt + out_tokens[:-1]`` to rebuild the K/V it lost and then
-        resumes decoding (``resume``) without re-sampling anything.
+        resumes decoding (``resume``) without re-sampling anything. A
+        PREFILL-state victim (mid chunked prefill) simply discards its
+        partial cache and re-prefills from scratch on re-admission.
         """
-        assert slot.state == DECODE, slot.state
-        req = slot.request
-        req.preemptions += 1
-        self.queue.appendleft(req)
-        slot.request = None
-        slot.state = FREE
-        slot.next_pos = 0
-        slot.last_token = 0
-        return req
+        assert slot.state in (DECODE, PREFILL), slot.state
+        st = slot.req
+        st.preemptions += 1
+        self.queue.appendleft(st)
+        slot.clear()
+        return st
 
     def resume(self, slot: Slot) -> None:
         """Move a re-admitted (previously preempted) slot straight to
         DECODE: its next token was already sampled before eviction."""
-        req = slot.request
-        assert slot.state == PREFILL and req.out_tokens
-        slot.next_pos = req.prompt_len + len(req.out_tokens) - 1
-        slot.last_token = req.out_tokens[-1]
+        st = slot.req
+        assert slot.state == PREFILL and st.out_tokens
+        slot.next_pos = st.prompt_len + len(st.out_tokens) - 1
+        slot.last_token = st.out_tokens[-1]
         slot.state = DECODE
+        slot.prefill_pos = 0
+        slot.prefill_cache = None
 
     # -- queries -----------------------------------------------------------
 
     def active(self) -> List[Slot]:
         return [s for s in self.slots if s.state == DECODE]
+
+    def prefilling(self) -> List[Slot]:
+        """Slots mid chunked prefill (PREFILL persisting across ticks)."""
+        return [s for s in self.slots if s.state == PREFILL]
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s.state != FREE for s in self.slots)

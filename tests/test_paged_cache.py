@@ -259,45 +259,68 @@ class TestPagedCacheManager:
 # ---------------------------------------------------------------------------
 
 
+def _state(n_prompt=8, max_new=6, rid=0):
+    from repro.serving import GenerationRequest, RequestState, SamplingParams
+    return RequestState(
+        GenerationRequest(prompt=np.arange(n_prompt, dtype=np.int32),
+                          sampling=SamplingParams(max_new_tokens=max_new)),
+        rid=rid)
+
+
 class TestSchedulerPreemption:
     def _decoding_slot(self, sched, n_prompt=8, max_new=6):
-        sched.submit(Request(prompt=np.arange(n_prompt, dtype=np.int32),
-                             max_new_tokens=max_new))
-        [(slot, req)] = sched.admissions()
+        sched.submit(_state(n_prompt=n_prompt, max_new=max_new))
+        [(slot, st)] = sched.admissions()
         sched.record_token(slot, 7)
-        return slot, req
+        return slot, st
 
     def test_preempt_requeues_at_front(self):
         from repro.serving import FREE, Scheduler
         sched = Scheduler(num_slots=1, max_len=64)
-        slot, req = self._decoding_slot(sched)
-        sched.submit(Request(prompt=np.arange(4, dtype=np.int32)))
+        slot, st = self._decoding_slot(sched)
+        sched.submit(_state(n_prompt=4, rid=1))
         got = sched.preempt(slot)
-        assert got is req and req.preemptions == 1
-        assert slot.state == FREE and sched.queue[0] is req
+        assert got is st and st.preemptions == 1
+        assert slot.state == FREE and sched.queue[0] is st
 
     def test_resume_restores_decode_state(self):
         from repro.serving import DECODE, Scheduler
         sched = Scheduler(num_slots=1, max_len=64)
-        slot, req = self._decoding_slot(sched, n_prompt=5)
+        slot, st = self._decoding_slot(sched, n_prompt=5)
         sched.record_token(slot, 9)
         sched.preempt(slot)
         [(slot2, got)] = sched.admissions()
-        assert got is req
+        assert got is st
         sched.resume(slot2)
         assert slot2.state == DECODE
         assert slot2.last_token == 9                # last sampled token
         assert slot2.next_pos == 5 + 2 - 1          # prompt + outs - 1
-        assert req.resume_prefill_len == 6
+        assert st.resume_prefill_len == 6
+
+    def test_preempt_mid_chunked_prefill(self):
+        """A PREFILL-state victim (chunked prefill in flight) discards its
+        partial cache and requeues at the front with no tokens lost."""
+        from repro.serving import FREE, PREFILL, Scheduler
+        sched = Scheduler(num_slots=1, max_len=64)
+        sched.submit(_state(n_prompt=30))
+        [(slot, st)] = sched.admissions()
+        slot.prefill_pos = 8                        # one chunk fed
+        slot.prefill_cache = object()
+        assert slot.state == PREFILL
+        got = sched.preempt(slot)
+        assert got is st and st.preemptions == 1 and not st.out_tokens
+        assert slot.state == FREE
+        assert slot.prefill_pos == 0 and slot.prefill_cache is None
+        assert sched.queue[0] is st
 
     def test_admission_gate_blocks_head_of_line(self):
         from repro.serving import Scheduler
         sched = Scheduler(num_slots=2, max_len=64)
-        big = Request(prompt=np.arange(30, dtype=np.int32))
-        small = Request(prompt=np.arange(2, dtype=np.int32))
+        big = _state(n_prompt=30, rid=0)
+        small = _state(n_prompt=2, rid=1)
         sched.submit(big)
         sched.submit(small)
         # gate rejects the big head: FIFO means nothing is admitted
-        out = sched.admissions(lambda r: r.prompt_len < 10)
+        out = sched.admissions(lambda st: st.prompt_len < 10)
         assert out == []
         assert list(sched.queue) == [big, small]

@@ -1,5 +1,6 @@
 """Continuous-batching scheduler: lifecycle, parity with the static
-baseline, slot reuse / cache isolation, EOS and max-token edge cases."""
+baseline, slot reuse / cache isolation, EOS and max-token edge cases,
+guarded tick metrics."""
 import copy
 
 import jax
@@ -10,7 +11,9 @@ from repro.configs import ARCHS
 from repro.configs.base import QuantConfig
 from repro.models import capture_stats, init_params
 from repro.quant import make_plan_bundle, quantize_weights_for_serving
-from repro.serving import (DECODE, DONE, FREE, PREFILL, Request, Scheduler,
+from repro.serving import (DECODE, DONE, FREE, PREFILL, FINISH_EOS,
+                           FINISH_LENGTH, GenerationRequest, Request,
+                           RequestState, SamplingParams, Scheduler,
                            ServingEngine, StaticBatchEngine)
 
 KEY = jax.random.PRNGKey(0)
@@ -21,19 +24,22 @@ KEY = jax.random.PRNGKey(0)
 # ---------------------------------------------------------------------------
 
 
-def _req(n_prompt=8, max_new=4, **kw):
-    return Request(prompt=np.arange(n_prompt, dtype=np.int32),
-                   max_new_tokens=max_new, **kw)
+def _state(n_prompt=8, max_new=4, rid=0, **kw):
+    return RequestState(
+        GenerationRequest(prompt=np.arange(n_prompt, dtype=np.int32),
+                          sampling=SamplingParams(max_new_tokens=max_new,
+                                                  **kw)),
+        rid=rid)
 
 
 class TestSchedulerLifecycle:
     def test_admission_fifo_into_free_slots(self):
         sched = Scheduler(num_slots=2, max_len=64)
-        reqs = [_req() for _ in range(3)]
-        for r in reqs:
-            sched.submit(r)
+        sts = [_state(rid=i) for i in range(3)]
+        for st in sts:
+            sched.submit(st)
         admitted = sched.admissions()
-        assert [r for _, r in admitted] == reqs[:2]
+        assert [st for _, st in admitted] == sts[:2]
         assert [s.state for s, _ in admitted] == [PREFILL, PREFILL]
         assert len(sched.queue) == 1
         # no FREE slot left -> nothing more is admitted
@@ -41,40 +47,42 @@ class TestSchedulerLifecycle:
 
     def test_slot_cycle_free_prefill_decode_done_free(self):
         sched = Scheduler(num_slots=1, max_len=64)
-        sched.submit(_req(n_prompt=5, max_new=2))
-        [(slot, req)] = sched.admissions()
+        sched.submit(_state(n_prompt=5, max_new=2))
+        [(slot, st)] = sched.admissions()
         assert not sched.record_token(slot, 7)      # first (prefill) token
         assert slot.state == DECODE
         assert slot.next_pos == 5 and slot.last_token == 7
         assert sched.record_token(slot, 9)          # hits max_new_tokens
-        assert slot.state == DONE and req.done
-        assert req.out_tokens == [7, 9]
+        assert slot.state == DONE and st.done
+        assert st.finish_reason == FINISH_LENGTH
+        assert st.out_tokens == [7, 9]
         sched.free(slot)
-        assert slot.state == FREE and slot.request is None
+        assert slot.state == FREE and slot.req is None
 
     def test_eos_finishes_early(self):
         sched = Scheduler(num_slots=1, max_len=64)
-        sched.submit(_req(max_new=10, eos_token=3))
-        [(slot, _)] = sched.admissions()
+        sched.submit(_state(max_new=10, eos_token=3))
+        [(slot, st)] = sched.admissions()
         assert not sched.record_token(slot, 5)
         assert sched.record_token(slot, 3)          # EOS
-        assert slot.request is not None and slot.state == DONE
+        assert slot.req is not None and slot.state == DONE
+        assert st.finish_reason == FINISH_EOS
 
     def test_eos_on_first_token_finishes_at_prefill(self):
         sched = Scheduler(num_slots=1, max_len=64)
-        sched.submit(_req(max_new=10, eos_token=3))
-        [(slot, req)] = sched.admissions()
+        sched.submit(_state(max_new=10, eos_token=3))
+        [(slot, st)] = sched.admissions()
         assert sched.record_token(slot, 3)
-        assert req.out_tokens == [3]
+        assert st.out_tokens == [3]
 
     def test_oversized_request_rejected(self):
         sched = Scheduler(num_slots=1, max_len=16)
         with pytest.raises(ValueError):
-            sched.submit(_req(n_prompt=12, max_new=8))
+            sched.submit(_state(n_prompt=12, max_new=8))
 
     def test_freed_slot_admits_queued_request(self):
         sched = Scheduler(num_slots=1, max_len=64)
-        a, b = _req(max_new=1), _req(max_new=1)
+        a, b = _state(max_new=1, rid=0), _state(max_new=1, rid=1)
         sched.submit(a)
         sched.submit(b)
         [(slot, got)] = sched.admissions()
@@ -90,7 +98,7 @@ class TestSchedulerLifecycle:
 
     def test_latency_metrics(self):
         sched = Scheduler(num_slots=1, max_len=64)
-        a, b = _req(max_new=2), _req(max_new=2)
+        a, b = _state(max_new=2, rid=0), _state(max_new=2, rid=1)
         sched.submit(a)
         sched.submit(b)
         [(slot, _)] = sched.admissions()
@@ -100,7 +108,59 @@ class TestSchedulerLifecycle:
         sched.free(slot)
         [(slot, _)] = sched.admissions()
         assert a.latency_steps == 1
+        assert a.ttft_steps == 0
         assert b.queue_wait_steps == 1
+
+
+class TestGuardedMetrics:
+    """Satellite: metric properties must not return nonsense negatives
+    while their underlying event has not happened."""
+
+    def test_request_state_unset_metrics_are_none(self):
+        st = _state()
+        assert st.queue_wait_steps is None          # never admitted
+        assert st.ttft_steps is None                # no token yet
+        assert st.latency_steps is None             # unfinished
+        st.submit_step = 3
+        assert st.queue_wait_steps is None          # still never admitted
+        st.admit_step = 5
+        assert st.queue_wait_steps == 2
+        assert st.latency_steps is None             # admitted != finished
+        st.first_token_step = 5
+        st.finish_step = 9
+        assert st.ttft_steps == 2 and st.latency_steps == 6
+
+    def test_legacy_request_unset_metrics_are_none(self):
+        r = Request(prompt=np.arange(4, dtype=np.int32))
+        assert r.queue_wait_steps is None
+        assert r.ttft_steps is None
+        assert r.latency_steps is None
+
+    def test_queued_but_never_admitted(self):
+        sched = Scheduler(num_slots=1, max_len=64)
+        a, b = _state(rid=0), _state(rid=1)
+        sched.submit(a)
+        sched.submit(b)
+        sched.admissions()                          # only a fits
+        sched.step += 4
+        assert b.queue_wait_steps is None
+        assert b.latency_steps is None
+
+    @pytest.mark.slow
+    def test_run_backfills_legacy_metrics(self, served):
+        qparams, cfg, quant, plans = served
+        eng = ServingEngine(qparams, cfg, quant, plans, batch_size=1,
+                            max_len=48)
+        rng = np.random.default_rng(5)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 6)
+                        .astype(np.int32), max_new_tokens=3)
+                for _ in range(2)]
+        eng.run(reqs)
+        for r in reqs:
+            assert r.queue_wait_steps is not None
+            assert r.ttft_steps is not None
+            assert r.latency_steps is not None
+            assert r.latency_steps >= r.ttft_steps >= 0
 
 
 # ---------------------------------------------------------------------------
@@ -199,7 +259,7 @@ def test_eos_truncates_generation(served):
     [cut] = cont.run([Request(prompt=prompt.copy(), max_new_tokens=6,
                               eos_token=eos)])
     assert cut.out_tokens == ref.out_tokens[:3]
-    assert cut.done
+    assert cut.done and cut.finish_reason == FINISH_EOS
 
 
 @pytest.mark.slow
