@@ -25,6 +25,12 @@ tick had to compute before its decode could run. Chunked prefill bounds
 the stall by slots x chunk regardless of prompt length, with final
 tokens unchanged.
 
+A third phase lands several long prompts in the same tick: per-slot
+chunking alone lets every admission contribute a chunk (stall = slots x
+chunk), while a shared per-tick ``prefill_budget`` (vLLM-style
+``max_num_batched_tokens``) caps the *total* — the stall bound drops
+from ``slots x chunk`` to ``budget``, again token-identically.
+
 Run: PYTHONPATH=src python -m benchmarks.continuous_batching
 """
 from __future__ import annotations
@@ -87,6 +93,7 @@ def run(n_requests: int = 12, slots: int = 4, seed: int = 0):
         assert a.out_tokens == b.out_tokens, "scheduling changed outputs"
 
     run_chunked_prefill(cfg, qparams, quant, plans, slots=slots, seed=seed)
+    run_prefill_budget(cfg, qparams, quant, plans, slots=slots, seed=seed)
     return speedup
 
 
@@ -132,6 +139,52 @@ def run_chunked_prefill(cfg, qparams, quant, plans, slots: int = 4,
          f"{chk.max_prefill_tokens_per_step} (bound={slots * chunk}), "
          f"tokens unchanged")
     return one.max_prefill_tokens_per_step, chk.max_prefill_tokens_per_step
+
+
+def run_prefill_budget(cfg, qparams, quant, plans, slots: int = 4,
+                       seed: int = 0, long_prompt: int = 32,
+                       chunk: int = 8, budget: int = 8):
+    """N simultaneous long admissions: per-slot chunking vs the shared
+    per-tick token budget.
+
+    With only the per-slot chunk bound, every slot that admits in the
+    same tick contributes a chunk — the worst tick computes ``slots x
+    chunk`` prefill tokens in front of its decode. The shared budget
+    caps the tick total at ``budget`` no matter how many admissions
+    landed together, with greedy tokens unchanged.
+    """
+    rng = np.random.default_rng(seed)
+    # every request long and submitted up front: all slots admit at once
+    reqs = [Request(
+        prompt=rng.integers(0, cfg.vocab_size, long_prompt).astype(np.int32),
+        max_new_tokens=6) for _ in range(slots + 2)]
+    eng = ServingEngine(qparams, cfg, quant, plans, batch_size=slots,
+                        max_len=long_prompt + 16)
+
+    results = {}
+    for name, pbudget in (("chunk_only", None), ("budget", budget)):
+        core = eng.make_core(prefill_chunk=chunk, prefill_budget=pbudget)
+        rids = [core.add_request(r.to_generation_request()) for r in reqs]
+        while core.has_unfinished():
+            core.step()
+        states = [core.states[rid] for rid in rids]
+        emit(f"serve_prefill_{name}", core.stats.wall_seconds * 1e6,
+             f"stall_tokens={core.stats.max_prefill_tokens_per_step} "
+             f"decode_steps={core.stats.decode_steps}")
+        results[name] = (core.stats, [st.out_tokens for st in states])
+
+    chk, bud = results["chunk_only"][0], results["budget"][0]
+    assert results["budget"][1] == results["chunk_only"][1], \
+        "the prefill budget changed greedy tokens"
+    assert chk.max_prefill_tokens_per_step == slots * chunk, \
+        "simultaneous admissions should stack chunks without a budget"
+    assert bud.max_prefill_tokens_per_step <= budget, \
+        "the shared budget must bound the tick's total prefill"
+    emit("prefill_budget_stall", 0.0,
+         f"worst tick prefill tokens {chk.max_prefill_tokens_per_step}"
+         f" (slots x chunk) -> {bud.max_prefill_tokens_per_step} "
+         f"(budget={budget}), tokens unchanged")
+    return chk.max_prefill_tokens_per_step, bud.max_prefill_tokens_per_step
 
 
 if __name__ == "__main__":

@@ -15,7 +15,13 @@ serving API end to end:
   * a new request is submitted *mid-flight* (``add_request`` between
     ticks) and picks up a freed slot without waiting for the batch;
   * ``--prefill-chunk`` feeds long prompts in fixed-size slices across
-    ticks so their prefill never stalls in-flight decodes.
+    ticks so their prefill never stalls in-flight decodes;
+  * ``--prefix-cache`` (implies ``--paged``) serves a shared-system-
+    prompt workload through the content-addressed page pool: every
+    request after the first finds the system prompt's pages in the
+    prefix cache and skips their prefill entirely (per-request
+    ``cached_prefix_tokens`` shows the hit; the mid-flight request hits
+    it too).
 
 ``--backend pallas`` serves through the fused kernel pipeline: each
 deployed linear is one ``arc_fused_quantize`` launch (RMSNorm + reorder +
@@ -50,9 +56,14 @@ def main():
                     help="serve through the paged KV cache pool (block "
                          "tables + on-demand page allocation) instead of "
                          "per-slot max_len rows")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed paged pool (implies --paged): "
+                         "requests sharing a prompt prefix reuse its pages")
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="chunked prefill slice size (0 = one-shot)")
     args = ap.parse_args()
+    if args.prefix_cache:
+        args.paged = True
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
 
@@ -66,25 +77,32 @@ def main():
           f"({orig/packed:.1f}x)")
 
     # mixed-length workload, salted with one long prompt so chunked
-    # prefill has a stall to remove
+    # prefill has a stall to remove; with --prefix-cache every prompt
+    # additionally starts with one shared system prompt whose pages the
+    # content-addressed pool serves from cache after the first request
     rng = np.random.default_rng(0)
     lo = min(2, args.new_tokens)
+    sys_prompt = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+                  if args.prefix_cache else np.zeros((0,), np.int32))
 
     def make_request(plen):
         return GenerationRequest(
-            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            prompt=np.concatenate([
+                sys_prompt,
+                rng.integers(0, cfg.vocab_size, plen).astype(np.int32)]),
             sampling=SamplingParams(
                 max_new_tokens=int(rng.integers(lo, args.new_tokens + 1)),
                 temperature=args.temperature))
 
     long_prompt = 24
     cls = PagedServingEngine if args.paged else ServingEngine
+    kw = {"prefix_cache": True} if args.prefix_cache else {}
     engine = cls(qparams, cfg, quant, plans, batch_size=2,
-                 max_len=long_prompt + args.new_tokens + 1,
+                 max_len=len(sys_prompt) + long_prompt + args.new_tokens + 1,
                  backend=args.backend,
                  interpret=(args.backend == "pallas"
                             and jax.default_backend() == "cpu"),
-                 prefill_chunk=args.prefill_chunk or None)
+                 prefill_chunk=args.prefill_chunk or None, **kw)
 
     core = engine.make_core()
     for _ in range(args.requests - 2):
@@ -117,8 +135,13 @@ def main():
         print(f"  page pool: {s.num_pages} pages, peak {s.peak_pages}, "
               f"mean utilization {100 * s.page_utilization:.1f}%, "
               f"{s.preemptions} preemptions")
+    if args.prefix_cache:
+        print(f"  prefix cache: {s.cached_prefix_tokens} prefill tokens "
+              f"served from shared pages, {s.prefill_tokens} computed")
     for rid, st in sorted(core.states.items())[:4]:
-        print(f"  req{rid}: prompt_len={st.prompt_len} "
+        cached = (f" cached={st.cached_prefix_tokens}"
+                  if args.prefix_cache else "")
+        print(f"  req{rid}: prompt_len={st.prompt_len}{cached} "
               f"admitted@{st.admit_step} ttft={st.ttft_steps} "
               f"-> {st.out_tokens}")
 

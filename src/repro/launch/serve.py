@@ -8,7 +8,10 @@ pool, FIFO admission between decode steps); ``--static`` selects the
 gang-scheduled fixed-batch baseline for comparison and ``--paged`` the
 paged KV cache pool (block tables + on-demand page allocation;
 ``--num-pages`` shrinks the pool below slot parity to exercise page-gated
-admission and preemption). ``--backend pallas`` routes every deployed
+admission and preemption). ``--prefix-cache`` (implies ``--paged``) turns
+the pool content-addressed: requests sharing a prompt prefix reuse its
+pages ref-counted instead of recomputing them, with copy-on-write when a
+shared tail page must be written. ``--backend pallas`` routes every deployed
 linear through the fused Pallas pipeline (arc_fused_quantize -> packed
 nvfp4_gemm); add ``--interpret`` to run those kernels bit-faithfully on
 CPU. ``--prefill-chunk N`` feeds long prompts in N-token slices across
@@ -79,6 +82,10 @@ def main():
                          "parity; smaller shares memory and may preempt)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="positions per KV page for --paged")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed paged pool (implies --paged): "
+                         "requests sharing a prompt prefix reuse its pages "
+                         "ref-counted; copy-on-write on shared-tail writes")
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"],
                     help="deployed-linear kernel backend (pallas = fused "
@@ -92,6 +99,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: feed prompts longer than N in "
                          "N-token slices across ticks (0 = one-shot)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="shared per-tick prefill token budget across all "
+                         "admissions (vLLM-style max_num_batched_tokens; "
+                         "0 = unbudgeted)")
     ap.add_argument("--stream", action="store_true",
                     help="print per-request token deltas as each tick "
                          "emits them (the streaming API)")
@@ -112,27 +123,38 @@ def main():
     print(f"calibration+quantization: {t_quant:.1f}s "
           f"(paper Table 4 analogue); method={args.method} fmt={args.fmt}")
 
+    if args.prefix_cache:
+        args.paged = True
     rng = np.random.default_rng(args.seed)
+    # with --prefix-cache the workload models real shared-prefix traffic:
+    # every prompt starts with one system prompt whose pages are shared
+    sys_prompt = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+                  if args.prefix_cache else np.zeros((0,), np.int32))
     reqs = []
     for _ in range(args.requests):
         plen = int(rng.integers(4, 17)) if args.mixed_lengths else 16
         new = (int(rng.integers(min(2, args.new_tokens), args.new_tokens + 1))
                if args.mixed_lengths else args.new_tokens)
-        reqs.append(Request(
-            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=new, temperature=args.temperature))
+        prompt = np.concatenate([
+            sys_prompt,
+            rng.integers(0, cfg.vocab_size, plen).astype(np.int32)])
+        reqs.append(Request(prompt=prompt, max_new_tokens=new,
+                            temperature=args.temperature))
     if args.static and args.paged:
         ap.error("--static and --paged are mutually exclusive")
     kw = {}
     if args.paged:
         cls = PagedServingEngine
-        kw = {"num_pages": args.num_pages, "block_size": args.block_size}
+        kw = {"num_pages": args.num_pages, "block_size": args.block_size,
+              "prefix_cache": args.prefix_cache}
     else:
         cls = StaticBatchEngine if args.static else ServingEngine
     engine = cls(qparams, cfg, quant, plans, batch_size=args.batch,
-                 max_len=16 + args.new_tokens + 1, seed=args.seed,
+                 max_len=len(sys_prompt) + 16 + args.new_tokens + 1,
+                 seed=args.seed,
                  backend=args.backend, interpret=args.interpret,
-                 prefill_chunk=args.prefill_chunk or None, **kw)
+                 prefill_chunk=args.prefill_chunk or None,
+                 prefill_budget=args.prefill_budget or None, **kw)
     if args.stream:
         for out in engine.stream(reqs):
             tag = (f" [{out.finish_reason}]" if out.finished else "")
@@ -156,6 +178,9 @@ def main():
         print(f"page pool: {s.num_pages} pages, peak {s.peak_pages}, "
               f"mean utilization {100 * s.page_utilization:.1f}%, "
               f"{s.preemptions} preemptions")
+    if args.prefix_cache:
+        print(f"prefix cache: {s.cached_prefix_tokens} prefill tokens "
+              f"served from shared pages ({s.prefill_tokens} computed)")
     lat = [r.latency_steps for r in reqs]
     print(f"latency (decode-step ticks): p50={int(np.median(lat))} "
           f"max={max(lat)}")

@@ -622,6 +622,33 @@ def init_attention_page_pool(cfg: ModelConfig, num_pages: int,
     }
 
 
+def pages_to_rows(leaf: jax.Array, table: jax.Array) -> jax.Array:
+    """Materialize one block table's logical view of a page-pool leaf.
+
+    ``leaf`` is a period-stacked pool array ``(P, num_pages, block_size,
+    ...)``; ``table`` is ``(nblocks,)`` physical page ids (entries naming
+    the null page 0 contribute its permanently-invalid rows). Returns the
+    contiguous ``(P, nblocks * block_size, ...)`` row view — the gather
+    the prefix cache uses to seed a batch-1 prefill cache from shared
+    pages, and the same indexing the paged attention read performs
+    per-request. ``table`` may be traced (one jitted gather serves every
+    fork)."""
+    num_periods, _, bs = leaf.shape[:3]
+    nblocks = table.shape[0]
+    return leaf[:, table].reshape(num_periods, nblocks * bs,
+                                  *leaf.shape[3:])
+
+
+def copy_page(leaf: jax.Array, src_page, dst_page) -> jax.Array:
+    """Copy one physical page of a period-stacked pool leaf.
+
+    The copy-on-write primitive: a request about to write into a page it
+    shares duplicates the page first, then redirects its block-table
+    entry to the private copy. ``src_page``/``dst_page`` are traced
+    scalars, so one jitted copy serves every COW."""
+    return leaf.at[:, dst_page].set(leaf[:, src_page])
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -210,6 +210,76 @@ def write_cache_pages(cache: list, src: list, table, slot) -> list:
     return out
 
 
+def gather_cache_pages(dst: list, cache: list, table) -> list:
+    """Seed a batch-1 contiguous cache from a paged pool's shared pages.
+
+    The prefix-caching admission primitive: ``table`` is ``(max_blocks,)``
+    int32 physical page ids covering the request's cached prefix (null
+    page 0 beyond it). Each paged attention leaf is gathered block-wise
+    into the matching contiguous rows of ``dst`` (a fresh
+    ``init_cache(cfg, 1, max_blocks * block_size)``), so a suffix prefill
+    resumed from the shared-prefix boundary attends over exactly the K/V
+    a full prefill would have produced. Null-page rows carry position -1
+    (never written), matching the fresh cache's unwritten rows.
+    Slot-resident leaves (rings, recurrent state) pass through untouched —
+    prefix skipping is only enabled on configs where every layer's state
+    lives in pages. ``table`` may be traced: one jitted gather serves
+    every admission.
+    """
+    out = []
+    for d, c in zip(dst, cache):
+        if "kp" in c:
+            nd = dict(d)
+            for name, sname in (("kp", "k"), ("vp", "v"), ("posp", "pos")):
+                rows = L.pages_to_rows(c[name], table)   # (P, nb*bs, ...)
+                nd[sname] = rows[:, None].astype(d[sname].dtype)
+            out.append(nd)
+        else:
+            out.append(d)
+    return out
+
+
+def copy_cache_page(cache: list, src_page, dst_page) -> list:
+    """Copy-on-write duplication of one physical page.
+
+    Copies K/V and positions of ``src_page`` into ``dst_page`` across
+    every paged layer; the caller then points the writing request's block
+    table at ``dst_page`` so the shared original stays immutable. Both
+    page ids may be traced scalars.
+    """
+    out = []
+    for c in cache:
+        if "kp" in c:
+            nc = dict(c)
+            for name in PAGE_KEYS:
+                nc[name] = L.copy_page(c[name], src_page, dst_page)
+            out.append(nc)
+        else:
+            out.append(c)
+    return out
+
+
+def invalidate_cache_pages(cache: list, pages) -> list:
+    """Invalidate recycled pages' positions (pos -> -1).
+
+    Applied when a content-cached page (ref count zero, retained for
+    future prefix hits) is evicted for reuse: the stale positions must
+    not be gathered as valid by the next tenant's block table. ``pages``
+    is ``(n,)`` int32; entries >= num_pages are dropped. K/V bytes need no
+    clearing — the causal mask hides pos < 0 rows and reallocation
+    overwrites them.
+    """
+    out = []
+    for c in cache:
+        if "kp" in c:
+            nc = dict(c)
+            nc["posp"] = c["posp"].at[:, pages].set(-1, mode="drop")
+            out.append(nc)
+        else:
+            out.append(c)
+    return out
+
+
 def release_cache_pages(cache: list, pages, slot) -> list:
     """Return a request's pages to the pool and clear its slot row.
 

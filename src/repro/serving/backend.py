@@ -1,22 +1,29 @@
 """Cache backends: the pluggable seam between EngineCore and pool layout.
 
 The step-driven core is backend-agnostic; everything layout-specific —
-slot rows vs paged blocks, admission gating, per-chunk page allocation,
-preemption when the pool runs dry, and how a decode launch names its
-rows — lives behind these two small classes instead of engine subclass
-method overrides.
+slot rows vs paged blocks, admission gating, prefix sharing, per-chunk
+page allocation, preemption when the pool runs dry, and how a decode
+launch names its rows — lives behind these two small classes instead of
+engine subclass method overrides.
 
 ``SlotBackend`` is the trivial case: every slot permanently owns a
 ``max_len`` cache row, so admission needs nothing beyond a FREE slot and
 decode always launches the full slot count.
 
 ``PagedBackend`` manages the paged K/V pool: admission is gated on free
-pages (strict FIFO head-of-line), chunked prefill allocates each chunk's
-blocks as the prompt cursor advances, decode allocates the tail block on
-demand, and when the pool runs dry the latest-admitted request —
-decoding *or* mid chunked prefill — is preempted (pages reclaimed,
-request requeued at the front). ``decode_buckets=True`` shrinks each
-decode launch to the active-request count rounded up to a power of two.
+pages (strict FIFO head-of-line) charging only the *uncached* suffix
+when prefix caching is on, ``begin_prefill`` claims an admission's
+shared-prefix pages (ref counted) and ``gather_prefill_cache`` seeds its
+batch-1 prefill cache from them, ``install`` masks shared blocks out of
+the pool scatter and content-registers the newly written full blocks,
+chunked prefill allocates each chunk's blocks as the prompt cursor
+advances, decode allocates the tail block on demand (registering each
+block it finalizes and duplicating copy-on-write any block it would
+write while shared), and when the pool runs dry the latest-admitted
+request — decoding *or* mid chunked prefill — is preempted (its pages
+decref'd, the request requeued at the front). ``decode_buckets=True``
+shrinks each decode launch to the active-request count rounded up to a
+power of two.
 """
 from __future__ import annotations
 
@@ -45,8 +52,21 @@ class SlotBackend:
     def admission_gate(self, pool):
         return None                 # a FREE slot suffices
 
-    def on_admit(self, pool, slot: Slot, prefill_len: int) -> None:
-        pass                        # the row already exists
+    def begin_prefill(self, pool, slot: Slot, st: RequestState,
+                      toks: np.ndarray) -> int:
+        """Claim whatever cached prefix the pool holds for this
+        admission; returns the number of prefill tokens skipped."""
+        return 0                    # slot rows are never shared
+
+    def gather_prefill_cache(self, pool, slot: Slot, cached: int, cache):
+        """Seed a fresh batch-1 prefill cache with the shared prefix."""
+        return cache                # nothing cached, nothing to gather
+
+    def install(self, pool, slot: Slot, st: RequestState, src_cache,
+                toks: np.ndarray) -> None:
+        """Install a finished prefill into the pool (and publish any
+        newly finalized blocks to the prefix cache)."""
+        pool.write(slot.index, src_cache)
 
     def alloc_prefill_chunk(self, pool, sched: Scheduler, stats,
                             slot: Slot, upto_tokens: int) -> bool:
@@ -63,21 +83,25 @@ class SlotBackend:
 
 
 class PagedBackend(SlotBackend):
-    """Paged K/V pool: block tables, on-demand pages, preemption."""
+    """Paged K/V pool: block tables, ref-counted pages, prefix sharing,
+    copy-on-write, on-demand allocation, preemption."""
 
     paged = True
     decode_fn = "decode_paged"
 
     def __init__(self, num_pages: Optional[int] = None,
-                 block_size: int = 16, decode_buckets: bool = False):
+                 block_size: int = 16, decode_buckets: bool = False,
+                 prefix_cache: bool = False):
         self.num_pages = num_pages
         self.block_size = block_size
         self.decode_buckets = decode_buckets
+        self.prefix_cache = prefix_cache
 
     def make_pool(self, cfg: ModelConfig, num_slots: int, max_len: int):
         return PagedCacheManager(cfg, num_slots, max_len,
                                  num_pages=self.num_pages,
-                                 block_size=self.block_size)
+                                 block_size=self.block_size,
+                                 prefix_cache=self.prefix_cache)
 
     def check_capacity(self, pool, total_tokens: int) -> None:
         pool.check_capacity(total_tokens)
@@ -85,23 +109,46 @@ class PagedBackend(SlotBackend):
     def admission_gate(self, pool):
         # admissions() gates the whole batch before the engine allocates
         # any pages, so the gate must reserve as it approves: otherwise
-        # two requests could both pass against the same free pages
+        # two requests could both pass against the same free pages. The
+        # charge covers the uncached suffix plus the first decode
+        # write's block AND any matched pages currently cached-free
+        # (retaining a hit pins them, shrinking the evictable supply as
+        # surely as an allocation would). Registrations/evictions between
+        # this snapshot and the admission's share_prefix can still shift
+        # the match; the preemption fallback in the allocation paths
+        # absorbs that residual race.
         reserved = 0
 
         def gate(st: RequestState) -> bool:
             nonlocal reserved
-            if not pool.can_admit(st.resume_prefill_len, reserved):
+            _, charge = pool.admission_charge(st.prefill_token_seq())
+            if pool.free_page_count - reserved < charge:
                 return False
-            # reserve the first decode write's block too (what can_admit
-            # checked) or a same-tick admission could take it and force an
-            # immediate preemption
-            reserved += pool.blocks_for(st.resume_prefill_len + 1)
+            reserved += charge
             return True
 
         return gate
 
-    def on_admit(self, pool, slot: Slot, prefill_len: int) -> None:
-        pool.allocate_prefill(slot.index, prefill_len)
+    # -- prefix sharing ----------------------------------------------------
+
+    def begin_prefill(self, pool, slot: Slot, st: RequestState,
+                      toks: np.ndarray) -> int:
+        cached = pool.share_prefix(slot.index, toks)
+        if cached:
+            st.cached_prefix_tokens += cached
+        return cached
+
+    def gather_prefill_cache(self, pool, slot: Slot, cached: int, cache):
+        if cached:
+            cache = pool.gather_prefix(slot.index, cache)
+        return cache
+
+    def install(self, pool, slot: Slot, st: RequestState, src_cache,
+                toks: np.ndarray) -> None:
+        pool.write(slot.index, src_cache)
+        pool.register_prefix(slot.index, toks)
+
+    # -- allocation / preemption -------------------------------------------
 
     def alloc_prefill_chunk(self, pool, sched: Scheduler, stats,
                             slot: Slot, upto_tokens: int) -> bool:
@@ -109,20 +156,21 @@ class PagedBackend(SlotBackend):
 
         Chunked prefill allocates pages as the prompt cursor advances
         instead of all at admission, so pool pressure tracks the K/V
-        actually resident. When the pool runs dry mid-prefill (decode
-        tail allocations got there first), the *latest-admitted* request
-        is preempted — which is usually the prefilling slot itself (ties
-        on admit_step also self-preempt): a new prompt must not evict
-        older in-flight decodes. Returns False when ``slot`` was
-        preempted (its partial chunk cache is discarded and it
-        re-prefills from the queue front).
+        actually resident. Shared-prefix blocks below the cursor are
+        already claimed by ``begin_prefill`` (a self-preemption restarts
+        from the re-matched prefix boundary, so they are always
+        resident) — only the blocks this chunk adds are walked. When the
+        pool runs dry mid-prefill (decode tail allocations got there
+        first), the *latest-admitted* request is preempted — which is
+        usually the prefilling slot itself (ties on admit_step also
+        self-preempt): a new prompt must not evict older in-flight
+        decodes. Returns False when ``slot`` was preempted (its partial
+        chunk cache is discarded and it re-prefills from the queue
+        front).
         """
-        # blocks below the cursor were ensured on earlier chunks (a
-        # self-preemption restarts from prefill_pos=0, so they are
-        # always resident) — only walk the blocks this chunk adds
         first = slot.prefill_pos // pool.block_size
         for block in range(first, pool.blocks_for(upto_tokens)):
-            while not pool.ensure(slot.index, block):
+            while not pool.ensure_writable(slot.index, block):
                 victims = [s for s in sched.slots
                            if s.state in (DECODE, PREFILL)
                            and s.req is not None]
@@ -137,21 +185,30 @@ class PagedBackend(SlotBackend):
     def pre_decode(self, pool, sched: Scheduler, stats,
                    active: List[Slot]) -> List[Slot]:
         """Allocate each active slot's tail page, preempting the latest-
-        admitted request when the pool is exhausted."""
+        admitted request when the pool is exhausted. Crossing a page
+        boundary finalizes the previous block: its content is registered
+        in the prefix cache so later admissions (multi-turn resubmits,
+        preemption resumes) can share it."""
         for s in active:
             if s.state != DECODE:   # already preempted this tick
                 continue
             block = s.next_pos // pool.block_size
-            while not pool.ensure(s.index, block):
+            fresh = pool.tables[s.index, block] < 0
+            preempted = False
+            while not pool.ensure_writable(s.index, block):
                 if not self._reclaim(pool, sched, stats, protect=s):
                     self._evict(pool, sched, stats, s)
+                    preempted = True
                     break
+            if fresh and not preempted and pool.prefix_enabled:
+                pool.register_tokens(s.index, s.req.prompt,
+                                     s.req.out_tokens, s.next_pos)
         return [s for s in active if s.state == DECODE]
 
     def _reclaim(self, pool, sched: Scheduler, stats, protect: Slot) -> bool:
         """Preempt the latest-admitted request other than ``protect`` —
-        decoding or mid chunked prefill — returning its pages to the free
-        list. False when there is nothing left to reclaim."""
+        decoding or mid chunked prefill — releasing its page refs. False
+        when there is nothing left to reclaim."""
         victims = [s for s in sched.slots
                    if s.state in (DECODE, PREFILL) and s is not protect]
         if not victims:
@@ -162,7 +219,10 @@ class PagedBackend(SlotBackend):
 
     @staticmethod
     def _evict(pool, sched: Scheduler, stats, victim: Slot) -> None:
-        """Reclaim one request's pages and requeue it at the front."""
+        """Drop one request's page refs and requeue it at the front.
+        Pages it shared with other requests (or that remain content-
+        registered) stay resident; only its private unregistered pages
+        return to the free list."""
         pool.release(victim.index)
         sched.preempt(victim)
         stats.preemptions += 1

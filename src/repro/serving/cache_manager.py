@@ -8,31 +8,52 @@ memory scales with the worst case even when traffic is short.
 ``PagedCacheManager`` replaces the full-attention rows with a pool of
 fixed-size pages plus per-slot block tables (vLLM-style). Pages are
 allocated on demand (prefill blocks at admission, the tail block as
-decode crosses a page boundary) and returned to a free list when the
-request finishes or is preempted, so concurrency is bounded by *tokens
-actually resident*, not ``num_slots * max_len``. Sliding-window rings and
+decode crosses a page boundary) and returned when the request finishes
+or is preempted, so concurrency is bounded by *tokens actually
+resident*, not ``num_slots * max_len``. Sliding-window rings and
 SSM/RWKV recurrent state stay slot-resident (O(window)/O(1) per request —
 nothing to reclaim).
 
-All device ops are jitted once with slot/table indices traced, so serving
-any number of requests compiles a fixed handful of cache ops; the pool
-buffers are donated through every call (no per-step reallocation).
+With ``prefix_cache=True`` the pool is additionally **content-addressed
+and ref-counted**: every page carries a reference count (one per block
+table naming it), full pages are registered in a prefix-hash table keyed
+by ``hash(parent-block hash, page's token ids)``, and a new admission
+whose token sequence starts with a registered chain *shares* those pages
+(ref count incremented, no recompute) instead of prefilling them. Pages
+whose ref count drops to zero but that remain registered stay resident
+("cached-free") and are only evicted — positions invalidated, hash entry
+dropped — when an allocation finds the free list empty. The capped tail
+block of a fully-cached sequence is duplicated copy-on-write: its
+content is gathered into the new request's prefill cache and installed
+into a fresh private page, so the shared original is never written.
+Sharing is only enabled on configs whose every layer stores its state in
+pages (all-full-attention mixers); anything slot-resident (rings,
+recurrent state) cannot be skipped, so those configs silently run with
+sharing off and are bit-identical to the plain pool.
+
+All device ops are jitted once with slot/table/page indices traced, so
+serving any number of requests compiles a fixed handful of cache ops;
+the pool buffers are donated through every call (no per-step
+reallocation).
 
 Which pool an ``EngineCore`` drives — and when pages are claimed — is
 decided by the cache backends in ``backend.py``: prefill (one-shot or
 chunk-by-chunk via ``fresh_prefill_cache``) always builds a batch-1
 contiguous cache that ``write`` installs into the pool in one scatter;
 with chunked prefill the paged backend claims each chunk's blocks as the
-prompt cursor advances (``ensure``), so pool accounting tracks the K/V
-actually resident before the install.
+prompt cursor advances (``ensure_writable``), so pool accounting tracks
+the K/V actually resident before the install.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import FULL_ATTN, MOE_FFN, ModelConfig
 from repro.models import lm
 
 # module-level jits: the trace cache survives across pool instances, so
@@ -42,6 +63,13 @@ _WRITE_SLOT = jax.jit(lm.write_cache_slot, donate_argnums=(0,))
 _RESET_SLOT = jax.jit(lm.reset_cache_slot, donate_argnums=(0,))
 _WRITE_PAGES = jax.jit(lm.write_cache_pages, donate_argnums=(0,))
 _RELEASE_PAGES = jax.jit(lm.release_cache_pages, donate_argnums=(0,))
+_GATHER_PAGES = jax.jit(lm.gather_cache_pages, donate_argnums=(0,))
+_COPY_PAGE = jax.jit(lm.copy_cache_page, donate_argnums=(0,))
+_INVALIDATE_PAGES = jax.jit(lm.invalidate_cache_pages, donate_argnums=(0,))
+
+# root of every prefix-hash chain (an arbitrary constant: block hashes
+# mix it with the parent hash so chains starting differently never alias)
+_HASH_ROOT = 0x9E3779B9
 
 
 class SlotCacheManager:
@@ -83,20 +111,32 @@ class SlotCacheManager:
 
 
 class PagedCacheManager:
-    """Paged K/V pool: ``num_pages`` fixed-size pages + per-slot block tables.
+    """Paged K/V pool: ``num_pages`` fixed-size pages + per-slot block
+    tables, with optional content-addressed prefix sharing.
 
-    The Python side owns the free-page list and the ``(num_slots,
-    max_blocks)`` block tables (-1 = unallocated); the device side holds
-    the page arrays. Physical page 0 is reserved as the null page (read
-    target of unallocated table entries), so ``usable_pages = num_pages -
-    1``. ``num_pages=None`` sizes the pool to full slot-cache parity
-    (every slot can hold ``max_len`` tokens) — pass something smaller to
-    actually share memory.
+    The Python side owns the page lifecycle — free list, per-page ref
+    counts, prefix-hash registry, cached-free eviction queue — and the
+    ``(num_slots, max_blocks)`` block tables (-1 = unallocated); the
+    device side holds the page arrays. Physical page 0 is reserved as the
+    null page (read target of unallocated table entries), so
+    ``usable_pages = num_pages - 1``. ``num_pages=None`` sizes the pool
+    to full slot-cache parity (every slot can hold ``max_len`` tokens) —
+    pass something smaller to actually share memory.
+
+    Page lifecycle with ``prefix_cache=True``::
+
+        FREE --alloc--> ACTIVE(ref>=1) --last decref--> CACHED(ref=0,
+             registered; content+positions intact) --evict--> FREE
+                                       \\--decref (unregistered)--> FREE
+
+    Sharing an admission's prefix moves CACHED (or still-ACTIVE) pages
+    straight back into a block table with ``ref += 1``; only truly FREE
+    or evicted pages ever lose their contents.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
                  num_pages: int | None = None, block_size: int = 16,
-                 dtype=jnp.bfloat16):
+                 prefix_cache: bool = False, dtype=jnp.bfloat16):
         self.cfg = cfg
         self.num_slots = num_slots
         self.block_size = block_size
@@ -108,10 +148,35 @@ class PagedCacheManager:
         self.num_pages = num_pages
         self.usable_pages = num_pages - 1
         self.dtype = dtype
+        # prefix sharing needs (a) every layer's state in pages — a
+        # skipped prefill would silently lose sliding-window rings and
+        # SSM/RWKV recurrent state (slot-resident) — and (b) per-token
+        # prefill numerics: the capacity-dropping MoE dispatch couples
+        # tokens across the (padded) sequence (cap scales with S, so
+        # which tokens an expert drops depends on prefill shape), making
+        # a prefix computed under one request's shape not bit-identical
+        # to another's. Configs failing either run unshared.
+        self.prefix_enabled = (bool(prefix_cache)
+                               and all(m == FULL_ATTN
+                                       for m in cfg.mixer_pattern)
+                               and all(f != MOE_FFN
+                                       for f in cfg.ffn_pattern)
+                               and cfg.family != "ssm")
         self.cache = lm.init_paged_cache(cfg, num_slots, num_pages,
                                          block_size, self.padded_len, dtype)
         self._free = list(range(num_pages - 1, 0, -1))   # page 0 = null
         self.tables = np.full((num_slots, self.max_blocks), -1, np.int32)
+        # content addressing (all empty when prefix_enabled is False)
+        self.ref = np.zeros((num_pages,), np.int32)      # tables naming page
+        self._hash_to_page: Dict[int, int] = {}
+        self._page_hash: Dict[int, int] = {}             # registered pages
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # ref==0, LRU
+        self._shared_blocks = np.zeros((num_slots,), np.int32)  # per slot
+        self._gather_tables: Dict[int, np.ndarray] = {}
+        self._pinned: Dict[int, List[int]] = {}          # gather-pinned refs
+        # per-slot registration cursor: (blocks published, parent hash) —
+        # the slot's sequence is append-only, so publishes resume here
+        self._chain_pos: Dict[int, tuple] = {}
 
     # -- accounting --------------------------------------------------------
 
@@ -120,25 +185,31 @@ class PagedCacheManager:
 
     @property
     def free_page_count(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now: truly free plus evictable
+        cached-free pages (content-cached, ref count zero)."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_page_count(self) -> int:
+        """Resident zero-ref pages retained for future prefix hits."""
+        return len(self._cached)
 
     @property
     def pages_in_use(self) -> int:
-        return self.usable_pages - len(self._free)
+        """Pages named by at least one block table (ref count > 0)."""
+        return self.usable_pages - self.free_page_count
 
-    def can_admit(self, prefill_len: int, reserved: int = 0) -> bool:
-        """Pages available for the prefill plus the first decode write.
-
-        ``reserved`` discounts pages already promised to earlier
-        admissions in the same tick (the engine's gate reserves as it
-        approves, before any allocation happens).
-        """
-        return (self.free_page_count - reserved
-                >= self.blocks_for(prefill_len + 1))
+    def pages_needed(self, prefill_len: int, cached_tokens: int = 0) -> int:
+        """New pages one admission claims: blocks for the prefill plus
+        the first decode write, minus the full shared-prefix blocks."""
+        return (self.blocks_for(prefill_len + 1)
+                - cached_tokens // self.block_size)
 
     def check_capacity(self, total_tokens: int) -> None:
         """Liveness bound: a request must fit the pool when running alone
-        (otherwise preemption could cycle forever) and its block table."""
+        (otherwise preemption could cycle forever) and its block table.
+        Prefix hits only ever reduce the pages actually claimed, so the
+        unshared worst case is the bound."""
         if self.blocks_for(total_tokens) > self.usable_pages:
             raise ValueError(
                 f"request needs {self.blocks_for(total_tokens)} pages but "
@@ -148,47 +219,281 @@ class PagedCacheManager:
                 f"request needs {total_tokens} positions but block tables "
                 f"address {self.padded_len}")
 
+    # -- prefix hashing ----------------------------------------------------
+
+    def _block_keys(self, seq: np.ndarray,
+                    parent: int = _HASH_ROOT) -> List[tuple]:
+        """Chained content keys of ``seq``'s *full* blocks: block b's key
+        is ``(hash of block b-1's key, block b's token bytes)``. The
+        registry is a dict keyed by these tuples, so a lookup hit
+        compares the block's actual token ids (dict equality), never
+        just a hash — a hash collision degrades to a near-miss probe,
+        not to silently serving another request's K/V. ``seq`` must
+        start at a block boundary (``parent`` = the preceding block's
+        key hash)."""
+        seq = np.ascontiguousarray(np.asarray(seq, np.int32))
+        out = []
+        for off in range(len(seq) // self.block_size):
+            key = (parent, seq[off * self.block_size:
+                               (off + 1) * self.block_size].tobytes())
+            out.append(key)
+            parent = hash(key)
+        return out
+
+    def _match_chain(self, seq: np.ndarray):
+        """(full-block keys of ``seq``, count matched in the registry)."""
+        keys = self._block_keys(seq)
+        matched = 0
+        for k in keys:
+            if k not in self._hash_to_page:
+                break
+            matched += 1
+        return keys, matched
+
+    def _cap_matched(self, matched: int, seq_len: int) -> int:
+        """Cap the matched-token count at ``seq_len - 1``: the last token
+        is always recomputed so the admission has logits to sample from
+        (the capped tail block is duplicated copy-on-write at install)."""
+        return min(matched * self.block_size, max(seq_len - 1, 0))
+
+    def match_prefix(self, seq: np.ndarray) -> int:
+        """Cached-prefix length (tokens) an admission prefilling ``seq``
+        could skip. Pure lookup — claims nothing."""
+        if not self.prefix_enabled:
+            return 0
+        _, matched = self._match_chain(seq)
+        return self._cap_matched(matched, len(seq))
+
+    def admission_charge(self, seq: np.ndarray):
+        """(cached_tokens, allocatable pages this admission consumes).
+
+        The charge counts the fresh pages the uncached suffix (plus the
+        first decode write) needs *and* every matched page currently
+        cached-free: retaining those removes them from the free/evictable
+        supply just as surely as allocating does, so a same-tick gate
+        that didn't charge them could over-admit against pages a hit is
+        about to pin down.
+        """
+        if not self.prefix_enabled:
+            return 0, self.pages_needed(len(seq), 0)
+        keys, matched = self._match_chain(seq)
+        cached = self._cap_matched(matched, len(seq))
+        charge = self.pages_needed(len(seq), cached)
+        for b in range(self.blocks_for(cached) if cached else 0):
+            if self.ref[self._hash_to_page[keys[b]]] == 0:
+                charge += 1
+        return cached, charge
+
+    def share_prefix(self, slot: int, seq: np.ndarray) -> int:
+        """Claim ``seq``'s cached prefix for ``slot``; returns its length.
+
+        Full shared blocks enter the slot's block table with ``ref += 1``
+        (they are never written again — ``write`` masks them out of the
+        install scatter). When the cap leaves a partial tail inside the
+        last matched block, that block's page is *pinned* (ref held, not
+        in the table) until ``gather_prefix`` copies its contents into
+        the admission's prefill cache — the copy-on-write read side; the
+        write side lands in a fresh private page at install.
+        """
+        assert (self.tables[slot] < 0).all(), "slot still owns pages"
+        if not self.prefix_enabled:
+            return 0
+        keys, matched = self._match_chain(seq)
+        cached = self._cap_matched(matched, len(seq))
+        self._shared_blocks[slot] = full = cached // self.block_size
+        if cached == 0:
+            return 0
+        # seed the slot's registration cursor past the shared prefix so
+        # install/decode publishes hash only the blocks this request adds
+        self._chain_pos[slot] = (full, hash(keys[full - 1]) if full
+                                 else _HASH_ROOT)
+        nb = self.blocks_for(cached)
+        gather = np.zeros((self.max_blocks,), np.int32)     # null page tail
+        for b in range(nb):
+            page = self._hash_to_page[keys[b]]
+            self._retain(page)
+            gather[b] = page
+            if b < full:
+                self.tables[slot, b] = page
+        self._gather_tables[slot] = gather
+        self._pinned[slot] = [int(gather[b]) for b in range(full, nb)]
+        return cached
+
+    def gather_prefix(self, slot: int, cache: list) -> list:
+        """Copy the slot's shared-prefix pages into a fresh batch-1
+        prefill cache (one jitted gather), releasing the COW pin."""
+        gather = self._gather_tables.pop(slot)
+        cache = _GATHER_PAGES(cache, self.cache, jnp.asarray(gather))
+        for page in self._pinned.pop(slot, []):
+            self._decref(page)
+        return cache
+
+    def register_prefix(self, slot: int, seq: np.ndarray) -> None:
+        """Content-register the slot's full, finalized blocks of ``seq``
+        so later admissions can share them. Idempotent; first writer
+        wins (an identical page already registered keeps the registry
+        entry and this slot's private copy stays unregistered).
+
+        The per-slot chain cursor makes repeated publishes incremental:
+        a slot's token sequence is append-only, so each install or
+        decode boundary-crossing hashes only the blocks added since the
+        last publish instead of re-walking the whole sequence.
+        """
+        if not self.prefix_enabled:
+            return
+        start, parent = self._chain_pos.get(slot, (0, _HASH_ROOT))
+        nb = len(seq) // self.block_size
+        if start >= nb:
+            return
+        window = np.asarray(seq, np.int32)[start * self.block_size:
+                                           nb * self.block_size]
+        self._register_window(slot, window, start, parent)
+
+    def register_tokens(self, slot: int, prompt: np.ndarray,
+                        out_tokens: List[int], upto: int) -> None:
+        """Decode-path publish: register blocks finalized below position
+        ``upto`` of the slot's (prompt + generated) sequence.
+
+        Materializes only the tokens past the slot's chain cursor — on a
+        page-boundary crossing that is one block's worth — so per-request
+        publication cost stays O(tokens), not O(tokens^2 / block_size).
+        """
+        if not self.prefix_enabled:
+            return
+        start, parent = self._chain_pos.get(slot, (0, _HASH_ROOT))
+        nb = upto // self.block_size
+        lo, hi = start * self.block_size, nb * self.block_size
+        if lo >= hi:
+            return
+        plen = len(prompt)
+        parts = []
+        if lo < plen:
+            parts.append(np.asarray(prompt[lo:min(hi, plen)], np.int32))
+        if hi > plen:
+            parts.append(np.asarray(out_tokens[max(lo - plen, 0):
+                                               hi - plen], np.int32))
+        self._register_window(slot, np.concatenate(parts), start, parent)
+
+    def _register_window(self, slot: int, window: np.ndarray,
+                         start_block: int, parent: int) -> None:
+        """Register ``window`` (token block(s) starting at block
+        ``start_block``'s boundary) and advance the slot's cursor."""
+        for off, key in enumerate(self._block_keys(window, parent)):
+            b = start_block + off
+            page = int(self.tables[slot, b])
+            if page < 0:
+                break
+            self._chain_pos[slot] = (b + 1, hash(key))
+            if key in self._hash_to_page or page in self._page_hash:
+                continue
+            self._hash_to_page[key] = page
+            self._page_hash[page] = key
+
     # -- allocation --------------------------------------------------------
 
-    def allocate_prefill(self, slot: int, prefill_len: int) -> None:
-        """Claim the pages that will hold a prefilled request's K/V."""
-        assert (self.tables[slot] < 0).all(), "slot still owns pages"
-        nb = self.blocks_for(prefill_len)
-        if nb > len(self._free):
-            raise RuntimeError("admission without enough free pages")
-        for b in range(nb):
-            self.tables[slot, b] = self._free.pop()
+    def _retain(self, page: int) -> None:
+        if self.ref[page] == 0:
+            self._cached.pop(page, None)
+        self.ref[page] += 1
+
+    def _decref(self, page: int) -> None:
+        assert self.ref[page] > 0, f"decref of unreferenced page {page}"
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            if page in self._page_hash:
+                self._cached[page] = None       # resident, evictable (LRU)
+            else:
+                self.cache = _INVALIDATE_PAGES(
+                    self.cache, jnp.asarray([page], np.int32))
+                self._free.append(page)
+
+    def _take_page(self) -> Optional[int]:
+        """Pop a writable page: the free list first, then the oldest
+        cached-free page (evicted: hash entry dropped, positions
+        invalidated). None when every page is referenced."""
+        if self._free:
+            return self._free.pop()
+        if self._cached:
+            page, _ = self._cached.popitem(last=False)
+            del self._hash_to_page[self._page_hash.pop(page)]
+            self.cache = _INVALIDATE_PAGES(self.cache,
+                                           jnp.asarray([page], np.int32))
+            return page
+        return None
 
     def ensure(self, slot: int, block: int) -> bool:
         """Allocate ``block`` for ``slot`` if needed; False when out of
         pages (the engine preempts a request and retries)."""
         if self.tables[slot, block] >= 0:
             return True
-        if not self._free:
+        page = self._take_page()
+        if page is None:
             return False
-        self.tables[slot, block] = self._free.pop()
+        self.ref[page] = 1
+        self.tables[slot, block] = page
+        return True
+
+    def ensure_writable(self, slot: int, block: int) -> bool:
+        """``ensure`` plus copy-on-write: a resident but *shared* block
+        (ref count > 1) is duplicated into a private page before the
+        caller writes into it, so sharers never observe the write. False
+        when out of pages."""
+        page = int(self.tables[slot, block])
+        if page < 0:
+            return self.ensure(slot, block)
+        if self.ref[page] <= 1:
+            return True
+        fresh = self._take_page()
+        if fresh is None:
+            return False
+        assert block >= self._shared_blocks[slot], \
+            "COW inside the shared prefix would break the install mask"
+        self.cache = _COPY_PAGE(self.cache, jnp.int32(page),
+                                jnp.int32(fresh))
+        self.ref[fresh] = 1
+        self.tables[slot, block] = fresh
+        self._decref(page)
         return True
 
     # -- device ops --------------------------------------------------------
 
     def write(self, slot: int, src_cache: list) -> None:
         """Scatter a prefilled batch-1 cache into the slot's pages (and
-        its slot-resident rows)."""
-        table = np.where(self.tables[slot] >= 0, self.tables[slot],
-                         self.num_pages).astype(np.int32)
+        its slot-resident rows). Shared-prefix blocks are masked out of
+        the scatter — they already hold this content and other requests
+        may be reading them."""
+        t = self.tables[slot].copy()
+        t[: self._shared_blocks[slot]] = -1
+        table = np.where(t >= 0, t, self.num_pages).astype(np.int32)
         self.cache = _WRITE_PAGES(self.cache, src_cache,
                                   jnp.asarray(table), jnp.int32(slot))
 
     def release(self, slot: int) -> None:
-        """Invalidate the slot's pages (pos -> -1), reset its slot-resident
-        rows, and return the pages to the free list."""
-        owned = self.tables[slot][self.tables[slot] >= 0]
+        """Drop the slot's claim on its pages and reset its slot-resident
+        rows. Each page's ref count is decremented; pages reaching zero
+        go back to the free list (positions invalidated) unless they are
+        content-registered, in which case they stay resident as
+        cached-free prefix pages until evicted by an allocation."""
+        assert slot not in self._pinned, "release during prefix gather"
+        owned = [int(p) for p in self.tables[slot] if p >= 0]
+        to_free = []
+        for page in owned:
+            assert self.ref[page] > 0, f"double free of page {page}"
+            self.ref[page] -= 1
+            if self.ref[page] == 0:
+                if page in self._page_hash:
+                    self._cached[page] = None
+                else:
+                    to_free.append(page)
         table = np.full((self.max_blocks,), self.num_pages, np.int32)
-        table[: len(owned)] = owned
+        table[: len(to_free)] = to_free
         self.cache = _RELEASE_PAGES(self.cache, jnp.asarray(table),
                                     jnp.int32(slot))
-        self._free.extend(int(p) for p in owned)
+        self._free.extend(to_free)
         self.tables[slot] = -1
+        self._shared_blocks[slot] = 0
+        self._gather_tables.pop(slot, None)
+        self._chain_pos.pop(slot, None)
 
     # -- views -------------------------------------------------------------
 
@@ -199,3 +504,38 @@ class PagedCacheManager:
     def fresh_prefill_cache(self) -> list:
         """Batch-1 contiguous cache whose rows split evenly into blocks."""
         return lm.init_cache(self.cfg, 1, self.padded_len, self.dtype)
+
+    def check_invariants(self) -> None:
+        """Assert pool-conservation invariants (test hook).
+
+        Free-list + cached-free + referenced pages partition the usable
+        pool; every block-table entry is counted by exactly its page's
+        ref count; nothing is simultaneously free and referenced.
+        """
+        free = set(self._free)
+        cached = set(self._cached)
+        pinned: Dict[int, int] = {}
+        for pages in self._pinned.values():
+            for p in pages:
+                pinned[p] = pinned.get(p, 0) + 1
+        refs = np.zeros_like(self.ref)
+        for row in self.tables:
+            for p in row[row >= 0]:
+                refs[p] += 1
+        for p, n in pinned.items():
+            refs[p] += n
+        assert not (free & cached), "page both free and cached"
+        assert 0 not in free and 0 not in cached, "null page escaped"
+        in_use = {p for p in range(1, self.num_pages) if self.ref[p] > 0}
+        assert not (in_use & free), "referenced page on the free list"
+        assert not (in_use & cached), "referenced page marked cached-free"
+        assert (refs == self.ref).all(), \
+            f"ref counts drifted: {self.ref.tolist()} vs {refs.tolist()}"
+        total = len(free) + len(cached) + len(in_use)
+        assert total == self.usable_pages, \
+            f"pages leaked: {total} accounted of {self.usable_pages}"
+        for page, h in self._page_hash.items():
+            assert self._hash_to_page.get(h) == page, "hash registry skew"
+        assert len(self._hash_to_page) == len(self._page_hash)
+        assert set(self._cached) <= set(self._page_hash), \
+            "cached-free page without a registry entry"

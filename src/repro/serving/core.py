@@ -4,16 +4,22 @@
 (slot, paged, static). One ``step()`` call is one engine *tick*:
 
   1. **admission** — queued requests are paired with FREE slots (gated
-     by the cache backend). Short prompts prefill in one shot, exactly
-     as before; prompts longer than ``prefill_chunk`` enter the chunked
-     PREFILL phase instead.
+     by the cache backend). The backend first claims whatever *cached
+     prefix* the pool already holds for the request's token sequence
+     (``begin_prefill``: shared pages enter the block table ref-counted,
+     and the prompt cursor starts at the shared-prefix boundary, so only
+     the uncached suffix is ever computed). Short suffixes prefill in
+     one shot, exactly as before; suffixes longer than ``prefill_chunk``
+     enter the chunked PREFILL phase instead.
   2. **chunked prefill** — every PREFILL slot advances by at most
      ``prefill_chunk`` prompt tokens (the paged backend allocates that
-     chunk's pages as the cursor moves). The final chunk samples the
-     first token and installs the built cache into the pool, so a long
-     prompt's compute is spread across ticks instead of serializing in
-     front of one tick's decode — the admission stall is bounded by the
-     chunk size.
+     chunk's pages as the cursor moves). With ``prefill_budget`` set,
+     one shared per-tick token budget caps the *total* prefill work a
+     tick performs across every admission (vLLM-style
+     ``max_num_batched_tokens``), so N simultaneous admissions cannot
+     stack N chunks into one tick — the admission stall is bounded by
+     the budget, not ``slots x chunk``. The final chunk samples the
+     first token and installs the built cache into the pool.
   3. **decode** — one batched decode step over every DECODE slot.
 
 Every tick returns a :class:`StepOutput` carrying the per-request token
@@ -60,7 +66,11 @@ class EngineStats:
     throughput is not inflated by prefill-time samples.
     ``max_prefill_tokens_per_step`` is the admission-stall bound: the
     most prefill tokens a single tick had to compute before its decode
-    could run (chunked prefill caps it near ``prefill_chunk``).
+    could run (chunked prefill caps it near ``prefill_chunk``; a
+    ``prefill_budget`` caps it at the budget across all admissions).
+    ``cached_prefix_tokens`` counts prefill tokens *skipped* because
+    their pages were found in the prefix cache — ``prefill_tokens``
+    counts only what was actually computed.
     """
 
     num_slots: int = 0
@@ -68,6 +78,7 @@ class EngineStats:
     slot_steps: int = 0
     useful_slot_steps: int = 0
     prefill_tokens: int = 0
+    cached_prefix_tokens: int = 0
     generated_tokens: int = 0
     prefill_sampled_tokens: int = 0
     decode_tokens: int = 0
@@ -108,6 +119,7 @@ class EngineStats:
             "prefill_sampled_tokens": self.prefill_sampled_tokens,
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
+            "cached_prefix_tokens": self.cached_prefix_tokens,
             "max_prefill_tokens_per_step": self.max_prefill_tokens_per_step,
             "padding_waste": round(self.padding_waste, 4),
             "tokens_per_step": round(self.tokens_per_step, 4),
@@ -180,9 +192,12 @@ class EngineCore:
                  num_slots: int = 4, max_len: int = 512, seed: int = 0,
                  continuous: bool = True,
                  prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
                  bucket_prompts: bool = False):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1")
         self.fns = fns
         self.qparams = qparams
         self.cfg = cfg
@@ -191,6 +206,7 @@ class EngineCore:
         self.max_len = max_len
         self.continuous = continuous
         self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
         self.bucket_prompts = bucket_prompts
         self.sched = Scheduler(num_slots, max_len)
         self.pool = self.backend.make_pool(cfg, num_slots, max_len)
@@ -269,31 +285,70 @@ class EngineCore:
     def _admit(self, deltas: Dict[int, RequestOutput]) -> None:
         gate = self.backend.admission_gate(self.pool)
         for slot, st in self.sched.admissions(gate):
-            toks = self._prefill_token_seq(st)
-            if (self.prefill_chunk is not None
-                    and len(toks) > self.prefill_chunk):
+            toks = st.prefill_token_seq()
+            # claim the cached prefix first: the prompt cursor starts at
+            # the shared-prefix boundary and only the suffix is computed
+            cached = self.backend.begin_prefill(self.pool, slot, st, toks)
+            slot.prefill_pos = cached
+            self.stats.cached_prefix_tokens += cached
+            suffix = len(toks) - cached
+            if (self.prefill_budget is not None
+                    or (self.prefill_chunk is not None
+                        and suffix > self.prefill_chunk)):
                 # enter the chunked PREFILL phase: the partial batch-1
-                # cache rides on the slot; chunks advance each tick
-                # (starting this one) in _advance_chunked_prefills
-                slot.prefill_cache = self.pool.fresh_prefill_cache()
-                slot.prefill_pos = 0
+                # cache (seeded with the gathered shared prefix) rides on
+                # the slot; chunks advance each tick (starting this one)
+                # in _advance_chunked_prefills. A prefill budget routes
+                # *every* admission here so one tick's total prefill work
+                # is capped across admissions, not per slot.
+                slot.prefill_cache = self._fresh_prefill_cache(slot, cached)
                 continue
-            self.backend.on_admit(self.pool, slot, len(toks))
-            logits, src = self._prefill_tokens(toks)
-            self.pool.write(slot.index, src)
-            self._count_prefill(len(toks))
+            cache = self._fresh_prefill_cache(slot, cached)
+            if not self.backend.alloc_prefill_chunk(
+                    self.pool, self.sched, self.stats, slot, len(toks)):
+                continue                # the slot preempted itself
+            logits, src = self._prefill_suffix(toks, cached, cache)
+            self.backend.install(self.pool, slot, st, src, toks)
+            self._count_prefill(suffix)
             self._finish_prefill(slot, st, logits, deltas)
+
+    def _fresh_prefill_cache(self, slot: Slot, cached: int) -> list:
+        """Batch-1 prefill cache, seeded from shared-prefix pages when
+        the admission had a prefix-cache hit."""
+        cache = self.pool.fresh_prefill_cache()
+        return self.backend.gather_prefill_cache(self.pool, slot, cached,
+                                                 cache)
+
+    def _budget_left(self) -> Optional[int]:
+        if self.prefill_budget is None:
+            return None
+        return max(self.prefill_budget - self._tick_prefill, 0)
 
     def _advance_chunked_prefills(self, deltas: Dict[int, RequestOutput]
                                   ) -> None:
-        """Feed each PREFILL slot one ``prefill_chunk``-token slice."""
+        """Feed each PREFILL slot one prefill slice.
+
+        The slice is bounded per slot by ``prefill_chunk`` and across the
+        whole tick by ``prefill_budget``; a slot whose turn finds the
+        budget exhausted simply waits for the next tick (its cursor and
+        partial cache persist), so total tick prefill work never exceeds
+        the budget no matter how many admissions landed together.
+        """
         for slot in self.sched.prefilling():
             if slot.state != PREFILL:   # preempted by an earlier reclaim
                 continue
             st = slot.req
-            toks = self._prefill_token_seq(st)
+            toks = st.prefill_token_seq()
             start = slot.prefill_pos
-            end = min(start + self.prefill_chunk, len(toks))
+            cap = len(toks) - start
+            if self.prefill_chunk is not None:
+                cap = min(cap, self.prefill_chunk)
+            budget = self._budget_left()
+            if budget is not None:
+                cap = min(cap, budget)
+            if cap <= 0:
+                continue                # tick budget spent: wait
+            end = start + cap
             if not self.backend.alloc_prefill_chunk(
                     self.pool, self.sched, self.stats, slot, end):
                 continue                # the slot preempted itself
@@ -310,8 +365,12 @@ class EngineCore:
             # size so mixed tail lengths share one trace (the same
             # argument as one-shot bucketing: pad writes land beyond the
             # prompt, where the causal mask hides them until decode
-            # overwrites). Recurrent/windowed models stay exact-length.
-            pad_end = (min(start + self.prefill_chunk, self.max_len)
+            # overwrites). Recurrent/windowed models stay exact-length;
+            # budget-only mode (no per-slot chunk) has no fixed slice
+            # size to pad to and stays exact as well.
+            pad_hi = (self.prefill_chunk if self.prefill_chunk is not None
+                      else cap)
+            pad_end = (min(start + pad_hi, self.max_len)
                        if self.bucket_prompts else end)
             buf = np.zeros((1, pad_end - start), np.int32)
             buf[0, : end - start] = toks[start:end]
@@ -320,7 +379,7 @@ class EngineCore:
                 self.qparams, slot.prefill_cache, jnp.asarray(buf),
                 jnp.asarray(positions), jnp.int32(end - start - 1))
             slot.prefill_cache = None
-            self.pool.write(slot.index, src)
+            self.backend.install(self.pool, slot, st, src, toks)
             self._finish_prefill(slot, st, logits, deltas)
 
     def _finish_prefill(self, slot: Slot, st: RequestState, logits,
@@ -336,22 +395,17 @@ class EngineCore:
         self.stats.prefill_sampled_tokens += 1
         self._record(slot, tok, deltas)
 
-    def _prefill_token_seq(self, st: RequestState) -> np.ndarray:
-        """Tokens this admission must prefill (resume includes generated
-        tokens up to, not including, the last sampled one)."""
-        if st.out_tokens:
-            return np.concatenate([np.asarray(st.prompt, np.int32),
-                                   np.asarray(st.out_tokens[:-1], np.int32)])
-        return np.asarray(st.prompt, np.int32)
-
-    def _prefill_tokens(self, toks: np.ndarray):
-        """Prefill one token sequence alone; returns (last logits, cache)."""
-        p = len(toks)
-        plen = self._bucket_len(p) if self.bucket_prompts else p
+    def _prefill_suffix(self, toks: np.ndarray, cached: int, cache: list):
+        """Prefill ``toks[cached:]`` into ``cache`` (which already holds
+        the gathered shared prefix when ``cached > 0``); returns (last
+        logits, cache)."""
+        p = len(toks) - cached
+        plen = p
+        if self.bucket_prompts:
+            plen = min(self._bucket_len(p), self.max_len - cached)
         buf = np.zeros((1, plen), np.int32)
-        buf[0, :p] = toks
-        positions = np.arange(plen, dtype=np.int32)[None]
-        cache = self.pool.fresh_prefill_cache()
+        buf[0, :p] = toks[cached:]
+        positions = np.arange(cached, cached + plen, dtype=np.int32)[None]
         return self.fns.prefill(self.qparams, cache, jnp.asarray(buf),
                                 jnp.asarray(positions), jnp.int32(p - 1))
 

@@ -120,7 +120,8 @@ class ServingEngine:
                  max_len: int = 512, seed: int = 0,
                  act_scale: str = "calibrated", backend: str | None = None,
                  interpret: bool | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 prefill_budget: int | None = None):
         # activation FP32 scales must not see a request's batch company, or
         # swapping a finished slot for a new request would perturb every
         # other in-flight generation. "calibrated" (static per-layer scales
@@ -143,6 +144,7 @@ class ServingEngine:
         self.max_len = max_len
         self.seed = seed
         self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
         self.last_stats = EngineStats()
         # prompt-length bucketing pads one-shot prefill up to a power of
         # two, which bounds compile count. Right-padding is exact for full
@@ -159,20 +161,26 @@ class ServingEngine:
 
     # -- public API --------------------------------------------------------
 
-    def make_core(self, prefill_chunk: int | None = None) -> EngineCore:
+    def make_core(self, prefill_chunk: int | None = None,
+                  prefill_budget: int | None = None) -> EngineCore:
         """A fresh step-driven core over a new cache pool. Jit trace
         caches are shared across cores of the same engine.
-        ``prefill_chunk`` overrides the engine default for this core
-        (``0`` forces one-shot prefill, as in the CLIs)."""
+        ``prefill_chunk`` / ``prefill_budget`` override the engine
+        defaults for this core (``0`` forces one-shot / unbudgeted
+        prefill, as in the CLIs)."""
         if prefill_chunk is None:
             chunk = self.prefill_chunk
         else:
             chunk = prefill_chunk or None   # 0 -> one-shot
+        if prefill_budget is None:
+            budget = self.prefill_budget
+        else:
+            budget = prefill_budget or None  # 0 -> unbudgeted
         return EngineCore(self.fns, self.qparams, self.cfg,
                           cache_backend=self.cache_backend,
                           num_slots=self.batch_size, max_len=self.max_len,
                           seed=self.seed, continuous=self.continuous,
-                          prefill_chunk=chunk,
+                          prefill_chunk=chunk, prefill_budget=budget,
                           bucket_prompts=self._bucket_prompts)
 
     def run(self, requests: List[Request]) -> List[Request]:
@@ -230,19 +238,31 @@ class PagedServingEngine(ServingEngine):
     active-request count rounded up to a power of two (ragged decode).
     Chunked prefill allocates each chunk's pages as the prompt cursor
     advances.
+
+    ``prefix_cache=True`` turns the pool content-addressed: full pages
+    are registered under a chained block hash, admissions whose token
+    sequence starts with a registered chain share those pages ref-counted
+    instead of recomputing them (only the uncached suffix is prefilled
+    and charged against the pool), and a shared tail page a request must
+    write into is duplicated copy-on-write. Greedy tokens are identical
+    to ``prefix_cache=False``; configs with slot-resident mixer state
+    (sliding windows, SSM/RWKV) silently serve unshared because their
+    state cannot be skipped.
     """
 
     paged = True
 
     def __init__(self, *args, num_pages: int | None = None,
                  block_size: int = 16, decode_buckets: bool = False,
-                 **kwargs):
+                 prefix_cache: bool = False, **kwargs):
         self.num_pages = num_pages
         self.block_size = block_size
         self.decode_buckets = decode_buckets
+        self.prefix_cache = prefix_cache
         super().__init__(*args, **kwargs)
 
     def _make_backend(self) -> PagedBackend:
         return PagedBackend(num_pages=self.num_pages,
                             block_size=self.block_size,
-                            decode_buckets=self.decode_buckets)
+                            decode_buckets=self.decode_buckets,
+                            prefix_cache=self.prefix_cache)

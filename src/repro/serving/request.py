@@ -114,6 +114,10 @@ class RequestState(_TickMetrics):
     first_token_step: int = -1
     finish_step: int = -1
     preemptions: int = 0            # times evicted to free cache pages
+    # prompt tokens whose prefill was skipped because their pages were
+    # found in the prefix cache (summed across admissions: a preempted
+    # request that resumes through cached pages counts those hits too)
+    cached_prefix_tokens: int = 0
 
     @property
     def sampling(self) -> SamplingParams:
@@ -133,6 +137,16 @@ class RequestState(_TickMetrics):
         generated token except the last, which is fed at the next decode
         step (fresh requests: just the prompt)."""
         return self.prompt_len + max(len(self.out_tokens) - 1, 0)
+
+    def prefill_token_seq(self) -> np.ndarray:
+        """The token sequence a (re-)admission prefills — and the content
+        the prefix cache matches and registers pages against. Length
+        equals :attr:`resume_prefill_len`."""
+        if self.out_tokens:
+            return np.concatenate([np.asarray(self.prompt, np.int32),
+                                   np.asarray(self.out_tokens[:-1],
+                                              np.int32)])
+        return np.asarray(self.prompt, np.int32)
 
 
 @dataclasses.dataclass
@@ -188,6 +202,8 @@ class Request(_TickMetrics):
     first_token_step: int = -1
     finish_step: int = -1
     preemptions: int = 0            # times evicted to free cache pages
+    cached_prefix_tokens: int = 0   # prefill tokens served from the
+    # prefix cache instead of being recomputed
 
     @property
     def prompt_len(self) -> int:
@@ -213,3 +229,4 @@ class Request(_TickMetrics):
         self.first_token_step = state.first_token_step
         self.finish_step = state.finish_step
         self.preemptions = state.preemptions
+        self.cached_prefix_tokens = state.cached_prefix_tokens

@@ -90,9 +90,12 @@ class Scheduler:
         """Pair queued requests with FREE slots; marks them PREFILL.
 
         ``can_admit(state) -> bool`` gates each admission on resource
-        availability (the paged backend passes the free-page check). The
-        queue stays strictly FIFO: when the head request cannot be
-        admitted, nothing behind it jumps ahead.
+        availability — the paged backend's gate computes the request's
+        cached-prefix length and checks free pages against only the
+        *uncached* suffix (shared-prefix pages are reused ref-counted,
+        not allocated), reserving as it approves. The queue stays
+        strictly FIFO: when the head request cannot be admitted, nothing
+        behind it jumps ahead.
         """
         out = []
         for slot in self.slots:
@@ -149,9 +152,14 @@ class Scheduler:
         The request returns to the *front* of the queue (FIFO order is
         preserved) keeping its generated tokens; re-admission prefills
         ``prompt + out_tokens[:-1]`` to rebuild the K/V it lost and then
-        resumes decoding (``resume``) without re-sampling anything. A
-        PREFILL-state victim (mid chunked prefill) simply discards its
-        partial cache and re-prefills from scratch on re-admission.
+        resumes decoding (``resume``) without re-sampling anything. With
+        a ref-counted pool, eviction only *decrefs* the victim's pages —
+        pages other sharers still reference (or that stay content-
+        registered in the prefix cache) remain resident, so the resume
+        prefill usually re-shares most of what was "lost" instead of
+        recomputing it. A PREFILL-state victim (mid chunked prefill)
+        simply discards its partial cache and re-prefills from the
+        re-matched prefix boundary on re-admission.
         """
         assert slot.state in (DECODE, PREFILL), slot.state
         st = slot.req

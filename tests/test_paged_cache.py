@@ -204,6 +204,13 @@ def _manager(num_pages=5, slots=2):
                              block_size=16)
 
 
+def _claim(m, slot, prefill_len):
+    """Claim the blocks a prefill of ``prefill_len`` tokens occupies
+    (what the backend's per-chunk allocation does on admission)."""
+    for b in range(m.blocks_for(prefill_len)):
+        assert m.ensure(slot, b)
+
+
 class TestPagedCacheManager:
     def test_null_page_reserved(self):
         m = _manager()
@@ -212,7 +219,7 @@ class TestPagedCacheManager:
 
     def test_allocate_release_roundtrip(self):
         m = _manager()
-        m.allocate_prefill(0, 20)           # 2 blocks
+        _claim(m, 0, 20)                    # 2 blocks
         assert m.pages_in_use == 2
         assert (m.tables[0, :2] >= 1).all() and m.tables[0, 2] < 0
         m.release(0)
@@ -221,7 +228,7 @@ class TestPagedCacheManager:
 
     def test_ensure_allocates_once(self):
         m = _manager()
-        m.allocate_prefill(0, 10)           # 1 block
+        _claim(m, 0, 10)                    # 1 block
         assert m.ensure(0, 1)
         page = m.tables[0, 1]
         assert page >= 1
@@ -230,27 +237,28 @@ class TestPagedCacheManager:
 
     def test_ensure_fails_when_exhausted(self):
         m = _manager(num_pages=2)           # 1 usable page
-        m.allocate_prefill(0, 10)
+        _claim(m, 0, 10)
         assert not m.ensure(1, 0)
 
-    def test_can_admit_counts_first_decode_block(self):
+    def test_admission_charge_counts_first_decode_block(self):
         m = _manager(num_pages=3)           # 2 usable
-        assert m.can_admit(16)              # prefill 1 block + tail block
-        assert not m.can_admit(32)          # would need 3 blocks
+        # prefill 1 block + tail block fits; 2 prefill blocks + tail not
+        assert m.admission_charge(np.arange(16)) == (0, 2)
+        assert m.admission_charge(np.arange(32))[1] > m.free_page_count
 
     def test_read_tables_null_for_unallocated(self):
         m = _manager()
-        m.allocate_prefill(1, 5)
+        _claim(m, 1, 5)
         t = m.read_tables()
         assert t[0].tolist() == [0, 0, 0]
         assert t[1, 0] >= 1 and t[1, 1] == 0
 
     def test_released_pages_are_reused(self):
         m = _manager(num_pages=2)
-        m.allocate_prefill(0, 10)
+        _claim(m, 0, 10)
         page = int(m.tables[0, 0])
         m.release(0)
-        m.allocate_prefill(1, 10)
+        _claim(m, 1, 10)
         assert int(m.tables[1, 0]) == page
 
 

@@ -1,0 +1,477 @@
+"""Prefix-cached paged KV: content-addressed pages, ref counts, COW.
+
+Three layers of coverage:
+
+  * engine-level greedy/sampled parity — prefix caching ON must be
+    token-identical to OFF (and to the slot pool) on shared-prefix
+    workloads, including chunked prefill, mid-prefill preemption+resume,
+    the per-tick prefill token budget, and two sharers diverging past a
+    shared page boundary (the COW path);
+  * ``PagedCacheManager`` unit tests — match/share/register semantics,
+    ref counting, cached-free retention + LRU eviction, copy-on-write
+    via ``ensure_writable``;
+  * randomized pool-allocation invariants — admit/grow/release/preempt
+    sequences (via ``tests/_hypothesis_compat.py``) assert no page is
+    leaked, double-freed, or freed while referenced, and that free +
+    cached + referenced pages always partition the pool.
+
+The fast tests drive an unquantized (method="none") reduced dense model;
+the arc-quantized architecture matrix (dense/MoE/SSM/hybrid — where
+non-pageable state or shape-coupled MoE dispatch must silently disable
+sharing while staying correct) runs under the `slow` marker with the
+other end-to-end serving suites.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.models import capture_stats, init_params
+from repro.quant import make_plan_bundle, quantize_weights_for_serving
+from repro.serving import (PagedCacheManager, PagedServingEngine, Request,
+                           ServingEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=2)
+    params = init_params(cfg, KEY)
+    return cfg, params, QuantConfig(method="none")
+
+
+def _shared_prefix_workload(cfg, n=5, sys_len=32, seed=0, temperature=0.0,
+                            max_new=6):
+    """n requests sharing a ``sys_len``-token system prompt with unique
+    short tails — the workload prefix caching exists for."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(2, 7))).astype(np.int32)
+        reqs.append(Request(prompt=np.concatenate([sys_prompt, tail]),
+                            max_new_tokens=max_new + (i % 3),
+                            temperature=temperature))
+    return reqs
+
+
+def _tokens(engine, reqs):
+    served = engine.run(copy.deepcopy(reqs))
+    assert all(r.done for r in served)
+    return [r.out_tokens for r in served], served
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: prefix caching is a pure memory/scheduling change
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_on_matches_off_and_slot_pool(tiny):
+    cfg, params, quant = tiny
+    reqs = _shared_prefix_workload(cfg)
+    slot = ServingEngine(params, cfg, quant, None, batch_size=2, max_len=64)
+    off = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                             max_len=64)
+    on = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                            max_len=64, prefix_cache=True)
+    ref, _ = _tokens(slot, reqs)
+    t_off, _ = _tokens(off, reqs)
+    t_on, served = _tokens(on, reqs)
+    assert t_on == t_off == ref
+    s_on, s_off = on.last_stats, off.last_stats
+    # every request after the first skips the shared system prompt
+    assert s_on.cached_prefix_tokens >= 4 * 32
+    assert s_on.prefill_tokens < s_off.prefill_tokens
+    assert s_off.cached_prefix_tokens == 0
+    assert [r.cached_prefix_tokens > 0 for r in served[1:]] == [True] * 4
+
+
+def test_fully_cached_prompt_cow_duplicates_tail(tiny):
+    """Two identical block-aligned prompts: the second shares every full
+    block; the capped tail block is duplicated copy-on-write (read from
+    the shared page, written to a private one) so only the final token
+    is recomputed — and the shared original is never written."""
+    cfg, params, quant = tiny
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    reqs = [Request(prompt=prompt.copy(), max_new_tokens=5)
+            for _ in range(2)]
+    off = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                             max_len=64)
+    on = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                            max_len=64, prefix_cache=True)
+    t_off, _ = _tokens(off, reqs)
+    t_on, served = _tokens(on, reqs)
+    assert t_on == t_off
+    assert served[0].cached_prefix_tokens == 0
+    assert served[1].cached_prefix_tokens == 31    # capped at len-1
+
+
+def test_sharers_diverge_past_shared_boundary_sampled(tiny):
+    """Identical prompts, temperature>0, distinct request ids: the
+    sharers take the COW path, then their sampled continuations diverge
+    in private pages — each must match its solo (unshared) trace."""
+    cfg, params, quant = tiny
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    reqs = [Request(prompt=prompt.copy(), max_new_tokens=8,
+                    temperature=1.4) for _ in range(2)]
+    on = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                            max_len=64, seed=7, prefix_cache=True)
+    t_on, _ = _tokens(on, reqs)
+    # solo references: each request served alone, no sharing possible
+    solo = []
+    for i, r in enumerate(reqs):
+        eng = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                                 max_len=64, seed=7)
+        core = eng.make_core()
+        core.add_request(copy.deepcopy(r).to_generation_request(request_id=i))
+        while core.has_unfinished():
+            core.step()
+        solo.append(core.states[i].out_tokens)
+    assert t_on == solo
+    assert t_on[0] != t_on[1]       # genuinely diverged after the fork
+
+
+def test_chunked_prefill_and_preemption_with_prefix(tiny):
+    """Chunked prefill resumes from the shared-prefix boundary; a pool
+    too small to hold everyone preempts mid-flight and the resume
+    re-shares its own registered pages. Tokens must be unchanged."""
+    cfg, params, quant = tiny
+    reqs = _shared_prefix_workload(cfg, n=6, seed=5)
+    ref, _ = _tokens(ServingEngine(params, cfg, quant, None, batch_size=2,
+                                   max_len=64), reqs)
+    eng = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                             max_len=64, num_pages=8, block_size=8,
+                             prefix_cache=True, prefill_chunk=8)
+    out, _ = _tokens(eng, reqs)
+    assert out == ref
+    assert eng.last_stats.preemptions > 0
+    assert eng.last_stats.cached_prefix_tokens > 0
+
+
+def test_prefix_cache_admits_more_from_same_pool(tiny):
+    """The concurrency claim: with the system prompt's pages shared, a
+    pool that could only hold ~2 unshared requests serves the same
+    workload with fewer preemptions and less prefill compute."""
+    cfg, params, quant = tiny
+    reqs = _shared_prefix_workload(cfg, n=6, seed=6)
+    pool_pages = 2 * (64 // 16) + 1     # two slots' worth of pages
+    kw = dict(batch_size=4, max_len=64, num_pages=pool_pages, block_size=16)
+    off = PagedServingEngine(params, cfg, quant, None, **kw)
+    on = PagedServingEngine(params, cfg, quant, None, prefix_cache=True,
+                            **kw)
+    t_off, _ = _tokens(off, reqs)
+    t_on, _ = _tokens(on, reqs)
+    assert t_on == t_off
+    assert on.last_stats.prefill_tokens < off.last_stats.prefill_tokens
+    assert on.last_stats.decode_steps <= off.last_stats.decode_steps
+
+
+# ---------------------------------------------------------------------------
+# Per-tick prefill token budget (satellite: vLLM-style shared bound)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which", ["slot", "paged"])
+def test_prefill_budget_bounds_tick_across_admissions(which, tiny):
+    """N simultaneous long admissions may not stack N chunks into one
+    tick: the shared budget caps the tick's total prefill tokens, with
+    greedy tokens unchanged."""
+    cfg, params, quant = tiny
+    rng = np.random.default_rng(7)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 24)
+                    .astype(np.int32), max_new_tokens=4) for _ in range(3)]
+    cls = ServingEngine if which == "slot" else PagedServingEngine
+    ref_eng = cls(params, cfg, quant, None, batch_size=3, max_len=48)
+    ref, _ = _tokens(ref_eng, reqs)
+    # per-slot chunking alone: 3 admissions x 8-token chunks in one tick
+    chunked = cls(params, cfg, quant, None, batch_size=3, max_len=48,
+                  prefill_chunk=8)
+    t_c, _ = _tokens(chunked, reqs)
+    budgeted = cls(params, cfg, quant, None, batch_size=3, max_len=48,
+                   prefill_chunk=8, prefill_budget=8)
+    t_b, _ = _tokens(budgeted, reqs)
+    assert t_c == ref and t_b == ref
+    assert chunked.last_stats.max_prefill_tokens_per_step == 3 * 8
+    assert budgeted.last_stats.max_prefill_tokens_per_step <= 8
+
+
+def test_prefill_budget_without_chunk(tiny):
+    """A budget alone (no per-slot chunk) slices prefill by whatever
+    budget remains in the tick."""
+    cfg, params, quant = tiny
+    rng = np.random.default_rng(8)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 20)
+                    .astype(np.int32), max_new_tokens=3) for _ in range(2)]
+    ref, _ = _tokens(ServingEngine(params, cfg, quant, None, batch_size=2,
+                                   max_len=48), reqs)
+    eng = ServingEngine(params, cfg, quant, None, batch_size=2, max_len=48,
+                        prefill_budget=6)
+    out, _ = _tokens(eng, reqs)
+    assert out == ref
+    assert eng.last_stats.max_prefill_tokens_per_step <= 6
+
+
+# ---------------------------------------------------------------------------
+# PagedCacheManager unit tests (no model forward)
+# ---------------------------------------------------------------------------
+
+
+def _manager(num_pages=8, slots=2, block_size=8, max_len=32,
+             prefix_cache=True):
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=1)
+    return PagedCacheManager(cfg, slots, max_len, num_pages=num_pages,
+                             block_size=block_size,
+                             prefix_cache=prefix_cache)
+
+
+def _admit(m, slot, seq):
+    """Manager-level admission: share the cached prefix, then claim the
+    remaining blocks and register the full ones (what the backend does
+    around the prefill)."""
+    cached = m.share_prefix(slot, seq)
+    if cached:
+        m.gather_prefix(slot, m.fresh_prefill_cache())
+    for b in range(cached // m.block_size, m.blocks_for(len(seq))):
+        assert m.ensure_writable(slot, b)
+    m.register_prefix(slot, seq)
+    return cached
+
+
+class TestPrefixManager:
+    def test_match_requires_registration(self):
+        m = _manager()
+        seq = np.arange(20, dtype=np.int32)
+        assert m.match_prefix(seq) == 0
+        _admit(m, 0, seq)
+        # a second sequence sharing the first two full blocks
+        seq2 = np.concatenate([seq[:16], np.arange(40, 50, dtype=np.int32)])
+        assert m.match_prefix(seq2) == 16
+        m.check_invariants()
+
+    def test_match_capped_below_full_sequence(self):
+        m = _manager()
+        seq = np.arange(16, dtype=np.int32)
+        _admit(m, 0, seq)
+        assert m.match_prefix(seq) == 15    # must recompute the last token
+
+    def test_share_increfs_release_decrefs(self):
+        m = _manager()
+        seq = np.arange(24, dtype=np.int32)
+        _admit(m, 0, seq)
+        page = int(m.tables[0, 0])
+        assert m.ref[page] == 1
+        cached = _admit(m, 1, np.concatenate(
+            [seq[:16], np.arange(60, 66, dtype=np.int32)]))
+        assert cached == 16
+        assert int(m.tables[1, 0]) == page and m.ref[page] == 2
+        m.release(0)
+        assert m.ref[page] == 1             # slot 1 still reads it
+        m.release(1)
+        assert m.ref[page] == 0
+        # registered pages stay resident (cached-free), not on the free list
+        assert page not in m._free and page in m._cached
+        m.check_invariants()
+
+    def test_cached_free_pages_rematch_then_evict(self):
+        m = _manager(num_pages=4, slots=1, block_size=8, max_len=16)
+        seq = np.arange(16, dtype=np.int32)
+        _admit(m, 0, seq)
+        m.release(0)
+        assert m.cached_page_count > 0
+        # the same content re-shares the resident pages
+        assert m.match_prefix(seq) == 15
+        # exhausting the pool evicts cached-free pages for reuse
+        other = np.arange(100, 116, dtype=np.int32)
+        _admit(m, 0, other)
+        m.check_invariants()
+        assert m.match_prefix(seq) < 15     # at least one page evicted
+
+    def test_ensure_writable_cows_shared_page(self):
+        m = _manager()
+        seq = np.arange(16, dtype=np.int32)
+        _admit(m, 0, seq)
+        page = int(m.tables[0, 0])
+        # slot 1 shares the full block outright (simulating a forked table)
+        m._retain(page)
+        m.tables[1, 0] = page
+        assert m.ref[page] == 2
+        assert m.ensure_writable(1, 0)
+        fresh = int(m.tables[1, 0])
+        assert fresh != page
+        assert m.ref[page] == 1 and m.ref[fresh] == 1
+        assert int(m.tables[0, 0]) == page  # the original is untouched
+        m.check_invariants()
+
+    def test_prefix_disabled_keeps_plain_pool_behavior(self):
+        m = _manager(prefix_cache=False)
+        seq = np.arange(24, dtype=np.int32)
+        assert _admit(m, 0, seq) == 0
+        m.release(0)
+        assert m.cached_page_count == 0     # nothing retained
+        assert m.pages_in_use == 0
+        m.check_invariants()
+
+    def test_admission_charge_counts_cached_free_retention(self):
+        """A cache hit on cached-free pages pins them, shrinking the
+        evictable supply: the admission charge must count those pages or
+        a same-tick gate could over-admit against them."""
+        m = _manager(num_pages=6, slots=2, block_size=8, max_len=32)
+        seq = np.arange(24, dtype=np.int32)
+        _admit(m, 0, seq)
+        m.release(0)                        # 3 full blocks cached-free
+        cached, charge = m.admission_charge(seq)
+        assert cached == 23                 # all 3 blocks hit, capped len-1
+        # 2 fresh pages (COW tail block + first decode block) + 3
+        # retained cached-free pages
+        assert charge == 2 + 3
+        # once re-admitted, blocks 0-1 are actively shared (ref > 0) —
+        # free to retain; the COW tail's original page returned to
+        # cached-free after the gather (the sharer keeps a private
+        # copy), so it is still charged
+        _admit(m, 0, seq)
+        cached, charge = m.admission_charge(seq)
+        assert cached == 23 and charge == 2 + 1
+        m.check_invariants()
+
+    def test_register_first_writer_wins(self):
+        m = _manager()
+        seq = np.arange(16, dtype=np.int32)
+        _admit(m, 0, seq)
+        page = int(m.tables[0, 0])
+        # an identical private block on slot 1 must not steal the entry
+        assert m.ensure_writable(1, 0)
+        m.register_prefix(1, seq)
+        assert m._hash_to_page[m._page_hash[page]] == page
+        assert int(m.tables[1, 0]) not in m._page_hash
+        m.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Randomized pool-allocation invariants (satellite: no leak / double free)
+# ---------------------------------------------------------------------------
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "grow", "release", "preempt"]),
+              st.integers(0, 2),            # slot
+              st.integers(1, 30),           # sequence length
+              st.integers(0, 5)),           # content seed (small alphabet
+    min_size=1, max_size=40)                # -> frequent prefix collisions)
+
+
+@settings(max_examples=15)
+@given(_OPS)
+def test_randomized_allocation_invariants(ops):
+    """Random admit/grow/release/preempt sequences conserve the pool:
+    free + cached + referenced pages always partition ``usable_pages``,
+    ref counts equal table occurrences, and nothing double-frees. The
+    small content alphabet makes prefix hits, COW, cached-free retention
+    and eviction all fire along the way."""
+    m = _manager(num_pages=7, slots=3, block_size=8, max_len=32)
+    occupied = {}                           # slot -> tokens resident
+    for op, slot, length, salt in ops:
+        if op == "admit" and slot not in occupied:
+            seq = (np.full((length,), salt, np.int32)
+                   + np.arange(length, dtype=np.int32) // 8)
+            cached = m.share_prefix(slot, seq)
+            if cached:
+                m.gather_prefix(slot, m.fresh_prefill_cache())
+            ok = True
+            for b in range(cached // m.block_size, m.blocks_for(len(seq))):
+                if not m.ensure_writable(slot, b):
+                    ok = False
+                    break
+            if ok:
+                m.register_prefix(slot, seq)
+                occupied[slot] = len(seq)
+            else:                           # admission failed: roll back
+                m.release(slot)
+        elif op == "grow" and slot in occupied:
+            tokens = occupied[slot]
+            if tokens < m.padded_len:
+                if m.ensure_writable(slot, tokens // m.block_size):
+                    occupied[slot] = tokens + 1
+        elif op in ("release", "preempt") and slot in occupied:
+            m.release(slot)                 # preempt reclaims identically
+            del occupied[slot]
+        m.check_invariants()
+    for slot in list(occupied):
+        m.release(slot)
+    m.check_invariants()
+    assert m.pages_in_use == 0
+    assert len(m._free) + m.cached_page_count == m.usable_pages
+
+
+# ---------------------------------------------------------------------------
+# Arc-quantized architecture matrix (slow): the acceptance criterion
+# ---------------------------------------------------------------------------
+
+# dense attention shares; MoE must silently disable (capacity-dropping
+# dispatch couples tokens across the prefill shape, so a shared prefix is
+# not bit-identical to recomputing it); SSM and hybrid must disable too
+# (slot-resident recurrent/ring state cannot be skipped)
+PARITY_ARCHS = ["qwen2-1.5b", "qwen3-moe-235b-a22b", "rwkv6-3b",
+                "jamba-v0.1-52b"]
+SHARING_ARCHS = {"qwen2-1.5b"}
+
+
+def _build(arch):
+    cfg = ARCHS[arch].reduced()
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    stats = capture_stats(params, cfg, tokens=toks)
+    quant = QuantConfig(method="arc")
+    plans = make_plan_bundle(stats, cfg, quant, params)
+    qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                           pack=True)
+    return cfg, quant, plans, qparams
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefix_cache_parity_quantized_matrix(arch):
+    """Greedy tokens with prefix caching ON equal OFF on the quantized
+    dense/MoE/SSM/hybrid matrix, with chunked prefill in the loop; the
+    pageable configs must actually share, the rest must not."""
+    cfg, quant, plans, qparams = _build(arch)
+    reqs = _shared_prefix_workload(cfg, n=4, sys_len=18, seed=21,
+                                   max_new=4)
+    kw = dict(batch_size=2, max_len=48, prefill_chunk=8, block_size=16)
+    off = PagedServingEngine(qparams, cfg, quant, plans, **kw)
+    on = PagedServingEngine(qparams, cfg, quant, plans, prefix_cache=True,
+                            **kw)
+    t_off, _ = _tokens(off, reqs)
+    t_on, _ = _tokens(on, reqs)
+    assert t_on == t_off, arch
+    if arch in SHARING_ARCHS:
+        # the first wave (one admission per slot) is cold — nothing is
+        # registered until the first install — so the 2 requests behind
+        # it hit the shared 16-token block
+        assert on.last_stats.cached_prefix_tokens >= 2 * 16
+    else:
+        assert on.last_stats.cached_prefix_tokens == 0
+
+
+@pytest.mark.slow
+def test_prefix_cache_preemption_resume_quantized():
+    """Mid-flight preemption + resume with prefix caching on the
+    quantized dense path: the COW/cached-free machinery must preserve
+    greedy tokens while the pool thrashes."""
+    cfg, quant, plans, qparams = _build("qwen2-1.5b")
+    reqs = _shared_prefix_workload(cfg, n=5, sys_len=18, seed=22,
+                                   max_new=4)
+    ref, _ = _tokens(ServingEngine(qparams, cfg, quant, plans, batch_size=2,
+                                   max_len=48), reqs)
+    eng = PagedServingEngine(qparams, cfg, quant, plans, batch_size=2,
+                             max_len=48, num_pages=6, block_size=8,
+                             prefix_cache=True, prefill_chunk=8)
+    out, _ = _tokens(eng, reqs)
+    assert out == ref
+    assert eng.last_stats.preemptions > 0
