@@ -196,6 +196,11 @@ class QuantConfig:
     # CPU — the CI configuration)
     backend: str = "reference"       # reference | pallas
     interpret: bool = False
+    # paged-attention decode: True streams K/V pages through the Pallas
+    # kernel (block table walked in-kernel, no (B, nblocks*block_size)
+    # gather); False keeps the jnp gather fallback — the parity oracle
+    # and the A/B baseline for benchmarks/paged_attention.py
+    attn_kernel: bool = True
 
     @property
     def activation_fmt(self) -> str:

@@ -10,15 +10,25 @@
                    scale codes decoded in-kernel) and switches to a decode
                    fast path (single M tile, f32 scratch accumulator, each
                    weight tile decoded once) at serving decode shapes
+  paged_attention  vLLM-style paged-attention decode: the per-request
+                   block table is a scalar-prefetch operand whose index
+                   maps stream K/V pages straight from the pool in HBM,
+                   with an online-softmax VMEM accumulator, GQA head
+                   grouping, posp-driven masking, and traced valid-row
+                   masking for ragged decode batches
 
-Each kernel has a pure-jnp oracle in ref.py; tests run interpret=True.
-These are the kernels `QuantConfig.backend="pallas"` routes every deployed
-linear through (models/layers._arc_pallas_matmul).
+Each kernel has a pure-jnp oracle in ref.py (the paged-attention oracle
+is the gather + ``chunked_attention`` path it replaces); tests run
+interpret=True. The GEMM kernels are what `QuantConfig.backend="pallas"`
+routes every deployed linear through (models/layers._arc_pallas_matmul);
+the attention kernel is the default paged decode path
+(`QuantConfig.attn_kernel`).
 """
 from repro.kernels import common, ops, ref
 from repro.kernels.arc_fused_quant import arc_fused_quantize
 from repro.kernels.nvfp4_gemm import nvfp4_gemm
 from repro.kernels.nvfp4_quant import nvfp4_quantize
+from repro.kernels.paged_attention import paged_attention_decode
 
 __all__ = ["common", "ops", "ref", "arc_fused_quantize", "nvfp4_gemm",
-           "nvfp4_quantize"]
+           "nvfp4_quantize", "paged_attention_decode"]

@@ -7,6 +7,9 @@ kernel bodies and in the pure-jnp references.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 # In-kernel 8-bit scale decode / byte-pair unpack for packed weights. Both
@@ -19,6 +22,21 @@ from repro.core.formats import unpack_e2m1  # noqa: F401  (re-export)
 
 E2M1_MAX = 6.0
 E4M3_MAX = 448.0
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel's interpret flag: ``None`` means *auto*.
+
+    Auto compiles on TPU backends and falls back to interpreter mode (a
+    bit-faithful, still-jittable jnp emulation) everywhere else, so a
+    kernel that is always on the hot path — like the paged-attention
+    decode kernel — runs under CPU CI without every caller having to
+    thread an explicit flag. An explicit True/False always wins (the
+    quantization kernels keep their opt-in ``interpret=True`` contract).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
 
 # decision thresholds between consecutive E2M1 magnitudes, and which ties
 # round UP (to the even code): values 0/.5/1/1.5/2/3/4/6 -> midpoints

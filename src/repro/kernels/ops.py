@@ -26,8 +26,26 @@ from repro.kernels import ref
 from repro.kernels.arc_fused_quant import arc_fused_quantize
 from repro.kernels.nvfp4_gemm import nvfp4_gemm
 from repro.kernels.nvfp4_quant import nvfp4_quantize
+from repro.kernels.paged_attention import paged_attention_decode
 
 GROUP = 16
+
+
+def paged_attention(q, kp, vp, posp, block_table, q_pos, active=None, *,
+                    window=None, interpret=None):
+    """Paged-attention decode step over a K/V page pool.
+
+    The serving entry point ``models.layers.attention_layer`` dispatches
+    here on the paged decode branch: the block table is walked inside
+    the kernel (scalar-prefetch page indexing), so no ``(B, max_blocks *
+    block_size)`` K/V view is ever materialized. ``interpret=None``
+    auto-resolves (compiled on TPU, interpreter elsewhere) via
+    ``common.resolve_interpret``. See ``kernels.paged_attention`` for
+    the full contract.
+    """
+    return paged_attention_decode(q, kp, vp, posp, block_table, q_pos,
+                                  active, window=window,
+                                  interpret=interpret)
 
 
 def quantize_weight_interleaved(w: jax.Array, order: jax.Array, s: int,

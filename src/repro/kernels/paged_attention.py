@@ -1,0 +1,167 @@
+"""Pallas paged-attention decode kernel (vLLM-style block-table walk).
+
+One decode step of paged attention reads, per batch row, the K/V the
+row's block table points at. The jnp fallback materializes that logical
+view with a host-side gather — ``kp[block_table]`` builds a
+``(B, max_blocks * block_size)`` copy of every resident token before a
+single score is computed, undoing the paged pool's memory win on the
+hot path. This kernel never builds that view: the grid walks
+``(batch row, logical block)`` cells, the block table rides in as a
+*scalar-prefetch* operand so each cell's ``BlockSpec`` index map selects
+the physical page to stream from HBM into VMEM, and an online-softmax
+accumulator in VMEM scratch carries the running ``(max, sum, weighted
+V)`` across a row's pages. Per tick the kernel therefore moves exactly
+the pages the tables name — HBM traffic is O(resident tokens), with no
+``(B, nblocks*bs)`` intermediate in the HLO.
+
+Masking matches ``models.layers.chunked_attention`` (the gather-path
+oracle) exactly:
+
+  * position masking is driven by the pool's ``posp`` leaf: a slot is
+    attended iff ``0 <= kv_pos <= q_pos`` (and inside ``window`` when
+    set), so null-page entries (pos stays -1) and recycled pages'
+    unwritten tails contribute nothing;
+  * rows with ``q_pos < 0`` (inactive slots) and rows at or beyond the
+    traced ``active`` count (ragged padding under dynamic valid-row
+    masking) skip all compute and emit zeros — ``active`` is a traced
+    scalar, so any active-request count reuses one trace;
+  * GQA folds query heads as ``(Hkv, rep)`` groups against shared K/V
+    heads, the same head grouping as the oracle.
+
+Probabilities are masked multiplicatively (``p = where(valid, p, 0)``)
+rather than relying on ``exp(NEG_INF - m)`` underflow, so a fully
+masked page is an exact no-op on the accumulator regardless of the
+running max. Rows that attend nothing finish with ``l == 0`` and emit
+zeros, mirroring the oracle's ``where(l > 0, acc / l, 0)``.
+
+``interpret=None`` resolves via :func:`repro.kernels.common.
+resolve_interpret`: compiled on TPU, interpreter (bit-faithful jnp
+emulation, still jittable) everywhere else — the CI configuration.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import resolve_interpret
+
+NEG_INF = -1e30     # matches models.layers.chunked_attention
+
+
+def _decode_kernel(table_ref, qpos_ref, active_ref,   # scalar prefetch
+                   q_ref, k_ref, v_ref, pos_ref,       # VMEM blocks
+                   o_ref, acc_ref, m_ref, l_ref,       # output + scratch
+                   *, rep: int, nblocks: int, scale: float,
+                   window: Optional[int]):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qp = qpos_ref[b]
+
+    # dynamic valid-row masking: padding rows (beyond the traced active
+    # count) and inactive rows (q_pos < 0) never touch the accumulator
+    @pl.when((qp >= 0) & (b < active_ref[0]))
+    def _attend_page():
+        q = q_ref[0].astype(jnp.float32)                 # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bs, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)                 # (bs, Hkv, D)
+        pos = pos_ref[0]                                 # (bs,)
+        hq, hd = q.shape
+        hkv = k.shape[1]
+        q3 = q.reshape(hkv, rep, hd)                     # GQA head groups
+        # s[h, r, t] = q[h, r, :] . k[t, h, :]  (f32 accumulation)
+        s = jax.lax.dot_general(
+            q3, k.transpose(1, 2, 0), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale  # (Hkv, rep, bs)
+        valid = (pos >= 0) & (pos <= qp)
+        if window is not None:
+            valid &= (qp - pos) < window
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # multiplicative masking: a fully masked page contributes exactly
+        # nothing even while the running max is still NEG_INF
+        p = jnp.where(valid[None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        # pv[h, r, d] = sum_t p[h, r, t] * v[t, h, d]
+        pv = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+
+    @pl.when(j == nblocks - 1)
+    def _finish():
+        l = l_ref[...]
+        out = jnp.where(l[..., None] > 0,
+                        acc_ref[...] / jnp.maximum(l, 1e-30)[..., None], 0.0)
+        o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def paged_attention_decode(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                           posp: jax.Array, block_table: jax.Array,
+                           q_pos: jax.Array,
+                           active: Optional[jax.Array] = None, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """One paged-attention decode step; pages streamed via the table.
+
+    q: (B, Hq, D) this step's query (one token per row); kp/vp:
+    (num_pages, block_size, Hkv, D) page-pool K/V; posp: (num_pages,
+    block_size) absolute positions (-1 = unwritten); block_table:
+    (B, max_blocks) physical page ids (unallocated entries must name the
+    null page 0); q_pos: (B,) absolute query positions (-1 = inactive
+    row); active: traced scalar — rows at index >= active are padding
+    and emit zeros (defaults to B, i.e. every row live). Returns
+    (B, Hq, D) in q's dtype.
+    """
+    B, hq, hd = q.shape
+    _, bs, hkv, _ = kp.shape
+    nblocks = block_table.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    if active is None:
+        active = jnp.int32(B)
+    active = jnp.asarray(active, jnp.int32).reshape(1)
+    table = block_table.astype(jnp.int32)
+    qpos = q_pos.astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, rep=rep, nblocks=nblocks,
+                               scale=1.0 / math.sqrt(hd), window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, hq, hd), lambda b, j, t, qp, a: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda b, j, t, qp, a: (t[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda b, j, t, qp, a: (t[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs), lambda b, j, t, qp, a: (t[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, hd), lambda b, j, t, qp, a: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, rep, hd), jnp.float32),    # acc
+            pltpu.VMEM((hkv, rep), jnp.float32),        # running max
+            pltpu.VMEM((hkv, rep), jnp.float32),        # running sum
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, hq, hd), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(table, qpos, active, q, kp, vp, posp)

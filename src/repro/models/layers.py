@@ -516,15 +516,22 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
 def attention_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
                     positions: jax.Array, cache: Optional[Dict] = None,
                     window: Optional[int] = None,
-                    block_table: Optional[jax.Array] = None):
+                    block_table: Optional[jax.Array] = None,
+                    active_rows: Optional[jax.Array] = None):
     """x: (B, S, d); positions (B, S) or (B, S, 3) for M-RoPE.
 
     Returns (out, new_cache). With a slot cache ({"k","v","pos"}), k/v are
     written at ``positions % cache_len`` (ring buffer for windowed
     layers). With a paged cache ({"kp","vp","posp"} page pool +
     ``block_table`` (B, max_blocks)), the decode token scatters into the
-    tail page named by the table and K/V are gathered page-wise on read;
-    rows with position < 0 are inert (write dropped, mask empty).
+    tail page named by the table and attention runs over the pool
+    directly — the Pallas paged-attention kernel when
+    ``ctx.quant.attn_kernel`` is set (block table walked in-kernel, no
+    gathered K/V view), otherwise a page-wise jnp gather (the parity
+    oracle); rows with position < 0 are inert (write dropped, mask
+    empty), and ``active_rows`` (traced scalar) additionally zeroes
+    packed-batch padding rows past the active-request count without
+    retracing per count.
     """
     cfg = ctx.cfg
     B, S, _ = x.shape
@@ -559,11 +566,15 @@ def attention_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
         num_pages, bs = cache["posp"].shape
         nblocks = block_table.shape[1]
         p = pos1d[:, 0]                                  # (B,) absolute pos
-        blk = jnp.clip(p // bs, 0, nblocks - 1)
-        page = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
-        # rows with p < 0 (inactive slots / ragged padding) route the
-        # write out of bounds so the scatter drops it
-        page = jnp.where(p >= 0, page, num_pages)
+        blk = p // bs
+        page = jnp.take_along_axis(
+            block_table, jnp.clip(blk, 0, nblocks - 1)[:, None], axis=1)[:, 0]
+        # rows with p < 0 (inactive slots / ragged padding) and positions
+        # past the table's capacity (blk >= nblocks: the scheduler failed
+        # to grow the table) route the write out of bounds so the scatter
+        # drops it — an overflowing token must never overwrite the last
+        # allocated block's K/V
+        page = jnp.where((p >= 0) & (blk < nblocks), page, num_pages)
         off = jnp.clip(p, 0, None) % bs
         ck = cache["kp"].at[page, off].set(
             k[:, 0].astype(cache["kp"].dtype), mode="drop")
@@ -571,11 +582,27 @@ def attention_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array,
             v[:, 0].astype(cache["vp"].dtype), mode="drop")
         cp = cache["posp"].at[page, off].set(p, mode="drop")
         new_cache = {"kp": ck, "vp": cv, "posp": cp}
-        # gather this row's logical view: unallocated table entries point
-        # at the null page whose positions are -1 (masked out)
-        k_all = ck[block_table].reshape(B, nblocks * bs, hkv, hd)
-        v_all = cv[block_table].reshape(B, nblocks * bs, hkv, hd)
-        kv_pos = cp[block_table].reshape(B, nblocks * bs)
+        if ctx.quant.attn_kernel:
+            # stream pages through the Pallas kernel: the block table is
+            # a scalar-prefetch operand, so no (B, nblocks*bs) K/V view
+            # is ever materialized
+            out = KOPS.paged_attention(
+                q[:, 0], ck, cv, cp, block_table, p, active_rows,
+                window=window,
+                interpret=True if ctx.quant.interpret else None)
+            out = out[:, None].reshape(B, S, hq * hd)
+        else:
+            # gather fallback (parity oracle): unallocated table entries
+            # point at the null page whose positions are -1 (masked out)
+            k_all = ck[block_table].reshape(B, nblocks * bs, hkv, hd)
+            v_all = cv[block_table].reshape(B, nblocks * bs, hkv, hd)
+            kv_pos = cp[block_table].reshape(B, nblocks * bs)
+            out = chunked_attention(q, k_all.astype(q.dtype),
+                                    v_all.astype(q.dtype), pos1d, kv_pos,
+                                    window=window, q_chunk=1)
+            out = out.reshape(B, S, hq * hd)
+        y = dense(ctx, f"{name}.wo", out, params["wo"])
+        return maybe_shard(y, "batch", None, None), new_cache
     else:
         L = cache["k"].shape[1]
         # per-row scatter: continuous batching decodes slots at different

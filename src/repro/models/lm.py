@@ -353,7 +353,8 @@ def forward(params: Dict, cfg: ModelConfig,
             compute_logits: bool = True,
             remat: bool = False,
             block_tables: Optional[jax.Array] = None,
-            slot_ids: Optional[jax.Array] = None):
+            slot_ids: Optional[jax.Array] = None,
+            active_rows: Optional[jax.Array] = None):
     """Returns (logits, new_cache, aux) where aux = {"moe_loss", "capture"}.
 
     ``block_tables`` (B, max_blocks) int32 maps each batch row's logical
@@ -363,7 +364,10 @@ def forward(params: Dict, cfg: ModelConfig,
     row each batch row occupies, letting a ragged decode batch (B = the
     active-request bucket, smaller than the pool) gather/scatter the
     slot-resident cache rows it touches; entries >= pool size are padding
-    rows whose writes are dropped.
+    rows whose writes are dropped. ``active_rows`` (traced int32 scalar)
+    marks batch rows at index >= active_rows as padding for the paged
+    attention kernel — dynamic valid-row masking, so one trace serves
+    every active-request count of a packed decode batch.
     """
     if embeds is None:
         x = jnp.take(params["embed"], tokens, axis=0)
@@ -455,6 +459,8 @@ def forward(params: Dict, cfg: ModelConfig,
                 out, nac = L.attention_layer(ctx, "attn", p["attn"], h,
                                              positions, ac, window,
                                              block_table=block_tables
+                                             if paged else None,
+                                             active_rows=active_rows
                                              if paged else None)
                 if nac is not None:
                     nc.update(nac)

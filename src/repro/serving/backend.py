@@ -21,9 +21,13 @@ advances, decode allocates the tail block on demand (registering each
 block it finalizes and duplicating copy-on-write any block it would
 write while shared), and when the pool runs dry the latest-admitted
 request — decoding *or* mid chunked prefill — is preempted (its pages
-decref'd, the request requeued at the front). ``decode_buckets=True``
-shrinks each decode launch to the active-request count rounded up to a
-power of two.
+decref'd, the request requeued at the front). Decode launches pack the
+active requests into the low batch rows and pass the packed count as a
+traced scalar — the paged-attention kernel skips padding rows without
+retracing (dynamic valid-row masking); ``decode_buckets=True``
+additionally shrinks the launch width to the active count rounded up to
+a power of two (one retrace per bucket — a legacy knob now that padding
+rows cost nothing in-kernel).
 """
 from __future__ import annotations
 
@@ -229,17 +233,24 @@ class PagedBackend(SlotBackend):
 
     def decode_rows(self, pool, active: List[Slot], num_slots: int
                     ) -> Tuple[int, Dict[int, Slot], dict]:
+        # active requests are always packed into the low batch rows and
+        # the packed count rides along as a *traced* scalar: the paged
+        # attention kernel masks rows >= active dynamically, so every
+        # active-request count reuses the one full-width trace.
+        # decode_buckets additionally shrinks the launch width to the
+        # next power of two (one retrace per bucket) — a legacy knob now
+        # that padding rows are skipped in-kernel either way.
         m = (_bucket_pow2(len(active), num_slots) if self.decode_buckets
              else num_slots)
-        rows = ({i: s for i, s in enumerate(active)} if self.decode_buckets
-                else {s.index: s for s in active})
+        rows = {i: s for i, s in enumerate(active)}
         tables = np.zeros((m, pool.max_blocks), np.int32)
         slot_ids = np.full((m,), num_slots, np.int32)    # OOB = padding
         read_tables = pool.read_tables()
         for i, s in rows.items():
             tables[i] = read_tables[s.index]
             slot_ids[i] = s.index
-        return m, rows, {"tables": tables, "slot_ids": slot_ids}
+        return m, rows, {"tables": tables, "slot_ids": slot_ids,
+                         "active": np.int32(len(active))}
 
 
 def _bucket_pow2(n: int, cap: int) -> int:

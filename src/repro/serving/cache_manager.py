@@ -22,7 +22,12 @@ whose token sequence starts with a registered chain *shares* those pages
 (ref count incremented, no recompute) instead of prefilling them. Pages
 whose ref count drops to zero but that remain registered stay resident
 ("cached-free") and are only evicted — positions invalidated, hash entry
-dropped — when an allocation finds the free list empty. The capped tail
+dropped — when an allocation finds the free list empty; eviction picks
+the page with the fewest prefix hits (LRU among ties), so a hot system
+prompt outlives a burst of one-off prompts. Concurrent admissions of
+the same uncached prefix deduplicate at registration: a block hash that
+collides with an existing entry repoints the table at the registered
+page and frees the private duplicate. The capped tail
 block of a fully-cached sequence is duplicated copy-on-write: its
 content is gathered into the new request's prefill cache and installed
 into a fresh private page, so the shared original is never written.
@@ -170,7 +175,10 @@ class PagedCacheManager:
         self.ref = np.zeros((num_pages,), np.int32)      # tables naming page
         self._hash_to_page: Dict[int, int] = {}
         self._page_hash: Dict[int, int] = {}             # registered pages
-        self._cached: "OrderedDict[int, None]" = OrderedDict()  # ref==0, LRU
+        # ref==0 registered pages, insertion-ordered; eviction picks the
+        # least-hit page (LRU among ties), see _take_page
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._hits: Dict[int, int] = {}      # prefix reuses per registered page
         self._shared_blocks = np.zeros((num_slots,), np.int32)  # per slot
         self._gather_tables: Dict[int, np.ndarray] = {}
         self._pinned: Dict[int, List[int]] = {}          # gather-pinned refs
@@ -312,6 +320,7 @@ class PagedCacheManager:
         for b in range(nb):
             page = self._hash_to_page[keys[b]]
             self._retain(page)
+            self._hits[page] = self._hits.get(page, 0) + 1
             gather[b] = page
             if b < full:
                 self.tables[slot, b] = page
@@ -377,14 +386,32 @@ class PagedCacheManager:
     def _register_window(self, slot: int, window: np.ndarray,
                          start_block: int, parent: int) -> None:
         """Register ``window`` (token block(s) starting at block
-        ``start_block``'s boundary) and advance the slot's cursor."""
+        ``start_block``'s boundary) and advance the slot's cursor.
+
+        A key that is already registered to a *different* page means two
+        requests prefilled the same uncached prefix concurrently (each
+        built a private copy; only the first registered). Instead of
+        first-writer-wins leaving the duplicate invisible to sharing,
+        the duplicate is deduplicated in place: the slot's table is
+        repointed at the registered page and the private copy freed —
+        so identical content is resident exactly once.
+        """
         for off, key in enumerate(self._block_keys(window, parent)):
             b = start_block + off
             page = int(self.tables[slot, b])
             if page < 0:
                 break
             self._chain_pos[slot] = (b + 1, hash(key))
-            if key in self._hash_to_page or page in self._page_hash:
+            reg = self._hash_to_page.get(key)
+            if reg is not None:
+                if (reg != page and page not in self._page_hash
+                        and self.ref[page] == 1):
+                    self._retain(reg)
+                    self.tables[slot, b] = reg
+                    self._decref(page)      # private dup -> invalidate+free
+                    self._hits[reg] = self._hits.get(reg, 0) + 1
+                continue
+            if page in self._page_hash:
                 continue
             self._hash_to_page[key] = page
             self._page_hash[page] = key
@@ -408,13 +435,20 @@ class PagedCacheManager:
                 self._free.append(page)
 
     def _take_page(self) -> Optional[int]:
-        """Pop a writable page: the free list first, then the oldest
-        cached-free page (evicted: hash entry dropped, positions
-        invalidated). None when every page is referenced."""
+        """Pop a writable page: the free list first, then the *least
+        reused* cached-free page (evicted: hash entry dropped, positions
+        invalidated). Weighting eviction by prefix hit count keeps a hot
+        shared prefix — e.g. the system prompt — resident through a
+        burst of one-off prompts that pure LRU would let flush it; ties
+        fall back to LRU (min() scans the OrderedDict in insertion
+        order, so the oldest least-hit page wins). None when every page
+        is referenced."""
         if self._free:
             return self._free.pop()
         if self._cached:
-            page, _ = self._cached.popitem(last=False)
+            page = min(self._cached, key=lambda p: self._hits.get(p, 0))
+            self._cached.pop(page)
+            self._hits.pop(page, None)
             del self._hash_to_page[self._page_hash.pop(page)]
             self.cache = _INVALIDATE_PAGES(self.cache,
                                            jnp.asarray([page], np.int32))

@@ -147,7 +147,9 @@ class EngineFns:
     prefill_chunk(qp, cache, tokens, positions) -> cache
     decode(qp, cache, tokens, positions, temps, rids, tok_idx, seed)
         -> (next_tokens, cache)
-    decode_paged(..., tables, slot_ids, temps, rids, tok_idx, seed)
+    decode_paged(..., tables, slot_ids, active, temps, rids, tok_idx,
+        seed) — ``active`` is the traced packed-row count driving the
+        kernel's dynamic valid-row masking
     sample(logits, temp, rid, tok_idx, seed) -> token
     """
 
@@ -446,7 +448,8 @@ class EngineCore:
                 jnp.asarray(pos)]
         if extra:
             args += [jnp.asarray(extra["tables"]),
-                     jnp.asarray(extra["slot_ids"])]
+                     jnp.asarray(extra["slot_ids"]),
+                     jnp.asarray(extra["active"])]
         fn = getattr(self.fns, self.backend.decode_fn)
         nxt, self.pool.cache = fn(*args, jnp.asarray(temps),
                                   jnp.asarray(rids), jnp.asarray(tok_idx),

@@ -78,12 +78,13 @@ def _build_fns(cfg: ModelConfig, quant: QuantConfig,
         nxt = sample_rows(lg, temps, rids, tok_idx, seed)
         return nxt, cache
 
-    def decode_paged(qp, cache, tokens, positions, tables, slot_ids, temps,
-                     rids, tok_idx, seed):
+    def decode_paged(qp, cache, tokens, positions, tables, slot_ids,
+                     active, temps, rids, tok_idx, seed):
         logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
                                       positions=positions, cache=cache,
                                       quant=quant, plans=plans,
-                                      block_tables=tables, slot_ids=slot_ids)
+                                      block_tables=tables, slot_ids=slot_ids,
+                                      active_rows=active)
         lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
         nxt = sample_rows(lg, temps, rids, tok_idx, seed)
         return nxt, cache
@@ -120,6 +121,7 @@ class ServingEngine:
                  max_len: int = 512, seed: int = 0,
                  act_scale: str = "calibrated", backend: str | None = None,
                  interpret: bool | None = None,
+                 attn_kernel: bool | None = None,
                  prefill_chunk: int | None = None,
                  prefill_budget: int | None = None):
         # activation FP32 scales must not see a request's batch company, or
@@ -136,6 +138,11 @@ class ServingEngine:
             quant = dataclasses.replace(quant, backend=backend)
         if interpret is not None:
             quant = dataclasses.replace(quant, interpret=interpret)
+        # paged decode attention: True (the QuantConfig default) streams
+        # K/V pages through the Pallas paged-attention kernel; False pins
+        # the jnp gather fallback — the A/B parity baseline.
+        if attn_kernel is not None:
+            quant = dataclasses.replace(quant, attn_kernel=attn_kernel)
         self.qparams = qparams
         self.cfg = cfg
         self.quant = quant
@@ -234,8 +241,13 @@ class PagedServingEngine(ServingEngine):
     max_blocks`` usable pages — the correctness-anchor configuration,
     greedy-token-identical to ``ServingEngine``); pass fewer pages to
     oversubscribe memory, more slots to raise concurrency in the same
-    bytes. ``decode_buckets=True`` shrinks each decode launch to the
-    active-request count rounded up to a power of two (ragged decode).
+    bytes. Decode ticks run the Pallas paged-attention kernel by default
+    (``attn_kernel=False`` pins the jnp gather fallback for A/B parity):
+    active requests are packed into the low batch rows and the packed
+    count is a traced scalar, so ragged batches skip padding rows
+    in-kernel without retracing. ``decode_buckets=True`` additionally
+    shrinks each decode launch to the active-request count rounded up to
+    a power of two — a legacy knob now that padding rows cost nothing.
     Chunked prefill allocates each chunk's pages as the prompt cursor
     advances.
 

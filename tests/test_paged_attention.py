@@ -1,0 +1,269 @@
+"""Pallas paged-attention decode kernel: interpret-mode parity vs the
+gather-path oracle (dense/GQA, ragged active counts, null-page tables,
+single-resident and full-pool shapes), the block-table overflow
+regression, and engine-level kernel==gather==slot greedy parity."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.kernels.ops import paged_attention
+from repro.models import init_params
+from repro.models import layers as L
+from repro.serving import PagedServingEngine, Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs gather-path oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _oracle(q, kp, vp, posp, tables, qpos, window=None):
+    """The jnp path the kernel replaces: gather the logical view, then
+    chunked_attention — bit-for-bit the attention_layer fallback."""
+    B = q.shape[0]
+    nblocks, bs = tables.shape[1], kp.shape[1]
+    hkv, hd = kp.shape[2], kp.shape[3]
+    k_all = kp[tables].reshape(B, nblocks * bs, hkv, hd)
+    v_all = vp[tables].reshape(B, nblocks * bs, hkv, hd)
+    kv_pos = posp[tables].reshape(B, nblocks * bs)
+    out = L.chunked_attention(jnp.asarray(q)[:, None], jnp.asarray(k_all),
+                              jnp.asarray(v_all), jnp.asarray(qpos)[:, None],
+                              jnp.asarray(kv_pos), window=window, q_chunk=1)
+    return np.asarray(out[:, 0])
+
+
+def _rand_pool(rng, B, num_pages, bs, hkv, hd, nblocks, lengths):
+    """Pool with page 0 = null; per-row contiguous allocations of
+    ``lengths[i]`` tokens (length 0 -> inactive row: qpos -1, null
+    table). Unused pages keep stale random K/V bytes with posp = -1
+    (recycled-page semantics: masking must hide them)."""
+    kp = rng.normal(size=(num_pages, bs, hkv, hd)).astype(np.float32)
+    vp = rng.normal(size=(num_pages, bs, hkv, hd)).astype(np.float32)
+    posp = np.full((num_pages, bs), -1, np.int32)
+    tables = np.zeros((B, nblocks), np.int32)
+    qpos = np.full((B,), -1, np.int32)
+    nxt = 1
+    for i, n in enumerate(lengths):
+        if n == 0:
+            continue
+        qpos[i] = n - 1
+        for b in range((n + bs - 1) // bs):
+            page = nxt
+            nxt += 1
+            assert page < num_pages, "pool too small for this workload"
+            tables[i, b] = page
+            wrote = min(bs, n - b * bs)
+            posp[page, :wrote] = np.arange(b * bs, b * bs + wrote)
+    return kp, vp, posp, tables, qpos
+
+
+def _run_kernel(q, kp, vp, posp, tables, qpos, active=None, window=None):
+    return np.asarray(paged_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(posp),
+        jnp.asarray(tables), jnp.asarray(qpos), active, window=window,
+        interpret=True))
+
+
+def _assert_live_rows_match(out, ref, qpos):
+    live = qpos >= 0
+    np.testing.assert_allclose(out[live], ref[live], rtol=2e-5, atol=2e-6)
+    # dead rows (qpos < 0) emit exact zeros from the kernel; the oracle's
+    # softmax leaks uniform weights there (phantom exp(0) rows), but those
+    # rows never survive the engine's scatter-back
+    assert (out[~live] == 0).all()
+
+
+@pytest.mark.parametrize("hkv,rep", [(4, 1), (2, 4)])  # dense MHA / GQA
+def test_kernel_matches_gather(hkv, rep):
+    rng = np.random.default_rng(0)
+    bs, hd, nblocks = 8, 16, 3
+    lengths = [20, 1, 24, 0]                 # partial tail / single / full
+    kp, vp, posp, tables, qpos = _rand_pool(rng, 4, 12, bs, hkv, hd,
+                                            nblocks, lengths)
+    q = rng.normal(size=(4, hkv * rep, hd)).astype(np.float32)
+    out = _run_kernel(q, kp, vp, posp, tables, qpos)
+    ref = _oracle(q, kp, vp, posp, tables, qpos)
+    _assert_live_rows_match(out, ref, qpos)
+
+
+def test_kernel_single_resident():
+    rng = np.random.default_rng(1)
+    kp, vp, posp, tables, qpos = _rand_pool(rng, 1, 3, 4, 2, 8, 2, [5])
+    q = rng.normal(size=(1, 4, 8)).astype(np.float32)
+    out = _run_kernel(q, kp, vp, posp, tables, qpos)
+    _assert_live_rows_match(out, _oracle(q, kp, vp, posp, tables, qpos),
+                            qpos)
+
+
+def test_kernel_full_pool():
+    """Every usable page allocated, every table entry live."""
+    rng = np.random.default_rng(2)
+    B, bs, nblocks = 3, 4, 2
+    kp, vp, posp, tables, qpos = _rand_pool(
+        rng, B, B * nblocks + 1, bs, 2, 8, nblocks, [8, 8, 8])
+    q = rng.normal(size=(B, 4, 8)).astype(np.float32)
+    out = _run_kernel(q, kp, vp, posp, tables, qpos)
+    _assert_live_rows_match(out, _oracle(q, kp, vp, posp, tables, qpos),
+                            qpos)
+
+
+def test_kernel_window_masking():
+    rng = np.random.default_rng(3)
+    kp, vp, posp, tables, qpos = _rand_pool(rng, 2, 8, 8, 2, 16, 3,
+                                            [20, 24])
+    q = rng.normal(size=(2, 4, 16)).astype(np.float32)
+    out = _run_kernel(q, kp, vp, posp, tables, qpos, window=8)
+    ref = _oracle(q, kp, vp, posp, tables, qpos, window=8)
+    _assert_live_rows_match(out, ref, qpos)
+
+
+def test_ragged_active_counts_share_one_trace():
+    """Rows past the traced ``active`` scalar emit zeros, live rows are
+    untouched, and every count reuses a single trace (the dynamic
+    valid-row masking that replaces pow2 bucket retraces)."""
+    rng = np.random.default_rng(4)
+    B = 4
+    kp, vp, posp, tables, qpos = _rand_pool(rng, B, 14, 8, 2, 16, 3,
+                                            [20, 1, 24, 9])
+    q = rng.normal(size=(B, 4, 16)).astype(np.float32)
+    full = _run_kernel(q, kp, vp, posp, tables, qpos)
+    traces = [0]
+
+    def impl(active):
+        traces[0] += 1
+        return paged_attention(jnp.asarray(q), jnp.asarray(kp),
+                               jnp.asarray(vp), jnp.asarray(posp),
+                               jnp.asarray(tables), jnp.asarray(qpos),
+                               active, interpret=True)
+
+    f = jax.jit(impl)
+    for n in (1, 3, 4, 2):
+        out = np.asarray(f(jnp.int32(n)))
+        np.testing.assert_allclose(out[:n], full[:n], rtol=1e-6, atol=1e-7)
+        assert (out[n:] == 0).all()
+    assert traces[0] == 1, "active-count change retraced the kernel"
+
+
+def test_null_page_tables_contribute_nothing():
+    """Unallocated table tails point at the null page (positions -1);
+    padding its table out to max_blocks must not perturb a row."""
+    rng = np.random.default_rng(5)
+    kp, vp, posp, tables, qpos = _rand_pool(rng, 1, 4, 4, 2, 8, 6, [6])
+    q = rng.normal(size=(1, 4, 8)).astype(np.float32)
+    wide = _run_kernel(q, kp, vp, posp, tables, qpos)
+    narrow = _run_kernel(q, kp, vp, posp, tables[:, :2], qpos)
+    np.testing.assert_allclose(wide, narrow, rtol=1e-6, atol=1e-7)
+
+
+_SHAPES = st.tuples(
+    st.integers(1, 4),                       # batch rows
+    st.sampled_from([(1, 1), (2, 1), (2, 2), (2, 3)]),   # (hkv, rep)
+    st.sampled_from([4, 8]),                 # block size
+    st.integers(1, 3),                       # max_blocks
+    st.integers(0, 6),                       # content seed
+)
+
+
+@settings(max_examples=15)
+@given(_SHAPES)
+def test_randomized_kernel_oracle_parity(shape):
+    """Random pool layouts (ragged lengths including inactive rows, GQA
+    groupings, partial tails) stay bit-close to the gather oracle."""
+    B, (hkv, rep), bs, nblocks, salt = shape
+    rng = np.random.default_rng(1000 + salt)
+    lengths = [int(rng.integers(0, nblocks * bs + 1)) for _ in range(B)]
+    num_pages = 1 + sum((n + bs - 1) // bs for n in lengths) + 1
+    kp, vp, posp, tables, qpos = _rand_pool(rng, B, num_pages, bs, hkv,
+                                            8, nblocks, lengths)
+    q = rng.normal(size=(B, hkv * rep, 8)).astype(np.float32)
+    out = _run_kernel(q, kp, vp, posp, tables, qpos)
+    ref = _oracle(q, kp, vp, posp, tables, qpos)
+    _assert_live_rows_match(out, ref, qpos)
+
+
+# ---------------------------------------------------------------------------
+# Regression: block-table overflow must drop the write, not corrupt the
+# last allocated block
+# ---------------------------------------------------------------------------
+
+
+def _paged_attn_setup(block_size=4, nblocks=2, num_pages=6):
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=1)
+    ctx = L.LayerCtx(cfg)
+    params = L.init_attention(KEY, cfg)
+    pool = L.init_attention_page_pool(cfg, num_pages, block_size)
+    return cfg, ctx, params, pool
+
+
+def test_overflow_write_past_short_table_is_dropped():
+    """Decoding one token past a deliberately short block table: the old
+    ``clip(p // bs, 0, nblocks - 1)`` silently redirected the write into
+    the *last allocated block*, overwriting another token's K/V; it must
+    be dropped like the p < 0 padding writes."""
+    bs, nblocks = 4, 2
+    cfg, ctx, params, pool = _paged_attn_setup(bs, nblocks)
+    table = np.array([[1, 2]], np.int32)     # capacity: nblocks*bs = 8
+    # fill the table's capacity
+    posp = np.asarray(pool["posp"]).copy()
+    posp[1] = np.arange(0, bs)
+    posp[2] = np.arange(bs, 2 * bs)
+    pool = dict(pool, posp=jnp.asarray(posp))
+    x = jax.random.normal(KEY, (1, 1, cfg.d_model), jnp.float32)
+    # decode position 8: one past the table — blk = 2 is out of range
+    overflow_pos = jnp.full((1, 1), nblocks * bs, jnp.int32)
+    _, nc = L.attention_layer(ctx, "attn", params, x, overflow_pos, pool,
+                              block_table=jnp.asarray(table))
+    new_posp = np.asarray(nc["posp"])
+    # the write vanished: no slot anywhere took position 8, and the last
+    # allocated block's positions are intact (old clip behavior wrote
+    # posp[2, 0] = 8)
+    assert (new_posp == posp).all()
+    assert not (new_posp == nblocks * bs).any()
+
+
+def test_inactive_row_write_still_dropped():
+    """The p < 0 padding-row semantics the overflow fix shares."""
+    cfg, ctx, params, pool = _paged_attn_setup()
+    x = jax.random.normal(KEY, (1, 1, cfg.d_model), jnp.float32)
+    neg = jnp.full((1, 1), -1, jnp.int32)
+    _, nc = L.attention_layer(ctx, "attn", params, x, neg,
+                              pool, block_table=jnp.zeros((1, 2), jnp.int32))
+    assert (np.asarray(nc["posp"]) == np.asarray(pool["posp"])).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level greedy parity: slot == gather == kernel
+# ---------------------------------------------------------------------------
+
+
+def _engine_tokens(engine, reqs):
+    served = engine.run(copy.deepcopy(reqs))
+    assert all(r.done for r in served)
+    return [r.out_tokens for r in served]
+
+
+def test_engine_kernel_matches_gather_and_slot():
+    """PagedServingEngine default (kernel) == attn_kernel=False (gather)
+    == ServingEngine (slot pool), token-identical greedy traces."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    params = init_params(cfg, KEY)
+    quant = QuantConfig(method="none")
+    rng = np.random.default_rng(7)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=6) for n in (5, 11, 3)]
+    kw = dict(batch_size=2, max_len=48)
+    slot = _engine_tokens(ServingEngine(params, cfg, quant, None, **kw), reqs)
+    gather = _engine_tokens(
+        PagedServingEngine(params, cfg, quant, None, attn_kernel=False,
+                           **kw), reqs)
+    kernel = _engine_tokens(
+        PagedServingEngine(params, cfg, quant, None, **kw), reqs)
+    assert slot == gather == kernel

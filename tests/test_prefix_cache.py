@@ -333,24 +333,74 @@ class TestPrefixManager:
         # retained cached-free pages
         assert charge == 2 + 3
         # once re-admitted, blocks 0-1 are actively shared (ref > 0) —
-        # free to retain; the COW tail's original page returned to
-        # cached-free after the gather (the sharer keeps a private
-        # copy), so it is still charged
+        # free to retain; the COW tail block is rewritten privately but
+        # registration dedups it back onto the original registered page
+        # (now actively referenced), so only the 2 fresh pages remain
         _admit(m, 0, seq)
         cached, charge = m.admission_charge(seq)
-        assert cached == 23 and charge == 2 + 1
+        assert cached == 23 and charge == 2
         m.check_invariants()
 
-    def test_register_first_writer_wins(self):
+    def test_register_dedups_identical_private_page(self):
+        """Concurrent admissions of the same uncached prefix build
+        private copies; registration must repoint the duplicate at the
+        registered page and free the copy (not first-writer-wins)."""
         m = _manager()
         seq = np.arange(16, dtype=np.int32)
         _admit(m, 0, seq)
         page = int(m.tables[0, 0])
-        # an identical private block on slot 1 must not steal the entry
         assert m.ensure_writable(1, 0)
+        dup = int(m.tables[1, 0])
+        assert dup != page
         m.register_prefix(1, seq)
+        # registry still names the original page...
         assert m._hash_to_page[m._page_hash[page]] == page
-        assert int(m.tables[1, 0]) not in m._page_hash
+        # ...and slot 1 now shares it; the private duplicate was freed
+        assert int(m.tables[1, 0]) == page
+        assert m.ref[page] == 2
+        assert dup in m._free and dup not in m._page_hash
+        m.check_invariants()
+
+    def test_register_keeps_shared_duplicate_private(self):
+        """Dedup only fires on private (ref == 1) duplicates: a page
+        other tables still name must not be repointed from under them."""
+        m = _manager(slots=3)
+        seq = np.arange(16, dtype=np.int32)
+        _admit(m, 0, seq)
+        page = int(m.tables[0, 0])
+        assert m.ensure_writable(1, 0)
+        dup = int(m.tables[1, 0])
+        m._retain(dup)                      # simulate a second reader
+        m.tables[2, 0] = dup
+        m.register_prefix(1, seq)
+        assert int(m.tables[1, 0]) == dup   # left alone
+        assert m.ref[page] == 1 and m.ref[dup] == 2
+        m.check_invariants()
+
+    def test_hot_prefix_survives_oneoff_burst(self):
+        """Hit-weighted eviction: a reused prefix (system prompt) must
+        outlive a burst of one-off prompts that pure LRU would let
+        flush it, because eviction targets the least-hit pages first."""
+        m = _manager(num_pages=8, slots=1, block_size=8, max_len=32)
+        hot = np.arange(16, dtype=np.int32)
+        _admit(m, 0, hot)
+        m.release(0)
+        _admit(m, 0, hot)                   # reuse: bumps the hit counts
+        m.release(0)
+        one_a = np.arange(100, 116, dtype=np.int32)
+        one_b = np.arange(300, 316, dtype=np.int32)
+        _admit(m, 0, one_a)
+        m.release(0)
+        _admit(m, 0, one_b)
+        m.release(0)
+        # 6 cached-free pages + 1 free; hot pages are the LRU-oldest, so
+        # pure LRU would evict them first. 3 blocks force 2 evictions.
+        assert m.cached_page_count == 6 and m.free_page_count == 7
+        _admit(m, 0, np.arange(200, 224, dtype=np.int32))
+        m.check_invariants()
+        assert m.match_prefix(hot) == 15    # hot prefix still resident
+        assert m.match_prefix(one_a) == 0   # zero-hit burst page evicted
+        m.release(0)
         m.check_invariants()
 
 
