@@ -1,0 +1,164 @@
+"""Robustness overhead and recovery: the cost of the hardening layer.
+
+Two claims back the request-lifecycle hardening (abort / deadlines /
+poisoned-request isolation) added to the serving engine:
+
+  1. **Guard overhead** — the per-row non-finite-logit guard runs inside
+     the decode jit (one fused ``isfinite`` all-reduce per row; only
+     ``B`` bools cross to the host), so its decode-step cost should be
+     noise against the batched forward. Served twice with identical
+     workloads (``nan_guard`` off/on, same quantized weights, greedy
+     parity asserted), target < 2% per-step overhead.
+  2. **Abort recovery** — a fleet aborting ~10% of its in-flight
+     requests at random ticks must not disturb survivors (slot-invariant
+     sampling: traces stay bit-identical to the abort-free run) and must
+     return every aborted request's pages to the pool (no leak: pages in
+     use return to zero, pool invariants hold).
+
+Run: PYTHONPATH=src python -m benchmarks.robustness
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.quant import quantize_weights_for_serving
+from repro.serving import PagedServingEngine, Request, ServingEngine
+from benchmarks.common import emit, plans_for, trained_proxy
+
+
+def _workload(vocab: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, vocab,
+                                        int(rng.integers(4, 17))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(8, 25)))
+            for _ in range(n)]
+
+
+def run(n_requests: int = 12, slots: int = 4, seed: int = 0):
+    cfg, params, data = trained_proxy("qwen2-1.5b", layers=2)
+    quant = QuantConfig(method="arc")
+    plans = plans_for(cfg, params, data, quant)
+    qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                           pack=True)
+    reqs = _workload(cfg.vocab_size, n_requests, seed)
+
+    overhead = run_guard_overhead(cfg, qparams, quant, plans, reqs, slots)
+    run_abort_recovery(cfg, qparams, quant, plans, reqs, slots, seed)
+    return overhead
+
+
+def run_guard_overhead(cfg, qparams, quant, plans, reqs, slots: int):
+    """Decode-step cost of the in-jit NaN guard: off vs on, same tokens."""
+    engines = {name: ServingEngine(qparams, cfg, quant, plans,
+                                   batch_size=slots, max_len=48,
+                                   nan_guard=guard)
+               for name, guard in (("guard_off", False), ("guard_on", True))}
+    results = {}
+    for name, eng in engines.items():           # traces + async-compile drain
+        for _ in range(2):
+            results[name] = (None, eng.run(copy.deepcopy(reqs)))
+    times = {name: [] for name in engines}
+    for _ in range(5):                          # interleaved: both variants
+        for name, eng in engines.items():       # see the same host jitter
+            results[name] = (None, eng.run(copy.deepcopy(reqs)))
+            s = eng.last_stats
+            times[name].append(s.wall_seconds / max(s.decode_steps, 1) * 1e6)
+    for name, eng in engines.items():
+        step_us = float(np.median(times[name]))
+        s = eng.last_stats
+        emit(f"serve_{name}", step_us,
+             f"steps={s.decode_steps} tok_per_step={s.tokens_per_step:.3f}")
+        results[name] = (step_us, results[name][1])
+    # the guard must be pure observation: token parity off vs on
+    for a, b in zip(results["guard_off"][1], results["guard_on"][1]):
+        assert a.out_tokens == b.out_tokens, "nan_guard changed outputs"
+
+    # the overhead claim itself is measured on the jitted decode step in
+    # isolation (median of many calls, block_until_ready), free of the
+    # engine's per-tick host bookkeeping and scheduler noise. The cache
+    # is donated into each call, so it threads through the loop.
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    step_us = {}
+    for name, eng in engines.items():
+        core = eng.make_core()
+        cache = core.pool.cache
+        fixed = (jnp.zeros((slots, 1), jnp.int32),
+                 jnp.zeros((slots, 1), jnp.int32),
+                 jnp.zeros((slots,), jnp.float32),
+                 jnp.arange(slots, dtype=jnp.int32),
+                 jnp.zeros((slots,), jnp.int32), core._seed_key)
+        ts = []
+        for i in range(23):                     # 3 warmup + 20 timed
+            t0 = _time.perf_counter()
+            nxt, ok, cache = eng.fns.decode(eng.qparams, cache, *fixed)
+            jax.block_until_ready((nxt, ok))
+            if i >= 3:
+                ts.append((_time.perf_counter() - t0) * 1e6)
+        step_us[name] = float(np.median(ts))
+        emit(f"decode_jit_{name}", step_us[name], f"batch={slots}")
+    overhead = step_us["guard_on"] / step_us["guard_off"] - 1.0
+    emit("nan_guard_overhead", 0.0,
+         f"{100 * overhead:+.2f}% per jitted decode step (target < 2%)")
+    return overhead
+
+
+def run_abort_recovery(cfg, qparams, quant, plans, reqs, slots: int,
+                       seed: int, abort_frac: float = 0.10):
+    """Abort ~10% of requests at random mid-flight ticks; survivors must
+    stay bit-identical and the paged pool must fully recover."""
+    eng = PagedServingEngine(qparams, cfg, quant, plans, batch_size=slots,
+                             max_len=48, block_size=4)
+
+    base = eng.make_core()
+    rids = [base.add_request(r.to_generation_request()) for r in reqs]
+    while base.has_unfinished():
+        base.step()
+    base_tokens = {r: list(base.states[r].out_tokens) for r in rids}
+
+    rng = np.random.default_rng(seed)
+    doomed = set(rng.choice(rids, max(1, int(len(rids) * abort_frac)),
+                            replace=False).tolist())
+    abort_at = {r: int(rng.integers(1, 6)) for r in doomed}
+
+    core = eng.make_core()
+    for r in reqs:
+        core.add_request(r.to_generation_request())
+    tick = 0
+    while core.has_unfinished():
+        for r, t in list(abort_at.items()):
+            if t == tick and not core.states[r].done:
+                core.abort_request(r)
+                del abort_at[r]
+        core.step()
+        tick += 1
+    core.pool.check_invariants()
+    assert core.pool.pages_in_use == 0, "aborted requests leaked pages"
+
+    survivors = [r for r in rids if r not in doomed]
+    for r in survivors:
+        assert list(core.states[r].out_tokens) == base_tokens[r], \
+            "abort perturbed a surviving request's trace"
+    for r in doomed:
+        st = core.states[r]
+        assert str(st.finish_reason) in ("aborted", "length", "eos")
+        assert list(st.out_tokens) == \
+            base_tokens[r][: len(st.out_tokens)], \
+            "aborted request diverged before its abort"
+
+    s, b = core.stats, base.stats
+    emit("abort_recovery", s.wall_seconds * 1e6,
+         f"aborted={s.aborted}/{len(rids)} steps={b.decode_steps}->"
+         f"{s.decode_steps} tok_per_step={b.tokens_per_step:.3f}->"
+         f"{s.tokens_per_step:.3f} survivors_bit_identical=True "
+         f"pages_leaked=0")
+
+
+if __name__ == "__main__":
+    run()

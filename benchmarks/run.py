@@ -29,10 +29,11 @@ def main() -> None:
     from benchmarks import (accuracy, calibration_robustness,
                             continuous_batching, error_bounds, latency_vs_s,
                             layerwise_mse, outlier_stats, prefill_model,
-                            quant_overhead, roofline)
+                            quant_overhead, robustness, roofline)
 
     jobs = [
         ("continuous_batching", lambda: continuous_batching.run()),
+        ("robustness", lambda: robustness.run()),
         ("error_bounds", lambda: error_bounds.run()),
         ("latency_vs_s", lambda: latency_vs_s.run()),
         ("prefill_model", lambda: prefill_model.run()),

@@ -32,8 +32,8 @@ from repro.configs.base import QuantConfig
 from repro.data import SyntheticLM, make_calibration_set
 from repro.models import capture_stats, init_params
 from repro.quant import make_plan_bundle, quantize_weights_for_serving
-from repro.serving import (PagedServingEngine, Request, ServingEngine,
-                           StaticBatchEngine)
+from repro.serving import (PagedServingEngine, QueueFullError, Request,
+                           ServingEngine, StaticBatchEngine)
 
 
 def calibrate_and_quantize(params, cfg, method: str = "arc",
@@ -106,6 +106,19 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="print per-request token deltas as each tick "
                          "emits them (the streaming API)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request deadline in engine ticks: requests "
+                         "alive past it finish with reason 'deadline' "
+                         "(0 = none)")
+    ap.add_argument("--queue-timeout-steps", type=int, default=0,
+                    help="max ticks a request may wait for first admission "
+                         "before finishing with 'queue_timeout' (0 = none)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue: submissions beyond it "
+                         "are rejected with QueueFullError (0 = unbounded)")
+    ap.add_argument("--no-nan-guard", action="store_true",
+                    help="disable the per-row non-finite-logit guard "
+                         "(the isolation A/B baseline)")
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
@@ -139,7 +152,10 @@ def main():
             sys_prompt,
             rng.integers(0, cfg.vocab_size, plen).astype(np.int32)])
         reqs.append(Request(prompt=prompt, max_new_tokens=new,
-                            temperature=args.temperature))
+                            temperature=args.temperature,
+                            deadline_steps=args.deadline_steps or None,
+                            queue_timeout_steps=(args.queue_timeout_steps
+                                                 or None)))
     if args.static and args.paged:
         ap.error("--static and --paged are mutually exclusive")
     kw = {}
@@ -154,14 +170,19 @@ def main():
                  seed=args.seed,
                  backend=args.backend, interpret=args.interpret,
                  prefill_chunk=args.prefill_chunk or None,
-                 prefill_budget=args.prefill_budget or None, **kw)
-    if args.stream:
-        for out in engine.stream(reqs):
-            tag = (f" [{out.finish_reason}]" if out.finished else "")
-            print(f"  req{out.request_id}: +{out.new_tokens} "
-                  f"({out.num_generated} total){tag}")
-    else:
-        engine.run(reqs)
+                 prefill_budget=args.prefill_budget or None,
+                 nan_guard=not args.no_nan_guard,
+                 max_queue=args.max_queue or None, **kw)
+    try:
+        if args.stream:
+            for out in engine.stream(reqs):
+                tag = (f" [{out.finish_reason}]" if out.finished else "")
+                print(f"  req{out.request_id}: +{out.new_tokens} "
+                      f"({out.num_generated} total){tag}")
+        else:
+            engine.run(reqs)
+    except QueueFullError as e:
+        print(f"admission rejected: {e}")
     s = engine.last_stats
     print(f"backend={args.backend}"
           f"{' (interpret)' if args.interpret else ''}")
@@ -181,9 +202,16 @@ def main():
     if args.prefix_cache:
         print(f"prefix cache: {s.cached_prefix_tokens} prefill tokens "
               f"served from shared pages ({s.prefill_tokens} computed)")
-    lat = [r.latency_steps for r in reqs]
-    print(f"latency (decode-step ticks): p50={int(np.median(lat))} "
-          f"max={max(lat)}")
+    if (s.aborted or s.expired or s.rejected or s.nan_isolated
+            or s.step_failures):
+        print(f"robustness: {s.aborted} aborted, {s.expired} expired "
+              f"(deadline/timeout/budget), {s.rejected} rejected, "
+              f"{s.nan_isolated} NaN-isolated, {s.step_failures} failed "
+              f"steps")
+    lat = [r.latency_steps for r in reqs if r.latency_steps is not None]
+    if lat:
+        print(f"latency (decode-step ticks): p50={int(np.median(lat))} "
+              f"max={max(lat)}")
     print("sample output:", reqs[0].out_tokens[:8])
 
 

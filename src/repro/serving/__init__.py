@@ -3,15 +3,19 @@ from repro.serving.cache_manager import PagedCacheManager, SlotCacheManager
 from repro.serving.core import EngineCore, EngineFns, EngineStats
 from repro.serving.engine import (PagedServingEngine, ServingEngine,
                                   StaticBatchEngine)
-from repro.serving.request import (FINISH_EOS, FINISH_LENGTH,
-                                   GenerationRequest, Request, RequestOutput,
+from repro.serving.faults import FaultInjectedError, FaultInjector
+from repro.serving.request import (FINISH_EOS, FINISH_LENGTH, CapacityError,
+                                   FinishReason, GenerationRequest,
+                                   QueueFullError, Request, RequestOutput,
                                    RequestState, SamplingParams, StepOutput)
 from repro.serving.scheduler import (DECODE, DONE, FREE, PREFILL, Scheduler,
                                      Slot)
 
-__all__ = ["DECODE", "DONE", "EngineCore", "EngineFns", "EngineStats",
-           "FINISH_EOS", "FINISH_LENGTH", "FREE", "GenerationRequest",
-           "PREFILL", "PagedBackend", "PagedCacheManager",
-           "PagedServingEngine", "Request", "RequestOutput", "RequestState",
-           "SamplingParams", "Scheduler", "ServingEngine", "SlotCacheManager",
-           "Slot", "StaticBatchEngine", "StepOutput"]
+__all__ = ["CapacityError", "DECODE", "DONE", "EngineCore", "EngineFns",
+           "EngineStats", "FINISH_EOS", "FINISH_LENGTH", "FREE",
+           "FaultInjectedError", "FaultInjector", "FinishReason",
+           "GenerationRequest", "PREFILL", "PagedBackend",
+           "PagedCacheManager", "PagedServingEngine", "QueueFullError",
+           "Request", "RequestOutput", "RequestState", "SamplingParams",
+           "Scheduler", "ServingEngine", "SlotCacheManager", "Slot",
+           "StaticBatchEngine", "StepOutput"]

@@ -53,6 +53,11 @@ class SlotBackend:
     def check_capacity(self, pool, total_tokens: int) -> None:
         pass                        # Scheduler.submit enforces max_len
 
+    def pool_idle(self, pool) -> bool:
+        """True when nothing is resident in the pool — the state in
+        which an admission refusal proves the request can *never* fit."""
+        return True                 # slot rows are per-slot, never scarce
+
     def admission_gate(self, pool):
         return None                 # a FREE slot suffices
 
@@ -73,11 +78,12 @@ class SlotBackend:
         pool.write(slot.index, src_cache)
 
     def alloc_prefill_chunk(self, pool, sched: Scheduler, stats,
-                            slot: Slot, upto_tokens: int) -> bool:
+                            slot: Slot, upto_tokens: int,
+                            faults=None) -> bool:
         return True                 # the row already exists
 
     def pre_decode(self, pool, sched: Scheduler, stats,
-                   active: List[Slot]) -> List[Slot]:
+                   active: List[Slot], faults=None) -> List[Slot]:
         return active               # rows never run out
 
     def decode_rows(self, pool, active: List[Slot], num_slots: int
@@ -109,6 +115,12 @@ class PagedBackend(SlotBackend):
 
     def check_capacity(self, pool, total_tokens: int) -> None:
         pool.check_capacity(total_tokens)
+
+    def pool_idle(self, pool) -> bool:
+        # cached-free pages are evictable on demand, so "idle" means no
+        # referenced pages — the admission gate already counts cached-free
+        # pages as allocatable supply
+        return pool.pages_in_use == 0
 
     def admission_gate(self, pool):
         # admissions() gates the whole batch before the engine allocates
@@ -155,7 +167,8 @@ class PagedBackend(SlotBackend):
     # -- allocation / preemption -------------------------------------------
 
     def alloc_prefill_chunk(self, pool, sched: Scheduler, stats,
-                            slot: Slot, upto_tokens: int) -> bool:
+                            slot: Slot, upto_tokens: int,
+                            faults=None) -> bool:
         """Claim the blocks covering prompt positions [0, upto_tokens).
 
         Chunked prefill allocates pages as the prompt cursor advances
@@ -174,7 +187,11 @@ class PagedBackend(SlotBackend):
         """
         first = slot.prefill_pos // pool.block_size
         for block in range(first, pool.blocks_for(upto_tokens)):
-            while not pool.ensure_writable(slot.index, block):
+            # an injected allocation fault behaves exactly like a dry
+            # pool: the same preemption/retry machinery runs (each
+            # scheduled fault fires once, so the loop still terminates)
+            while ((faults is not None and faults.alloc_fault(sched.step))
+                   or not pool.ensure_writable(slot.index, block)):
                 victims = [s for s in sched.slots
                            if s.state in (DECODE, PREFILL)
                            and s.req is not None]
@@ -187,7 +204,7 @@ class PagedBackend(SlotBackend):
         return True
 
     def pre_decode(self, pool, sched: Scheduler, stats,
-                   active: List[Slot]) -> List[Slot]:
+                   active: List[Slot], faults=None) -> List[Slot]:
         """Allocate each active slot's tail page, preempting the latest-
         admitted request when the pool is exhausted. Crossing a page
         boundary finalizes the previous block: its content is registered
@@ -199,7 +216,8 @@ class PagedBackend(SlotBackend):
             block = s.next_pos // pool.block_size
             fresh = pool.tables[s.index, block] < 0
             preempted = False
-            while not pool.ensure_writable(s.index, block):
+            while ((faults is not None and faults.alloc_fault(sched.step))
+                   or not pool.ensure_writable(s.index, block)):
                 if not self._reclaim(pool, sched, stats, protect=s):
                     self._evict(pool, sched, stats, s)
                     preempted = True

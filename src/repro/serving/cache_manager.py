@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.configs.base import FULL_ATTN, MOE_FFN, ModelConfig
 from repro.models import lm
+from repro.serving.request import CapacityError
 
 # module-level jits: the trace cache survives across pool instances, so
 # repeated engine runs reuse the compiled cache ops instead of re-tracing
@@ -219,11 +220,11 @@ class PagedCacheManager:
         Prefix hits only ever reduce the pages actually claimed, so the
         unshared worst case is the bound."""
         if self.blocks_for(total_tokens) > self.usable_pages:
-            raise ValueError(
+            raise CapacityError(
                 f"request needs {self.blocks_for(total_tokens)} pages but "
                 f"the pool holds {self.usable_pages}")
         if total_tokens > self.padded_len:
-            raise ValueError(
+            raise CapacityError(
                 f"request needs {total_tokens} positions but block tables "
                 f"address {self.padded_len}")
 
@@ -424,7 +425,11 @@ class PagedCacheManager:
         self.ref[page] += 1
 
     def _decref(self, page: int) -> None:
-        assert self.ref[page] > 0, f"decref of unreferenced page {page}"
+        if self.ref[page] <= 0:
+            # a silent decref-below-zero here would let the page be
+            # handed to two owners later — fail at the corruption site
+            raise RuntimeError(f"decref of unreferenced page {page}: "
+                               f"double free or table corruption")
         self.ref[page] -= 1
         if self.ref[page] == 0:
             if page in self._page_hash:
@@ -508,11 +513,16 @@ class PagedCacheManager:
         go back to the free list (positions invalidated) unless they are
         content-registered, in which case they stay resident as
         cached-free prefix pages until evicted by an allocation."""
-        assert slot not in self._pinned, "release during prefix gather"
+        if slot in self._pinned:
+            raise RuntimeError(
+                f"release of slot {slot} during a prefix gather: its COW "
+                f"pins would leak (finish the admission first)")
         owned = [int(p) for p in self.tables[slot] if p >= 0]
         to_free = []
         for page in owned:
-            assert self.ref[page] > 0, f"double free of page {page}"
+            if self.ref[page] <= 0:
+                raise RuntimeError(f"double free of page {page} "
+                                   f"(slot {slot})")
             self.ref[page] -= 1
             if self.ref[page] == 0:
                 if page in self._page_hash:

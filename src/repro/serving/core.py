@@ -31,6 +31,20 @@ Sampling is *slot-invariant*: each request draws from a PRNG stream
 derived from ``(engine seed, request id, token index)`` via ``fold_in``,
 never from a per-tick batch key, so temperature>0 outputs are identical
 across slot assignments, preemption/resume, and streaming-vs-``run()``.
+
+The core is also the request-lifecycle robustness layer — the pieces a
+network front end needs before untrusted traffic can reach the engine:
+:meth:`EngineCore.abort_request` cancels a request in any phase
+(releasing slot state and ref-counted pages without corrupting shared
+COW pages), a step watchdog expires requests past their per-request
+deadline / queue timeout / preemption-retry budget with distinct finish
+reasons, ``max_queue`` bounds the admission queue with explicit
+``QueueFullError`` rejection (``CapacityError`` fails impossible
+requests fast instead of head-of-line-blocking FIFO), a per-row
+NaN/Inf logit guard finishes only the offending request while the rest
+of the batch continues bit-identically, and a failed decode launch is
+contained to the batch it poisoned. ``faults.FaultInjector`` drives
+every one of these paths deterministically in tests.
 """
 from __future__ import annotations
 
@@ -44,9 +58,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving.backend import SlotBackend
-from repro.serving.request import (Request, RequestOutput, RequestState,
+from repro.serving.faults import FaultInjector
+from repro.serving.request import (CapacityError, FinishReason, QueueFullError,
+                                   Request, RequestOutput, RequestState,
                                    StepOutput)
-from repro.serving.scheduler import PREFILL, Scheduler, Slot
+from repro.serving.scheduler import DECODE, PREFILL, Scheduler, Slot
 
 __all__ = ["EngineCore", "EngineFns", "EngineStats", "request_key",
            "sample_rows"]
@@ -89,6 +105,19 @@ class EngineStats:
     page_step_sum: int = 0              # sum over decode steps of pages in use
     peak_pages: int = 0
     preemptions: int = 0
+    # robustness counters (the fields a future /metrics endpoint exports):
+    # aborted = caller cancellations; expired = watchdog terminations
+    # (deadline, queue timeout, preemption budget); rejected = add_request
+    # refusals (bounded queue, capacity fail-fast); nan_isolated = rows
+    # finished ERROR by the non-finite-logit guard; preemption_retries =
+    # re-admissions of previously preempted requests; step_failures =
+    # decode launches that raised (their whole batch finished ERROR)
+    aborted: int = 0
+    expired: int = 0
+    rejected: int = 0
+    nan_isolated: int = 0
+    preemption_retries: int = 0
+    step_failures: int = 0
 
     @property
     def padding_waste(self) -> float:
@@ -127,6 +156,12 @@ class EngineStats:
             "wall_tokens_per_s": round(
                 self.generated_tokens / self.wall_seconds, 2)
             if self.wall_seconds else 0.0,
+            "aborted": self.aborted,
+            "expired": self.expired,
+            "rejected": self.rejected,
+            "nan_isolated": self.nan_isolated,
+            "preemption_retries": self.preemption_retries,
+            "step_failures": self.step_failures,
         }
         if self.num_pages:
             out.update({
@@ -143,14 +178,22 @@ class EngineFns:
     """The jitted model entry points one core drives (built once per
     facade engine; trace caches are shared across its cores).
 
-    prefill(qp, cache, tokens, positions, last_idx) -> (logits, cache)
+    prefill(qp, cache, tokens, positions, last_idx)
+        -> (logits, ok, cache)
     prefill_chunk(qp, cache, tokens, positions) -> cache
     decode(qp, cache, tokens, positions, temps, rids, tok_idx, seed)
-        -> (next_tokens, cache)
+        -> (next_tokens, ok_rows, cache)
     decode_paged(..., tables, slot_ids, active, temps, rids, tok_idx,
         seed) — ``active`` is the traced packed-row count driving the
         kernel's dynamic valid-row masking
     sample(logits, temp, rid, tok_idx, seed) -> token
+
+    ``ok`` / ``ok_rows`` are the poisoned-request guard: a scalar (resp.
+    per-row ``(B,)``) bool, False where the sampled-over logits contain a
+    NaN/Inf. Computed inside the jit (one ``isfinite`` all-reduce per
+    row, no extra host transfer beyond ``B`` bools) so the engine can
+    finish only the offending request while the batch survives; engines
+    built with ``nan_guard=False`` return constant-True flags.
     """
 
     prefill: callable
@@ -195,11 +238,18 @@ class EngineCore:
                  continuous: bool = True,
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 bucket_prompts: bool = False):
+                 bucket_prompts: bool = False,
+                 max_queue: Optional[int] = None,
+                 max_preemptions: Optional[int] = 64,
+                 faults: Optional[FaultInjector] = None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError("prefill_budget must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if max_preemptions is not None and max_preemptions < 0:
+            raise ValueError("max_preemptions must be >= 0")
         self.fns = fns
         self.qparams = qparams
         self.cfg = cfg
@@ -210,6 +260,9 @@ class EngineCore:
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget
         self.bucket_prompts = bucket_prompts
+        self.max_queue = max_queue
+        self.max_preemptions = max_preemptions
+        self.faults = faults
         self.sched = Scheduler(num_slots, max_len)
         self.pool = self.backend.make_pool(cfg, num_slots, max_len)
         self.stats = EngineStats(num_slots=num_slots,
@@ -221,6 +274,10 @@ class EngineCore:
         self._tick_prefill = 0
         self._t0: Optional[float] = None    # starts at the first tick, so
         # a step-driven core's idle time never dilutes its throughput
+        # terminations between ticks (abort_request) surface as finished
+        # RequestOutputs on the *next* StepOutput, so streaming consumers
+        # always observe the finish
+        self._pending: List[RequestOutput] = []
 
     # -- public API --------------------------------------------------------
 
@@ -238,13 +295,51 @@ class EngineCore:
             rid = self._next_id
         if rid in self.states:
             raise ValueError(f"duplicate request_id {rid}")
+        if (self.max_queue is not None
+                and len(self.sched.queue) >= self.max_queue):
+            # admission backpressure: explicit rejection instead of an
+            # unbounded queue. Preempted residents awaiting re-admission
+            # count against the bound — they hold queue positions too.
+            self.stats.rejected += 1
+            raise QueueFullError(
+                f"admission queue is full ({len(self.sched.queue)} of "
+                f"{self.max_queue}); shed load or retry later")
         self._next_id = max(self._next_id, rid + 1)
         state = RequestState(request=request, rid=rid)
-        self.backend.check_capacity(
-            self.pool, state.prompt_len + state.sampling.max_new_tokens)
-        self.sched.submit(state)        # validates lengths, stamps submit
+        try:
+            # fail fast on requests that could never run even in an idle
+            # pool — admitting one would head-of-line-block FIFO forever
+            self.backend.check_capacity(
+                self.pool, state.prompt_len + state.sampling.max_new_tokens)
+            self.sched.submit(state)    # validates lengths, stamps submit
+        except CapacityError:
+            self.stats.rejected += 1
+            raise
         self.states[rid] = state
         return rid
+
+    def abort_request(self, rid: int) -> bool:
+        """Cancel request ``rid`` in whatever phase it is — QUEUED,
+        chunked-PREFILL mid-flight, DECODE, or PREEMPTED (requeued).
+
+        Slot state and cache rows/pages are released exactly as on a
+        normal finish (ref-counted pages decref; shared/COW pages other
+        requests reference stay resident), the request finishes with
+        ``FinishReason.ABORTED`` keeping whatever tokens it produced,
+        and the next ``step()``'s output carries its finished
+        ``RequestOutput``. Returns False when the request had already
+        finished (abort raced completion — a no-op), True otherwise.
+        Raises ``KeyError`` for an unknown (or already popped) rid.
+        Call between ticks, never from inside a ``step()``.
+        """
+        st = self.states.get(rid)
+        if st is None:
+            raise KeyError(f"unknown request id {rid}")
+        if st.done:
+            return False
+        self._terminate(st, FinishReason.ABORTED)
+        self.stats.aborted += 1
+        return True
 
     def pop_request(self, rid: int) -> RequestState:
         """Remove and return a *finished* request's state.
@@ -253,9 +348,14 @@ class EngineCore:
         read results back; a long-lived core serving an open-ended stream
         should pop each request once its results are consumed, or the
         map grows without bound."""
-        state = self.states[rid]
+        state = self.states.get(rid)
+        if state is None:
+            raise KeyError(
+                f"unknown request id {rid}: never added or already popped")
         if not state.done:
-            raise ValueError(f"request {rid} is still in flight")
+            raise ValueError(
+                f"request {rid} is still in flight "
+                f"(finish it, abort_request({rid}), or wait)")
         return self.states.pop(rid)
 
     def has_unfinished(self) -> bool:
@@ -266,8 +366,16 @@ class EngineCore:
         tick = self.sched.step
         if self._t0 is None:
             self._t0 = time.time()
+        if self.faults is not None:
+            self.faults.sleep(tick)         # injected straggler tick
         self._tick_prefill = 0
         deltas: Dict[int, RequestOutput] = {}
+        for ro in self._pending:            # between-tick aborts
+            deltas[ro.request_id] = ro
+        self._pending.clear()
+        # watchdog: expire requests past their deadline / queue timeout /
+        # preemption budget before any work is scheduled for them
+        self._expire(deltas)
         # admission: continuous mode refills any free slot every tick;
         # the static baseline waits for the whole gang to drain
         if self.continuous or self.sched.all_idle():
@@ -282,11 +390,98 @@ class EngineCore:
         self.stats.wall_seconds = time.time() - self._t0
         return StepOutput(step=tick, outputs=list(deltas.values()))
 
+    # -- termination (abort / watchdog / fault isolation) ------------------
+
+    def _terminate(self, st: RequestState, reason: FinishReason,
+                   error: Optional[str] = None,
+                   deltas: Optional[Dict[int, RequestOutput]] = None) -> None:
+        """Finish a not-done request out-of-band in whatever phase it is.
+
+        Resident requests (PREFILL mid-chunk or DECODE) release their
+        cache row/pages through the same path as a normal finish — pages
+        decref, shared/registered pages stay resident — and their slot
+        returns to FREE; queued or preempted requests just leave the
+        admission queue. The finished ``RequestOutput`` lands in this
+        tick's ``deltas`` (watchdog/fault paths) or on the next tick's
+        StepOutput (between-tick aborts).
+        """
+        slot = self.sched.slot_of(st.rid)
+        if slot is not None and slot.state in (PREFILL, DECODE):
+            self.sched.finish(slot, reason, error)
+            self.pool.release(slot.index)
+            self.sched.free(slot)
+        else:                               # QUEUED or PREEMPTED
+            self.sched.remove_queued(st)
+            st.done = True
+            st.finish_reason = reason
+            st.error = error
+            st.finish_step = self.sched.step
+        ro = RequestOutput(request_id=st.rid, new_tokens=[],
+                           num_generated=len(st.out_tokens), finished=True,
+                           finish_reason=reason, error=error)
+        if deltas is None:
+            self._pending.append(ro)
+        else:
+            deltas[st.rid] = ro
+
+    def _expire(self, deltas: Dict[int, RequestOutput]) -> None:
+        """Step watchdog: terminate requests whose elapsed ticks exceed
+        their deadline, whose first admission never came within the
+        queue timeout, or whose preemption-retry budget is spent —
+        instead of letting them run (or thrash evict/resume) forever."""
+        tick = self.sched.step
+        for st in list(self.sched.queue):
+            sp = st.sampling
+            if (sp.queue_timeout_steps is not None and st.admit_step < 0
+                    and tick - st.submit_step > sp.queue_timeout_steps):
+                self._terminate(st, FinishReason.QUEUE_TIMEOUT, deltas=deltas)
+                self.stats.expired += 1
+            elif (sp.deadline_steps is not None
+                    and tick - st.submit_step > sp.deadline_steps):
+                self._terminate(st, FinishReason.DEADLINE, deltas=deltas)
+                self.stats.expired += 1
+            elif (self.max_preemptions is not None
+                    and st.preemptions > self.max_preemptions):
+                # livelock breaker: two requests too large to coexist can
+                # thrash evict/resume cycles forever; after the budget,
+                # the thrashing request fails fast with CAPACITY
+                self._terminate(
+                    st, FinishReason.CAPACITY, deltas=deltas,
+                    error=f"preempted {st.preemptions}x "
+                          f"(budget {self.max_preemptions}): the pool "
+                          f"cannot hold this request alongside its peers")
+                self.stats.expired += 1
+        for slot in self.sched.slots:
+            if slot.state not in (PREFILL, DECODE):
+                continue
+            st = slot.req
+            sp = st.sampling
+            if (sp.deadline_steps is not None
+                    and tick - st.submit_step > sp.deadline_steps):
+                self._terminate(st, FinishReason.DEADLINE, deltas=deltas)
+                self.stats.expired += 1
+
     # -- admission ---------------------------------------------------------
 
     def _admit(self, deltas: Dict[int, RequestOutput]) -> None:
         gate = self.backend.admission_gate(self.pool)
-        for slot, st in self.sched.admissions(gate):
+        admitted = self.sched.admissions(gate)
+        if (not admitted and self.sched.queue and self.sched.all_idle()
+                and self.backend.pool_idle(self.pool)):
+            # the queue head was refused with every slot free and nothing
+            # resident: no amount of waiting can admit it (defense in
+            # depth behind add_request's fail-fast — charge-accounting
+            # drift must not head-of-line-block FIFO forever)
+            st = self.sched.queue[0]
+            self._terminate(
+                st, FinishReason.CAPACITY, deltas=deltas,
+                error="refused admission by an idle pool: the request "
+                      "cannot fit even running alone")
+            self.stats.expired += 1
+            return
+        for slot, st in admitted:
+            if st.preemptions:
+                self.stats.preemption_retries += 1
             toks = st.prefill_token_seq()
             # claim the cached prefix first: the prompt cursor starts at
             # the shared-prefix boundary and only the suffix is computed
@@ -307,12 +502,13 @@ class EngineCore:
                 continue
             cache = self._fresh_prefill_cache(slot, cached)
             if not self.backend.alloc_prefill_chunk(
-                    self.pool, self.sched, self.stats, slot, len(toks)):
+                    self.pool, self.sched, self.stats, slot, len(toks),
+                    faults=self.faults):
                 continue                # the slot preempted itself
-            logits, src = self._prefill_suffix(toks, cached, cache)
+            logits, ok, src = self._prefill_suffix(toks, cached, cache)
             self.backend.install(self.pool, slot, st, src, toks)
             self._count_prefill(suffix)
-            self._finish_prefill(slot, st, logits, deltas)
+            self._finish_prefill(slot, st, logits, ok, deltas)
 
     def _fresh_prefill_cache(self, slot: Slot, cached: int) -> list:
         """Batch-1 prefill cache, seeded from shared-prefix pages when
@@ -352,7 +548,8 @@ class EngineCore:
                 continue                # tick budget spent: wait
             end = start + cap
             if not self.backend.alloc_prefill_chunk(
-                    self.pool, self.sched, self.stats, slot, end):
+                    self.pool, self.sched, self.stats, slot, end,
+                    faults=self.faults):
                 continue                # the slot preempted itself
             self._count_prefill(end - start)
             if end < len(toks):
@@ -377,19 +574,26 @@ class EngineCore:
             buf = np.zeros((1, pad_end - start), np.int32)
             buf[0, : end - start] = toks[start:end]
             positions = np.arange(start, pad_end, dtype=np.int32)[None]
-            logits, src = self.fns.prefill(
+            logits, ok, src = self.fns.prefill(
                 self.qparams, slot.prefill_cache, jnp.asarray(buf),
                 jnp.asarray(positions), jnp.int32(end - start - 1))
             slot.prefill_cache = None
             self.backend.install(self.pool, slot, st, src, toks)
-            self._finish_prefill(slot, st, logits, deltas)
+            self._finish_prefill(slot, st, logits, ok, deltas)
 
-    def _finish_prefill(self, slot: Slot, st: RequestState, logits,
+    def _finish_prefill(self, slot: Slot, st: RequestState, logits, ok,
                         deltas: Dict[int, RequestOutput]) -> None:
         if st.out_tokens:
             # the preempted request's next token was sampled before
-            # eviction; rebuild its K/V and keep decoding
+            # eviction; rebuild its K/V and keep decoding (a poisoned
+            # resume surfaces at the next decode tick's row guard)
             self.sched.resume(slot)
+            return
+        if self._poisoned(st.rid, ok):
+            self.stats.nan_isolated += 1
+            self._terminate(st, FinishReason.ERROR,
+                            error="non-finite logits at prefill",
+                            deltas=deltas)
             return
         tok = int(self.fns.sample(
             logits, jnp.float32(st.sampling.temperature), jnp.int32(st.rid),
@@ -397,10 +601,19 @@ class EngineCore:
         self.stats.prefill_sampled_tokens += 1
         self._record(slot, tok, deltas)
 
+    def _poisoned(self, rid: int, ok) -> bool:
+        """The per-row non-finite-logit guard verdict for one request:
+        the in-jit ``isfinite`` flag, or a scheduled injection standing
+        in for a real NaN (same downstream path either way)."""
+        if self.faults is not None and self.faults.poisoned(self.sched.step,
+                                                            rid):
+            return True
+        return not bool(np.asarray(ok))
+
     def _prefill_suffix(self, toks: np.ndarray, cached: int, cache: list):
         """Prefill ``toks[cached:]`` into ``cache`` (which already holds
         the gathered shared prefix when ``cached > 0``); returns (last
-        logits, cache)."""
+        logits, finite-row flag, cache)."""
         p = len(toks) - cached
         plen = p
         if self.bucket_prompts:
@@ -426,7 +639,7 @@ class EngineCore:
     def _decode_tick(self, deltas: Dict[int, RequestOutput],
                      active: List[Slot]) -> None:
         active = self.backend.pre_decode(self.pool, self.sched, self.stats,
-                                         active)
+                                         active, faults=self.faults)
         if not active:
             return
         m, rows, extra = self.backend.decode_rows(self.pool, active,
@@ -451,21 +664,55 @@ class EngineCore:
                      jnp.asarray(extra["slot_ids"]),
                      jnp.asarray(extra["active"])]
         fn = getattr(self.fns, self.backend.decode_fn)
-        nxt, self.pool.cache = fn(*args, jnp.asarray(temps),
-                                  jnp.asarray(rids), jnp.asarray(tok_idx),
-                                  self._seed_key)
+        try:
+            # injected step errors fire *before* the launch, so the pool
+            # buffers (donated into the call) are still intact and the
+            # containment below is exact. A real mid-launch failure is
+            # contained best-effort: the batch is isolated either way.
+            if self.faults is not None:
+                self.faults.raise_step_error(self.sched.step)
+            nxt, ok, self.pool.cache = fn(*args, jnp.asarray(temps),
+                                          jnp.asarray(rids),
+                                          jnp.asarray(tok_idx),
+                                          self._seed_key)
+        except Exception as e:              # noqa: BLE001 — containment seam
+            self._fail_step(active, e, deltas)
+            return
         nxt = np.asarray(nxt)
+        okh = np.asarray(ok)
         self.stats.decode_steps += 1
         # rows the decode launch actually swept: the full slot count, or
         # the bucket width when ragged decode shrank the launch
         self.stats.slot_steps += m
         self.stats.useful_slot_steps += len(active)
-        self.stats.decode_tokens += len(active)
         in_use = getattr(self.pool, "pages_in_use", 0)
         self.stats.page_step_sum += in_use
         self.stats.peak_pages = max(self.stats.peak_pages, in_use)
         for i, s in rows.items():
+            if self._poisoned(s.req.rid, okh[i]):
+                # poisoned-request isolation: only the offending row
+                # finishes (ERROR); every other row of this very launch
+                # keeps its token, bit-identical to a fault-free tick
+                self.stats.nan_isolated += 1
+                self._terminate(s.req, FinishReason.ERROR,
+                                error="non-finite logits at decode",
+                                deltas=deltas)
+                continue
+            self.stats.decode_tokens += 1
             self._record(s, int(nxt[i]), deltas)
+
+    def _fail_step(self, active: List[Slot], exc: Exception,
+                   deltas: Dict[int, RequestOutput]) -> None:
+        """A decode launch raised: the K/V of every request in the failed
+        batch can no longer be trusted, so each finishes with ERROR and
+        releases its resources — but the engine itself stays up, and
+        queued/prefilling requests continue unharmed."""
+        self.stats.step_failures += 1
+        msg = f"decode step failed: {type(exc).__name__}: {exc}"
+        for s in active:
+            if s.state == DECODE:           # not already terminated
+                self._terminate(s.req, FinishReason.ERROR, error=msg,
+                                deltas=deltas)
 
     # -- bookkeeping -------------------------------------------------------
 

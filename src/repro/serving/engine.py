@@ -57,14 +57,29 @@ __all__ = ["EngineStats", "PagedServingEngine", "Request", "ServingEngine",
 
 
 def _build_fns(cfg: ModelConfig, quant: QuantConfig,
-               plans: Optional[PlanBundle]) -> EngineFns:
-    """Jit the model entry points one engine's cores share."""
+               plans: Optional[PlanBundle],
+               nan_guard: bool = True) -> EngineFns:
+    """Jit the model entry points one engine's cores share.
+
+    ``nan_guard`` adds the poisoned-request guard to each entry point: a
+    per-row (decode) / scalar (prefill) bool that is False where the
+    logits a token is sampled from contain NaN/Inf. The reduction runs
+    inside the jit and only ``B`` bools cross to the host, so the decode
+    hot path pays one fused ``isfinite``+``all`` per row; ``False``
+    replaces the flags with constant True (the A/B overhead baseline in
+    ``benchmarks/robustness.py``)."""
+
+    def _ok_rows(lg):               # (B, V) -> (B,) finite-row flags
+        if not nan_guard:
+            return jnp.ones((lg.shape[0],), bool)
+        return jnp.all(jnp.isfinite(lg), axis=-1)
 
     def prefill(qp, cache, tokens, positions, last_idx):
         logits, cache, _ = lm.forward(qp, cfg, tokens=tokens,
                                       positions=positions, cache=cache,
                                       quant=quant, plans=plans)
-        return logits[0, last_idx], cache
+        lg = logits[0, last_idx]
+        return lg, _ok_rows(lg[None, : cfg.vocab_size])[0], cache
 
     def prefill_chunk(qp, cache, tokens, positions):
         return lm.prefill_chunk(qp, cfg, tokens=tokens, positions=positions,
@@ -76,7 +91,7 @@ def _build_fns(cfg: ModelConfig, quant: QuantConfig,
                                       quant=quant, plans=plans)
         lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
         nxt = sample_rows(lg, temps, rids, tok_idx, seed)
-        return nxt, cache
+        return nxt, _ok_rows(lg), cache
 
     def decode_paged(qp, cache, tokens, positions, tables, slot_ids,
                      active, temps, rids, tok_idx, seed):
@@ -87,7 +102,7 @@ def _build_fns(cfg: ModelConfig, quant: QuantConfig,
                                       active_rows=active)
         lg = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
         nxt = sample_rows(lg, temps, rids, tok_idx, seed)
-        return nxt, cache
+        return nxt, _ok_rows(lg), cache
 
     def sample(logits, temp, rid, tok_idx, seed):
         lg = logits[: cfg.vocab_size].astype(jnp.float32)
@@ -123,7 +138,10 @@ class ServingEngine:
                  interpret: bool | None = None,
                  attn_kernel: bool | None = None,
                  prefill_chunk: int | None = None,
-                 prefill_budget: int | None = None):
+                 prefill_budget: int | None = None,
+                 nan_guard: bool = True,
+                 max_queue: int | None = None,
+                 max_preemptions: int | None = 64):
         # activation FP32 scales must not see a request's batch company, or
         # swapping a finished slot for a new request would perturb every
         # other in-flight generation. "calibrated" (static per-layer scales
@@ -152,6 +170,11 @@ class ServingEngine:
         self.seed = seed
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget
+        # robustness knobs (see core.py): the in-jit NaN/Inf logit guard,
+        # the bounded submit queue, and the per-request preemption budget.
+        self.nan_guard = nan_guard
+        self.max_queue = max_queue
+        self.max_preemptions = max_preemptions
         self.last_stats = EngineStats()
         # prompt-length bucketing pads one-shot prefill up to a power of
         # two, which bounds compile count. Right-padding is exact for full
@@ -160,7 +183,7 @@ class ServingEngine:
         # recurrent state, so windowed/SSM/hybrid models prefill at exact
         # length. Chunked prefill always runs exact-length chunks.
         self._bucket_prompts = all(m == FULL_ATTN for m in cfg.mixer_pattern)
-        self.fns = _build_fns(cfg, quant, plans)
+        self.fns = _build_fns(cfg, quant, plans, nan_guard=nan_guard)
         self.cache_backend = self._make_backend()
 
     def _make_backend(self) -> SlotBackend:
@@ -169,12 +192,15 @@ class ServingEngine:
     # -- public API --------------------------------------------------------
 
     def make_core(self, prefill_chunk: int | None = None,
-                  prefill_budget: int | None = None) -> EngineCore:
+                  prefill_budget: int | None = None,
+                  faults=None) -> EngineCore:
         """A fresh step-driven core over a new cache pool. Jit trace
         caches are shared across cores of the same engine.
         ``prefill_chunk`` / ``prefill_budget`` override the engine
         defaults for this core (``0`` forces one-shot / unbudgeted
-        prefill, as in the CLIs)."""
+        prefill, as in the CLIs). ``faults`` threads a
+        :class:`~repro.serving.faults.FaultInjector` through the core
+        and backend for deterministic failure testing."""
         if prefill_chunk is None:
             chunk = self.prefill_chunk
         else:
@@ -188,7 +214,10 @@ class ServingEngine:
                           num_slots=self.batch_size, max_len=self.max_len,
                           seed=self.seed, continuous=self.continuous,
                           prefill_chunk=chunk, prefill_budget=budget,
-                          bucket_prompts=self._bucket_prompts)
+                          bucket_prompts=self._bucket_prompts,
+                          max_queue=self.max_queue,
+                          max_preemptions=self.max_preemptions,
+                          faults=faults)
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve ``requests`` to completion (compatibility wrapper).

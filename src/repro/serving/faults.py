@@ -1,0 +1,140 @@
+"""Deterministic fault injection for the serving engine.
+
+The robustness layer (abort, deadlines, NaN isolation, preemption under
+allocation failure, step-failure containment) is only trustworthy if the
+failure paths actually run — in normal operation they almost never do.
+``FaultInjector`` gives every failure path a seam the tests (and the
+crash-consistency sweep in ``tests/test_robustness.py``) can drive
+*deterministically*: faults are scheduled against the engine's tick
+clock, so the same schedule against the same workload reproduces the
+same interleaving bit-for-bit, with no reliance on real NaNs, real OOM,
+or real backend crashes.
+
+Injection points (each consulted by the core/backend at the real code
+path the fault exercises, so everything downstream of the seam is the
+production path, not a test double):
+
+  * ``alloc_fault`` — consumed by the paged backend right before a page
+    allocation (``ensure_writable``): an injected failure behaves
+    exactly like a dry pool, driving the preemption/retry machinery.
+  * ``poisoned`` — consulted where the engine checks the decode/prefill
+    per-row finite-logit flag: an injected hit marks request ``rid``'s
+    row non-finite at tick ``t``, driving the poisoned-request isolation
+    path (finish ERROR, release, batch survivors untouched).
+  * ``raise_step_error`` — raised inside the engine's decode-launch try
+    block: stands in for a backend/device failure of the whole tick.
+  * ``sleep`` — stalls a tick for a scheduled duration: a straggler
+    tick for wall-clock watchdog/metrics behavior.
+
+``FaultInjector.random(seed, ...)`` builds a seeded randomized schedule
+(the crash-consistency sweep's driver); the fluent ``*_at`` methods
+build exact scripted schedules. ``log`` records every fault actually
+delivered, so tests can assert a schedule fired.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+
+class FaultInjectedError(RuntimeError):
+    """An injected backend step failure (never raised in production)."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Tick-scheduled fault plan, consumed as the engine runs.
+
+    All schedules key on the engine tick clock (``Scheduler.step``).
+    ``alloc_faults`` entries are *consumed* (each injected allocation
+    failure fires once); row poisons, step errors, and slow ticks fire
+    whenever their tick is reached.
+    """
+
+    alloc_faults: Dict[int, int] = dataclasses.field(default_factory=dict)
+    nan_rows: Set[Tuple[int, int]] = dataclasses.field(default_factory=set)
+    step_errors: Dict[int, str] = dataclasses.field(default_factory=dict)
+    slow_ticks: Dict[int, float] = dataclasses.field(default_factory=dict)
+    log: List[dict] = dataclasses.field(default_factory=list)
+
+    # -- scripted-schedule builders (fluent) -------------------------------
+
+    def alloc_fault_at(self, tick: int, count: int = 1) -> "FaultInjector":
+        """Fail the next ``count`` page allocations attempted at ``tick``."""
+        self.alloc_faults[tick] = self.alloc_faults.get(tick, 0) + count
+        return self
+
+    def nan_at(self, tick: int, rid: int) -> "FaultInjector":
+        """Poison request ``rid``'s logit row at ``tick`` (prefill or
+        decode, whichever the request reaches that tick)."""
+        self.nan_rows.add((tick, rid))
+        return self
+
+    def step_error_at(self, tick: int,
+                      message: str = "injected backend step failure"
+                      ) -> "FaultInjector":
+        self.step_errors[tick] = message
+        return self
+
+    def slow_tick_at(self, tick: int, seconds: float) -> "FaultInjector":
+        self.slow_ticks[tick] = seconds
+        return self
+
+    # -- consumption (called by core/backend) ------------------------------
+
+    def alloc_fault(self, tick: int) -> bool:
+        """True exactly once per scheduled allocation failure at ``tick``."""
+        left = self.alloc_faults.get(tick, 0)
+        if left <= 0:
+            return False
+        self.alloc_faults[tick] = left - 1
+        self.log.append({"kind": "alloc_fault", "tick": tick})
+        return True
+
+    def poisoned(self, tick: int, rid: int) -> bool:
+        """True when ``rid``'s logit row is scheduled non-finite at
+        ``tick`` (the injected analogue of the in-jit isfinite guard)."""
+        if (tick, rid) not in self.nan_rows:
+            return False
+        self.log.append({"kind": "nan", "tick": tick, "rid": rid})
+        return True
+
+    def raise_step_error(self, tick: int) -> None:
+        msg = self.step_errors.get(tick)
+        if msg is not None:
+            self.log.append({"kind": "step_error", "tick": tick})
+            raise FaultInjectedError(msg)
+
+    def sleep(self, tick: int) -> None:
+        dt = self.slow_ticks.get(tick)
+        if dt:
+            self.log.append({"kind": "slow_tick", "tick": tick, "dt": dt})
+            time.sleep(dt)
+
+    # -- randomized schedules ----------------------------------------------
+
+    @classmethod
+    def random(cls, seed: int, ticks: int, rids: List[int],
+               p_alloc: float = 0.0, p_nan: float = 0.0,
+               p_step_error: float = 0.0) -> "FaultInjector":
+        """Seeded randomized schedule over ``ticks`` engine ticks.
+
+        Each tick independently draws an allocation failure (probability
+        ``p_alloc``), a poisoned row for a uniformly chosen rid
+        (``p_nan``), and a whole-tick step error (``p_step_error``).
+        Identical (seed, ticks, rids, probabilities) produce identical
+        schedules — the sweep's reproducibility contract.
+        """
+        rng = np.random.default_rng(seed)
+        inj = cls()
+        for t in range(ticks):
+            if p_alloc and rng.random() < p_alloc:
+                inj.alloc_fault_at(t)
+            if p_nan and rids and rng.random() < p_nan:
+                inj.nan_at(t, int(rng.choice(rids)))
+            if p_step_error and rng.random() < p_step_error:
+                inj.step_error_at(t)
+        return inj

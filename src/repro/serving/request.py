@@ -23,13 +23,45 @@ latency — instead of the nonsense negatives the old properties returned.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import List, Optional
 
 import numpy as np
 
-# finish reasons surfaced on RequestOutput / RequestState
-FINISH_LENGTH = "length"            # hit max_new_tokens
-FINISH_EOS = "eos"                  # sampled the request's eos_token
+
+class FinishReason(str, enum.Enum):
+    """Why a request stopped. ``str``-valued, so comparisons against the
+    legacy literals (``reason == "eos"``, ``reason in ("length", "eos")``)
+    keep working and the value serializes as its plain string."""
+
+    LENGTH = "length"               # hit max_new_tokens
+    EOS = "eos"                     # sampled the request's eos_token
+    ABORTED = "aborted"             # caller cancelled via abort_request
+    DEADLINE = "deadline"           # exceeded SamplingParams.deadline_steps
+    QUEUE_TIMEOUT = "queue_timeout"  # never admitted within queue_timeout_steps
+    CAPACITY = "capacity"           # can never fit / preemption budget spent
+    ERROR = "error"                 # non-finite logits or backend step failure
+
+    def __str__(self) -> str:       # str(reason) == "eos", not the repr
+        return self.value
+
+
+# legacy aliases (pre-enum modules import these names)
+FINISH_LENGTH = FinishReason.LENGTH
+FINISH_EOS = FinishReason.EOS
+
+
+class QueueFullError(RuntimeError):
+    """Admission backpressure: the core's bounded submit queue is full.
+
+    The caller should shed load or retry later; nothing was enqueued."""
+
+
+class CapacityError(ValueError):
+    """The request can never be served by this engine's pool (too many
+    cache positions / pages even running alone), or it exhausted its
+    preemption-retry budget. Subclasses ``ValueError`` so pre-existing
+    callers catching the old untyped rejection keep working."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +71,13 @@ class SamplingParams:
     max_new_tokens: int = 16
     eos_token: Optional[int] = None
     temperature: float = 0.0        # 0 -> greedy
+    # robustness deadlines, in ticks of the engine clock (None = unbounded):
+    # queue_timeout_steps bounds the wait for *first* admission (expired
+    # requests finish QUEUE_TIMEOUT without ever running); deadline_steps
+    # bounds submit-to-finish in any phase (expired requests finish
+    # DEADLINE, keeping whatever tokens they produced)
+    queue_timeout_steps: Optional[int] = None
+    deadline_steps: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -107,7 +146,8 @@ class RequestState(_TickMetrics):
     rid: int = -1
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    finish_reason: Optional[str] = None
+    finish_reason: Optional[FinishReason] = None
+    error: Optional[str] = None     # diagnostic for ERROR finishes
     # tick-clock metrics (-1 = not yet)
     submit_step: int = -1
     admit_step: int = -1
@@ -163,7 +203,8 @@ class RequestOutput:
     new_tokens: List[int]
     num_generated: int              # cumulative tokens so far
     finished: bool = False
-    finish_reason: Optional[str] = None
+    finish_reason: Optional[FinishReason] = None
+    error: Optional[str] = None     # diagnostic for ERROR finishes
 
 
 @dataclasses.dataclass
@@ -192,9 +233,12 @@ class Request(_TickMetrics):
     max_new_tokens: int = 16
     eos_token: Optional[int] = None
     temperature: float = 0.0        # 0 -> greedy
+    queue_timeout_steps: Optional[int] = None
+    deadline_steps: Optional[int] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    finish_reason: Optional[str] = None
+    finish_reason: Optional[FinishReason] = None
+    error: Optional[str] = None     # diagnostic for ERROR finishes
     # per-request metrics, in ticks of the engine clock (-1 = not yet;
     # the guarded _TickMetrics properties return None until then)
     submit_step: int = -1
@@ -214,9 +258,12 @@ class Request(_TickMetrics):
                               ) -> GenerationRequest:
         return GenerationRequest(
             prompt=self.prompt,
-            sampling=SamplingParams(max_new_tokens=self.max_new_tokens,
-                                    eos_token=self.eos_token,
-                                    temperature=self.temperature),
+            sampling=SamplingParams(
+                max_new_tokens=self.max_new_tokens,
+                eos_token=self.eos_token,
+                temperature=self.temperature,
+                queue_timeout_steps=self.queue_timeout_steps,
+                deadline_steps=self.deadline_steps),
             request_id=request_id)
 
     def absorb(self, state: RequestState) -> None:
@@ -224,6 +271,7 @@ class Request(_TickMetrics):
         self.out_tokens = list(state.out_tokens)
         self.done = state.done
         self.finish_reason = state.finish_reason
+        self.error = state.error
         self.submit_step = state.submit_step
         self.admit_step = state.admit_step
         self.first_token_step = state.first_token_step

@@ -30,7 +30,8 @@ from collections import deque
 import dataclasses
 from typing import Any, Deque, List, Optional, Tuple
 
-from repro.serving.request import FINISH_EOS, FINISH_LENGTH, RequestState
+from repro.serving.request import (CapacityError, FINISH_EOS, FINISH_LENGTH,
+                                   FinishReason, RequestState)
 
 # slot lifecycle states
 FREE = "FREE"
@@ -80,11 +81,19 @@ class Scheduler:
             raise ValueError("max_new_tokens must be >= 1 (prefill always "
                              "samples the first token)")
         if state.prompt_len + sp.max_new_tokens > self.max_len:
-            raise ValueError(
+            raise CapacityError(
                 f"request needs {state.prompt_len + sp.max_new_tokens}"
                 f" cache positions but slots hold {self.max_len}")
         state.submit_step = self.step
         self.queue.append(state)
+
+    def remove_queued(self, state: RequestState) -> None:
+        """Drop a queued (or preempted-and-requeued) request from the
+        admission queue — the abort/expiry path for not-resident requests."""
+        try:
+            self.queue.remove(state)
+        except ValueError:
+            raise KeyError(f"request {state.rid} is not queued") from None
 
     def admissions(self, can_admit=None) -> List[Tuple[Slot, RequestState]]:
         """Pair queued requests with FREE slots; marks them PREFILL.
@@ -143,8 +152,30 @@ class Scheduler:
         return False
 
     def free(self, slot: Slot) -> None:
-        assert slot.state == DONE, slot.state
+        """Return a DONE slot to FREE. Freeing a slot in any other state
+        would silently corrupt bookkeeping (an in-flight request losing
+        its row, a double free) — raise loudly instead."""
+        if slot.state != DONE:
+            raise RuntimeError(
+                f"cannot free slot {slot.index} in state {slot.state}: only "
+                f"DONE slots (finished requests) may be freed")
         slot.clear()
+
+    def finish(self, slot: Slot, reason: FinishReason,
+               error: Optional[str] = None) -> RequestState:
+        """Terminate a resident request out-of-band (abort, deadline,
+        capacity, poisoned row): stamp the state, move the slot to DONE.
+        The engine releases the cache row/pages and calls ``free``."""
+        if slot.state not in (PREFILL, DECODE):
+            raise RuntimeError(
+                f"cannot finish slot {slot.index} in state {slot.state}")
+        st = slot.req
+        st.done = True
+        st.finish_reason = reason
+        st.error = error
+        st.finish_step = self.step
+        slot.state = DONE
+        return st
 
     def preempt(self, slot: Slot) -> RequestState:
         """Evict a request to reclaim its cache pages.
@@ -180,6 +211,14 @@ class Scheduler:
         slot.prefill_cache = None
 
     # -- queries -----------------------------------------------------------
+
+    def slot_of(self, rid: int) -> Optional[Slot]:
+        """The slot currently holding request ``rid`` (None if the
+        request is queued, finished, or unknown)."""
+        for s in self.slots:
+            if s.req is not None and s.req.rid == rid:
+                return s
+        return None
 
     def active(self) -> List[Slot]:
         return [s for s in self.slots if s.state == DECODE]

@@ -1,0 +1,580 @@
+"""Request-lifecycle robustness: abort in every phase, deadlines and
+queue timeouts, admission backpressure, poisoned-request isolation,
+step-failure containment, and the seeded fault-injection sweep.
+
+Structure mirrors the hardening layer in ``serving/core.py``:
+
+  * abort_request at QUEUED / chunked-PREFILL / DECODE / PREEMPTED, on
+    the slot, paged, and paged+prefix backends, each followed by the
+    pool invariant check and a bit-identical-survivors assertion;
+  * the step watchdog (deadline_steps, queue_timeout_steps, preemption
+    budget) and its distinct finish reasons;
+  * bounded-queue QueueFullError and CapacityError fail-fast;
+  * the per-row non-finite-logit guard (real NaN weights through the
+    in-jit guard, plus injected row poisons for surgical isolation) and
+    whole-step failure containment;
+  * ``FaultInjector.random`` crash-consistency sweeps asserting every
+    request reaches a terminal state and the page pool stays coherent
+    after every tick.
+
+Fast tests drive the unquantized reduced model (as in
+``test_engine_api.py``); the heavier randomized sweep runs under the
+``slow`` marker.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.models import init_params
+from repro.serving import (CapacityError, EngineCore, FaultInjector,
+                           FinishReason, GenerationRequest, PagedServingEngine,
+                           QueueFullError, Request, SamplingParams,
+                           ServingEngine)
+
+KEY = jax.random.PRNGKey(0)
+MAX_TICKS = 200                     # liveness guard for every drain loop
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=2)
+    params = init_params(cfg, KEY)
+    quant = QuantConfig(method="none")
+    return cfg, params, quant
+
+
+@pytest.fixture(scope="module")
+def slot_engine(tiny):
+    cfg, params, quant = tiny
+    return ServingEngine(params, cfg, quant, None, batch_size=2, max_len=48)
+
+
+@pytest.fixture(scope="module")
+def paged_engine(tiny):
+    cfg, params, quant = tiny
+    return PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                              max_len=48, block_size=4)
+
+
+@pytest.fixture(scope="module")
+def prefix_engine(tiny):
+    cfg, params, quant = tiny
+    return PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                              max_len=48, block_size=4, prefix_cache=True)
+
+
+ENGINES = ["slot", "paged", "prefix"]
+
+
+def _engine(which, slot_engine, paged_engine, prefix_engine):
+    return {"slot": slot_engine, "paged": paged_engine,
+            "prefix": prefix_engine}[which]
+
+
+def _req(cfg, seed=0, plen=6, new=6, **sampling):
+    rng = np.random.default_rng(seed)
+    return GenerationRequest(
+        prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=new, **sampling))
+
+
+def _drain(core, max_ticks=MAX_TICKS):
+    """Step to completion; returns {rid: [tokens]} and {rid: reason}."""
+    toks, reasons = {}, {}
+    for _ in range(max_ticks):
+        if not core.has_unfinished():
+            break
+        for ro in core.step().outputs:
+            toks.setdefault(ro.request_id, []).extend(ro.new_tokens)
+            if ro.finished:
+                reasons[ro.request_id] = ro.finish_reason
+    assert not core.has_unfinished(), "drain did not terminate"
+    return toks, reasons
+
+
+def _check_pool(core):
+    if hasattr(core.pool, "check_invariants"):
+        core.pool.check_invariants()
+        assert core.pool.pages_in_use == 0   # everything released
+
+
+# ---------------------------------------------------------------------------
+# abort_request: every phase x every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which", ENGINES)
+def test_abort_queued_request(which, tiny, slot_engine, paged_engine,
+                              prefix_engine):
+    cfg = tiny[0]
+    core = _engine(which, slot_engine, paged_engine, prefix_engine).make_core()
+    rids = [core.add_request(_req(cfg, seed=i)) for i in range(3)]
+    assert core.abort_request(rids[2]) is True      # still queued (2 slots)
+    _, reasons = _drain(core)
+    assert reasons[rids[2]] == FinishReason.ABORTED
+    assert core.states[rids[2]].out_tokens == []
+    assert {reasons[r] for r in rids[:2]} == {FinishReason.LENGTH}
+    assert core.stats.aborted == 1
+    _check_pool(core)
+
+
+@pytest.mark.parametrize("which", ENGINES)
+def test_abort_mid_chunked_prefill(which, tiny, slot_engine, paged_engine,
+                                   prefix_engine):
+    cfg = tiny[0]
+    eng = _engine(which, slot_engine, paged_engine, prefix_engine)
+    core = eng.make_core(prefill_chunk=4)
+    victim = core.add_request(_req(cfg, seed=0, plen=14, new=4))
+    other = core.add_request(_req(cfg, seed=1, plen=4, new=6))
+    core.step()                     # victim is mid chunked prefill
+    vslot = core.sched.slot_of(victim)
+    assert vslot is not None and vslot.state == "PREFILL"
+    assert core.abort_request(victim) is True
+    _, reasons = _drain(core)
+    assert reasons[victim] == FinishReason.ABORTED
+    assert reasons[other] == FinishReason.LENGTH
+    _check_pool(core)
+
+
+@pytest.mark.parametrize("which", ENGINES)
+def test_abort_mid_decode_survivors_bit_identical(which, tiny, slot_engine,
+                                                  paged_engine, prefix_engine):
+    """Aborting one decoding request never perturbs its batch company."""
+    cfg = tiny[0]
+    eng = _engine(which, slot_engine, paged_engine, prefix_engine)
+    reqs = [_req(cfg, seed=i, new=8, temperature=0.7) for i in range(2)]
+
+    base = eng.make_core()
+    for i, r in enumerate(reqs):
+        base.add_request(copy.deepcopy(r))
+    base_toks, _ = _drain(base)
+
+    core = eng.make_core()
+    rids = [core.add_request(copy.deepcopy(r)) for r in reqs]
+    toks = {}
+    for ro in core.step().outputs:  # both prefilled + first decode
+        toks.setdefault(ro.request_id, []).extend(ro.new_tokens)
+    assert core.sched.slot_of(rids[0]).state == "DECODE"
+    assert core.abort_request(rids[0]) is True
+    more, reasons = _drain(core)
+    for rid, t in more.items():
+        toks.setdefault(rid, []).extend(t)
+    assert reasons[rids[0]] == FinishReason.ABORTED
+    # the survivor's full trace matches the abort-free run exactly
+    assert toks[rids[1]] == base_toks[rids[1]]
+    # the aborted request keeps the tokens it produced before the abort
+    assert core.states[rids[0]].out_tokens == \
+        base_toks[rids[0]][: len(core.states[rids[0]].out_tokens)]
+    _check_pool(core)
+
+
+def test_abort_preempted_request(tiny, paged_engine):
+    """Abort a request that sits requeued after a mid-flight eviction."""
+    cfg = tiny[0]
+    inj = FaultInjector().alloc_fault_at(2)
+    core = paged_engine.make_core(faults=inj)
+    rids = [core.add_request(_req(cfg, seed=i, new=10)) for i in range(2)]
+    for _ in range(MAX_TICKS):      # run until the injected eviction lands
+        core.step()
+        if any(core.states[r].preemptions for r in rids):
+            break
+    evicted = next(r for r in rids if core.states[r].preemptions)
+    assert core.states[evicted] in core.sched.queue
+    assert core.abort_request(evicted) is True
+    _, reasons = _drain(core)
+    assert reasons[evicted] == FinishReason.ABORTED
+    assert core.states[evicted].finish_reason == FinishReason.ABORTED
+    _check_pool(core)
+
+
+def test_abort_unknown_and_finished(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    rid = core.add_request(_req(cfg, new=2))
+    with pytest.raises(KeyError):
+        core.abort_request(rid + 999)
+    _drain(core)
+    assert core.abort_request(rid) is False         # already finished: no-op
+    assert core.states[rid].finish_reason == FinishReason.LENGTH
+
+
+def test_abort_shared_prefix_keeps_sharers_pages(tiny, prefix_engine):
+    """Aborting one sharer of a cached prefix must not free pages the
+    other sharer still reads (ref counting, not ownership)."""
+    cfg = tiny[0]
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    core = prefix_engine.make_core()
+    rids = [core.add_request(GenerationRequest(
+        prompt=np.concatenate([shared, rng.integers(
+            0, cfg.vocab_size, 3).astype(np.int32)]),
+        sampling=SamplingParams(max_new_tokens=8))) for _ in range(2)]
+    core.step()
+    assert core.stats.cached_prefix_tokens > 0      # the share happened
+    assert core.abort_request(rids[0]) is True
+    core.pool.check_invariants()
+    _, reasons = _drain(core)
+    assert reasons[rids[1]] == FinishReason.LENGTH
+    assert len(core.states[rids[1]].out_tokens) == 8
+    _check_pool(core)
+
+
+# ---------------------------------------------------------------------------
+# deadlines / queue timeout / preemption budget (the step watchdog)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expires_resident_request(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    rid = core.add_request(_req(cfg, new=30, deadline_steps=3))
+    ok = core.add_request(_req(cfg, seed=1, new=5))
+    _, reasons = _drain(core)
+    assert reasons[rid] == FinishReason.DEADLINE
+    st = core.states[rid]
+    assert 0 < len(st.out_tokens) < 30              # partial output kept
+    assert st.latency_steps <= 4
+    assert reasons[ok] == FinishReason.LENGTH
+    assert core.stats.expired == 1
+
+
+def test_queue_timeout_never_admitted(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    # both slots busy for many ticks; the third request cannot wait
+    blockers = [core.add_request(_req(cfg, seed=i, new=20)) for i in range(2)]
+    core.step()
+    late = core.add_request(_req(cfg, seed=5, new=4, queue_timeout_steps=2))
+    _, reasons = _drain(core)
+    assert reasons[late] == FinishReason.QUEUE_TIMEOUT
+    assert core.states[late].out_tokens == []
+    assert core.states[late].admit_step < 0         # truly never admitted
+    assert all(reasons[b] == FinishReason.LENGTH for b in blockers)
+
+
+def test_deadline_expires_queued_request(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    for i in range(2):
+        core.add_request(_req(cfg, seed=i, new=20))
+    core.step()
+    late = core.add_request(_req(cfg, seed=5, new=4, deadline_steps=3))
+    _, reasons = _drain(core)
+    assert reasons[late] == FinishReason.DEADLINE
+
+
+def test_preemption_budget_breaks_livelock(tiny, paged_engine):
+    """After the retry budget, a thrashing request fails CAPACITY fast."""
+    cfg = tiny[0]
+    inj = FaultInjector().alloc_fault_at(2)
+    eng = paged_engine
+    core = EngineCore(eng.fns, eng.qparams, eng.cfg,
+                      cache_backend=eng.cache_backend, num_slots=2,
+                      max_len=48, max_preemptions=0, faults=inj)
+    rids = [core.add_request(_req(cfg, seed=i, new=10)) for i in range(2)]
+    _, reasons = _drain(core)
+    capped = [r for r in rids if reasons[r] == FinishReason.CAPACITY]
+    assert len(capped) == 1                         # the evicted one
+    assert "budget" in core.states[capped[0]].error
+    survivor = next(r for r in rids if r not in capped)
+    assert reasons[survivor] == FinishReason.LENGTH
+    assert core.stats.expired == 1
+    _check_pool(core)
+
+
+# ---------------------------------------------------------------------------
+# admission backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_rejects_with_queue_full(tiny, slot_engine):
+    cfg = tiny[0]
+    eng = slot_engine
+    core = EngineCore(eng.fns, eng.qparams, eng.cfg,
+                      cache_backend=eng.cache_backend, num_slots=2,
+                      max_len=48, max_queue=2)
+    for i in range(2):
+        core.add_request(_req(cfg, seed=i))
+    with pytest.raises(QueueFullError):
+        core.add_request(_req(cfg, seed=9))
+    assert core.stats.rejected == 1
+    assert len(core.states) == 2                    # nothing half-enqueued
+    _, reasons = _drain(core)
+    assert all(r == FinishReason.LENGTH for r in reasons.values())
+
+
+def test_capacity_fail_fast_slot_and_paged(tiny, slot_engine, paged_engine):
+    cfg = tiny[0]
+    for eng in (slot_engine, paged_engine):
+        core = eng.make_core()
+        with pytest.raises(CapacityError):
+            core.add_request(_req(cfg, plen=40, new=40))    # > max_len 48
+        assert core.stats.rejected == 1
+        assert not core.has_unfinished()            # nothing enqueued
+    # CapacityError subclasses ValueError: legacy handlers keep working
+    assert issubclass(CapacityError, ValueError)
+
+
+def test_duplicate_request_id_rejected(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    core.add_request(GenerationRequest(prompt=np.arange(4, dtype=np.int32),
+                                       request_id=7))
+    with pytest.raises(ValueError, match="duplicate"):
+        core.add_request(GenerationRequest(
+            prompt=np.arange(4, dtype=np.int32), request_id=7))
+
+
+# ---------------------------------------------------------------------------
+# poisoned-request isolation
+# ---------------------------------------------------------------------------
+
+
+def test_real_nan_weights_finish_error_not_crash(tiny):
+    """NaN model weights drive the *in-jit* guard: requests finish with
+    ERROR instead of silently emitting garbage or crashing the engine."""
+    cfg, params, quant = tiny
+    bad = jax.tree_util.tree_map(lambda x: np.full_like(x, np.nan), params)
+    eng = ServingEngine(bad, cfg, quant, None, batch_size=2, max_len=48)
+    core = eng.make_core()
+    rids = [core.add_request(_req(cfg, seed=i, new=4)) for i in range(2)]
+    _, reasons = _drain(core)
+    assert all(reasons[r] == FinishReason.ERROR for r in rids)
+    assert all("non-finite" in core.states[r].error for r in rids)
+    assert core.stats.nan_isolated == 2
+
+
+def test_nan_guard_off_skips_detection(tiny):
+    cfg, params, quant = tiny
+    bad = jax.tree_util.tree_map(lambda x: np.full_like(x, np.nan), params)
+    eng = ServingEngine(bad, cfg, quant, None, batch_size=2, max_len=48,
+                        nan_guard=False)
+    core = eng.make_core()
+    rid = core.add_request(_req(cfg, new=3))
+    _, reasons = _drain(core)
+    assert reasons[rid] == FinishReason.LENGTH      # garbage, but unflagged
+    assert core.stats.nan_isolated == 0
+
+
+@pytest.mark.parametrize("which", ENGINES)
+def test_injected_decode_poison_isolates_one_row(which, tiny, slot_engine,
+                                                 paged_engine, prefix_engine):
+    """Only the poisoned row finishes ERROR; the other row of the same
+    decode launch keeps its token, bit-identical to a fault-free run."""
+    cfg = tiny[0]
+    eng = _engine(which, slot_engine, paged_engine, prefix_engine)
+    reqs = [_req(cfg, seed=i, new=8) for i in range(2)]
+
+    base = eng.make_core()
+    for r in reqs:
+        base.add_request(copy.deepcopy(r))
+    base_toks, _ = _drain(base)
+
+    inj = FaultInjector().nan_at(2, 0)
+    core = eng.make_core(faults=inj)
+    rids = [core.add_request(copy.deepcopy(r)) for r in reqs]
+    toks, reasons = _drain(core)
+    assert reasons[rids[0]] == FinishReason.ERROR
+    assert core.states[rids[0]].error == "non-finite logits at decode"
+    assert reasons[rids[1]] == FinishReason.LENGTH
+    assert toks[rids[1]] == base_toks[rids[1]]      # survivor untouched
+    assert toks[rids[0]] == base_toks[rids[0]][: len(toks[rids[0]])]
+    assert core.stats.nan_isolated == 1
+    assert inj.log and inj.log[0]["kind"] == "nan"
+    _check_pool(core)
+
+
+def test_injected_prefill_poison(tiny, paged_engine):
+    cfg = tiny[0]
+    inj = FaultInjector().nan_at(0, 0)
+    core = paged_engine.make_core(faults=inj)
+    rid = core.add_request(_req(cfg, new=6))
+    _, reasons = _drain(core)
+    assert reasons[rid] == FinishReason.ERROR
+    assert core.states[rid].error == "non-finite logits at prefill"
+    assert core.states[rid].out_tokens == []
+    _check_pool(core)
+
+
+# ---------------------------------------------------------------------------
+# step-failure containment
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which", ["slot", "paged"])
+def test_step_error_contained_to_batch(which, tiny, slot_engine,
+                                       paged_engine, prefix_engine):
+    cfg = tiny[0]
+    eng = _engine(which, slot_engine, paged_engine, prefix_engine)
+    inj = FaultInjector().step_error_at(2)
+    core = eng.make_core(faults=inj)
+    doomed = [core.add_request(_req(cfg, seed=i, new=10)) for i in range(2)]
+    queued = core.add_request(_req(cfg, seed=9, new=3))
+    _, reasons = _drain(core)
+    for r in doomed:
+        assert reasons[r] == FinishReason.ERROR
+        assert "decode step failed" in core.states[r].error
+        assert "injected backend step failure" in core.states[r].error
+    # the engine survives: the queued request runs to completion after
+    assert reasons[queued] == FinishReason.LENGTH
+    assert core.stats.step_failures == 1
+    _check_pool(core)
+
+
+def test_alloc_fault_parity_with_fault_free_run(tiny, paged_engine):
+    """Injected page-allocation failures drive real preemption + exact
+    recompute: final greedy tokens match the fault-free run."""
+    cfg = tiny[0]
+    reqs = [_req(cfg, seed=i, new=8) for i in range(3)]
+    base = paged_engine.make_core()
+    for r in reqs:
+        base.add_request(copy.deepcopy(r))
+    base_toks, _ = _drain(base)
+
+    inj = FaultInjector().alloc_fault_at(2).alloc_fault_at(4)
+    core = paged_engine.make_core(faults=inj)
+    rids = [core.add_request(copy.deepcopy(r)) for r in reqs]
+    toks, reasons = _drain(core)
+    assert core.stats.preemptions > 0               # the faults really bit
+    assert all(reasons[r] == FinishReason.LENGTH for r in rids)
+    assert toks == base_toks                        # exact-recompute resume
+    assert core.stats.preemption_retries > 0
+    _check_pool(core)
+
+
+# ---------------------------------------------------------------------------
+# hardened bookkeeping APIs
+# ---------------------------------------------------------------------------
+
+
+def test_pop_request_guards(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    rid = core.add_request(_req(cfg, new=2))
+    with pytest.raises(KeyError, match="unknown request id"):
+        core.pop_request(rid + 1)
+    with pytest.raises(ValueError, match="in flight"):
+        core.pop_request(rid)
+    _drain(core)
+    st = core.pop_request(rid)
+    assert st.done and st.rid == rid
+    with pytest.raises(KeyError):                   # second pop
+        core.pop_request(rid)
+
+
+def test_scheduler_free_and_remove_guards(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    rid = core.add_request(_req(cfg, new=4))
+    core.step()
+    slot = core.sched.slot_of(rid)
+    with pytest.raises(RuntimeError, match="only\\s+DONE"):
+        core.sched.free(slot)                       # in-flight: refuse
+    with pytest.raises(KeyError):
+        core.sched.remove_queued(core.states[rid])  # resident, not queued
+    _drain(core)
+
+
+def test_stats_summary_exports_robustness_counters(tiny, slot_engine):
+    cfg = tiny[0]
+    core = slot_engine.make_core()
+    core.add_request(_req(cfg, new=2))
+    _drain(core)
+    s = core.stats.summary()
+    for k in ("aborted", "expired", "rejected", "nan_isolated",
+              "preemption_retries", "step_failures"):
+        assert s[k] == 0
+
+
+def test_finish_reason_strings_stay_compatible():
+    assert FinishReason.EOS == "eos"
+    assert FinishReason.LENGTH in ("length", "eos")
+    assert str(FinishReason.ABORTED) == "aborted"
+    assert FinishReason("deadline") is FinishReason.DEADLINE
+
+
+def test_run_absorbs_error_and_reason(tiny, slot_engine):
+    """The legacy run() wrapper surfaces the new fields on Request."""
+    cfg = tiny[0]
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=30, deadline_steps=3),
+            Request(prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=4)]
+    out = slot_engine.run(reqs)
+    assert out[0].finish_reason == FinishReason.DEADLINE
+    assert out[0].done and 0 < len(out[0].out_tokens) < 30
+    assert out[1].finish_reason == FinishReason.LENGTH
+    assert out[1].error is None
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized crash-consistency sweep
+# ---------------------------------------------------------------------------
+
+TERMINAL = {FinishReason.LENGTH, FinishReason.EOS, FinishReason.ERROR,
+            FinishReason.CAPACITY, FinishReason.DEADLINE,
+            FinishReason.QUEUE_TIMEOUT, FinishReason.ABORTED}
+
+
+def _sweep(eng, cfg, seed, n_requests=5, ticks=30, deadline=60):
+    inj = FaultInjector.random(seed, ticks=ticks,
+                               rids=list(range(n_requests)),
+                               p_alloc=0.15, p_nan=0.06, p_step_error=0.04)
+    core = eng.make_core(faults=inj)
+    rng = np.random.default_rng(seed)
+    rids = [core.add_request(GenerationRequest(
+        prompt=rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(3, 12))).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=int(rng.integers(2, 9)),
+                                deadline_steps=deadline)))
+        for _ in range(n_requests)]
+    for _ in range(MAX_TICKS):
+        if not core.has_unfinished():
+            break
+        core.step()
+        if hasattr(core.pool, "check_invariants"):
+            core.pool.check_invariants()            # coherent after EVERY tick
+    assert not core.has_unfinished()
+    for r in rids:
+        st = core.states[r]
+        assert st.done and st.finish_reason in TERMINAL, \
+            f"seed {seed} rid {r}: {st.finish_reason}"
+    _check_pool(core)
+    return core
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_crash_consistency_sweep_fast(seed, tiny, prefix_engine):
+    """Randomized faults against the prefix-sharing paged pool — the
+    most invariant-rich configuration — must leave every request
+    terminal and the pool partition-coherent at every tick."""
+    cfg = tiny[0]
+    core = _sweep(prefix_engine, cfg, seed)
+    assert sum(v["tick"] >= 0 for v in core.faults.log) == len(core.faults.log)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("which", ENGINES)
+@pytest.mark.parametrize("seed", range(6))
+def test_crash_consistency_sweep_heavy(which, seed, tiny, slot_engine,
+                                       paged_engine, prefix_engine):
+    cfg = tiny[0]
+    eng = _engine(which, slot_engine, paged_engine, prefix_engine)
+    _sweep(eng, cfg, 100 + seed, n_requests=8, ticks=50)
+
+
+def test_sweep_is_deterministic(tiny, prefix_engine):
+    """Same seed, same workload -> bit-identical outputs and fault log."""
+    cfg = tiny[0]
+    a = _sweep(prefix_engine, cfg, 1234)
+    b = _sweep(prefix_engine, cfg, 1234)
+    assert a.faults.log == b.faults.log
+    assert {r: s.out_tokens for r, s in a.states.items()} == \
+        {r: s.out_tokens for r, s in b.states.items()}
+    assert {r: s.finish_reason for r, s in a.states.items()} == \
+        {r: s.finish_reason for r, s in b.states.items()}
