@@ -15,10 +15,10 @@ workloads at 1 / 8 / 32 concurrently-decoding residents:
     ``B * max_blocks`` logical view every tick regardless of residency,
     the kernel streams only the pages the tables actually name —
     asserted strictly smaller whenever the pool is not fully packed;
-  * the compiled ``decode_paged`` HLO is checked (``hlo_analysis``
-    shape scan) to contain *no* ``(B, nblocks*block_size, Hkv, D)``
-    tensor on the kernel path — the materialization the gather path
-    demonstrably builds.
+  * the compiled ``decode_paged`` HLO is checked (rule R2 of
+    ``repro.analysis``) to contain *no* ``(B, nblocks*block_size, Hkv,
+    D)`` tensor on the kernel path — the materialization the gather
+    path demonstrably builds.
 
 Timing numbers on a CPU host run the kernel in interpret mode (a jnp
 emulation of the grid — also why the whole-tick ``analyze_hlo`` byte
@@ -33,17 +33,15 @@ from __future__ import annotations
 
 import argparse
 import copy
-import re
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import build_artifact, run_rules
 from repro.configs.base import FULL_ATTN, LOCAL_ATTN, QuantConfig
+from repro.launch.hlo_analysis import analyze_hlo
 from repro.quant import quantize_weights_for_serving
 from repro.serving import PagedServingEngine, Request
 from benchmarks.common import emit, plans_for, trained_proxy
-from benchmarks.hlo_analysis import analyze_hlo
 
 BLOCK_SIZE = 16
 
@@ -55,19 +53,10 @@ def lockstep_workload(vocab: int, n: int, gen: int, seed: int = 0):
                     max_new_tokens=gen) for _ in range(n)]
 
 
-def decode_tick_hlo(engine) -> str:
-    """Compile one decode tick (the ``decode_paged`` jit) to the
-    post-optimization HLO text ``analyze_hlo`` consumes."""
-    core = engine.make_core()
-    pool = core.pool
-    m = engine.batch_size
-    args = (engine.qparams, pool.cache,
-            jnp.zeros((m, 1), jnp.int32), jnp.zeros((m, 1), jnp.int32),
-            jnp.zeros((m, pool.max_blocks), jnp.int32),
-            jnp.zeros((m,), jnp.int32), jnp.int32(m),
-            jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.int32),
-            jnp.zeros((m,), jnp.int32), jax.random.PRNGKey(0))
-    return engine.fns.decode_paged.lower(*args).compile().as_text()
+def decode_tick_artifact(engine):
+    """One decode tick (the ``decode_paged`` jit) lowered, compiled, and
+    packaged with rule metadata by ``repro.analysis``."""
+    return build_artifact(engine, "decode_paged", include_jaxpr=False)
 
 
 def kv_tick_bytes(cfg, positions: int) -> int:
@@ -78,14 +67,11 @@ def kv_tick_bytes(cfg, positions: int) -> int:
     return positions * cfg.num_kv_heads * cfg.head_dim * 2 * 2 * n
 
 
-def gathered_view_pattern(engine) -> re.Pattern:
-    """Shape regex of the logical K/V view the gather path materializes:
-    any dtype, (batch, max_blocks*block_size, Hkv, head_dim)."""
-    cfg = engine.cfg
-    core = engine.make_core()
-    t = core.pool.max_blocks * core.pool.block_size
-    return re.compile(rf"\[{engine.batch_size},{t},"
-                      rf"{cfg.num_kv_heads},{cfg.head_dim}\]")
+def gathered_view_findings(artifact):
+    """R2 (no-gathered-kv-view) findings for one decode-tick artifact —
+    the single source of truth for the view-shape check, shared with the
+    test suite and the CI lint gate."""
+    return run_rules(artifact.context(), only=["R2"])
 
 
 def run(residents=(1, 8, 32), gen: int = 16, seed: int = 0):
@@ -137,14 +123,15 @@ def run(residents=(1, 8, 32), gen: int = 16, seed: int = 0):
              f"traffic at {n}/{slots} residents)")
 
     # --- HLO shape check: the kernel tick never materializes the view ---
-    hlo = {name: decode_tick_hlo(eng) for name, eng in engines.items()}
-    pat = gathered_view_pattern(engines["kernel"])
-    assert pat.search(hlo["gather"]), \
+    arts = {name: decode_tick_artifact(eng) for name, eng in engines.items()}
+    assert gathered_view_findings(arts["gather"]), \
         "gather path no longer materializes the logical K/V view?"
-    assert not pat.search(hlo["kernel"]), \
-        "kernel decode tick materializes the gathered K/V view"
-    analyzed = {name: analyze_hlo(text)["bytes"]
-                for name, text in hlo.items()}
+    kernel_findings = gathered_view_findings(arts["kernel"])
+    assert not kernel_findings, \
+        "kernel decode tick materializes the gathered K/V view:\n" + \
+        "\n".join(str(f) for f in kernel_findings)
+    analyzed = {name: analyze_hlo(art.compiled_text)["bytes"]
+                for name, art in arts.items()}
     emit("paged_attn_hlo", 0.0,
          f"no (B,{max_blocks * BLOCK_SIZE},Hkv,D) view in the kernel "
          f"tick HLO; analyze_hlo totals "

@@ -1,0 +1,21 @@
+"""Compiled-artifact static analysis: HLO/jaxpr rule engine, retrace
+guard, VMEM budgets, collective lint (see ``analysis.rules`` for the
+rule catalogue; ``launch/analyze.py`` for the CLI; README "Static
+analysis" for how to add a rule)."""
+from repro.analysis.collectives import COLLECTIVE_OPS, parse_collectives
+from repro.analysis.entrypoints import (EntryArtifact, analyze_engine,
+                                        build_artifact, engine_entrypoints,
+                                        lint_engine)
+from repro.analysis.hlo import HloInstr, HloModule, parse_hlo
+from repro.analysis.retrace import TraceGuard
+from repro.analysis.rules import (ERROR, INFO, RULES, WARNING, Finding,
+                                  RuleContext, max_severity, run_rules)
+from repro.analysis.vmem import DEFAULT_VMEM_LIMIT, entry_vmem_reports
+
+__all__ = [
+    "COLLECTIVE_OPS", "DEFAULT_VMEM_LIMIT", "ERROR", "EntryArtifact",
+    "Finding", "HloInstr", "HloModule", "INFO", "RULES", "RuleContext",
+    "TraceGuard", "WARNING", "analyze_engine", "build_artifact",
+    "engine_entrypoints", "entry_vmem_reports", "lint_engine",
+    "max_severity", "parse_collectives", "parse_hlo", "run_rules",
+]

@@ -1,0 +1,83 @@
+"""Collective lint: per-device wire bytes parsed from (post-SPMD) HLO.
+
+This is the canonical home of the collective parser (rule R7 and the
+dry-run roofline both consume it); ``repro.launch.dryrun`` re-exports
+``parse_collectives`` for compatibility. Wire bytes use the standard
+ring-algorithm model, replica-group aware:
+
+    all-reduce       2 * (n-1)/n * result bytes
+    all-gather       (n-1)/n * result bytes  (result is the gathered size)
+    reduce-scatter   (n-1)   * result bytes  (input is n * result)
+    all-to-all       (n-1)/n * result bytes
+    collective-permute   result bytes
+"""
+from __future__ import annotations
+
+import re
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e8m0fnu": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device wire bytes by collective op (ring-algorithm model)."""
+    out = {op: 0.0 for op in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("shapes"))
+        if rb == 0:
+            continue
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            n = len(gl.group(1).split(",")) if gl else 2
+        n = max(n, 2)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * rb
+        elif op == "all-gather":
+            wire = (n - 1) / n * rb
+        elif op == "reduce-scatter":
+            wire = (n - 1.0) * rb
+        elif op == "all-to-all":
+            wire = (n - 1) / n * rb
+        else:                               # collective-permute
+            wire = rb
+        out[op] += wire
+        out["count"] += 1
+    return out

@@ -1,0 +1,212 @@
+"""Build analyzable artifacts from a serving engine's jitted entry points.
+
+For each entry point a facade engine serves with (slot engines:
+``prefill``/``prefill_chunk``/``decode``; paged engines swap ``decode``
+for ``decode_paged``), this module lowers the jit with representative
+dummy arguments (the same idiom ``benchmarks/paged_attention.py`` uses
+for its decode tick), compiles it, and packages:
+
+  * the post-optimization HLO (parsed, ``analysis.hlo``),
+  * the StableHLO lowering text,
+  * the jaxpr text,
+  * per-entry rule metadata — the forbidden augmented-weight shapes
+    (R1), the gathered K/V view shapes (R2), donation expectations (R3),
+    VMEM launch estimates (R6), and device counts (R7)
+
+into an :class:`EntryArtifact` whose ``context()`` feeds
+:func:`analysis.rules.run_rules` directly.
+
+The R1 forbidden set deliberately excludes augmented-weight shapes that
+fit inside a single GEMM tile: interpret-mode Pallas emulation
+materializes each decoded *tile* as a real HLO tensor, and on reduced
+configs one tile covers the whole weight — the healthy path would trip a
+naive full-shape scan. A weight that exceeds one tile can only appear
+whole in the HLO if something outside the kernel dequantized it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import HloModule, parse_hlo
+from repro.analysis.rules import Finding, RuleContext, run_rules
+from repro.analysis.vmem import (DEFAULT_VMEM_LIMIT, _quantized_sites,
+                                 entry_rows, entry_vmem_reports)
+from repro.kernels.nvfp4_gemm import gemm_plan
+
+
+@dataclasses.dataclass
+class EntryArtifact:
+    """One entry point's compiled artifacts + rule metadata."""
+
+    entry: str
+    compiled_text: str
+    lowered_text: str
+    jaxpr_text: str
+    hlo: HloModule
+    meta: Dict
+
+    def context(self) -> RuleContext:
+        return RuleContext(entry=self.entry, hlo=self.hlo,
+                           lowered_text=self.lowered_text,
+                           jaxpr_text=self.jaxpr_text, meta=self.meta)
+
+
+def engine_entrypoints(engine) -> List[str]:
+    decode = engine.cache_backend.decode_fn
+    return ["prefill", "prefill_chunk", decode]
+
+
+# ---------------------------------------------------------------------------
+# dummy arguments per entry point
+# ---------------------------------------------------------------------------
+
+
+def _prefill_args(engine, core, width: int):
+    cache = core.pool.fresh_prefill_cache()
+    toks = jnp.zeros((1, width), jnp.int32)
+    pos = jnp.arange(width, dtype=jnp.int32)[None]
+    return (engine.qparams, cache, toks, pos, jnp.int32(width - 1))
+
+
+def _prefill_chunk_args(engine, core, width: int):
+    cache = core.pool.fresh_prefill_cache()
+    toks = jnp.zeros((1, width), jnp.int32)
+    pos = jnp.arange(width, dtype=jnp.int32)[None]
+    return (engine.qparams, cache, toks, pos)
+
+
+def _decode_args(engine, core):
+    m = engine.batch_size
+    return (engine.qparams, core.pool.cache,
+            jnp.zeros((m, 1), jnp.int32), jnp.zeros((m, 1), jnp.int32),
+            jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.int32),
+            jnp.zeros((m,), jnp.int32), jax.random.PRNGKey(0))
+
+
+def _decode_paged_args(engine, core):
+    m = engine.batch_size
+    pool = core.pool
+    return (engine.qparams, pool.cache,
+            jnp.zeros((m, 1), jnp.int32), jnp.zeros((m, 1), jnp.int32),
+            jnp.zeros((m, pool.max_blocks), jnp.int32),
+            jnp.zeros((m,), jnp.int32), jnp.int32(m),
+            jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.int32),
+            jnp.zeros((m,), jnp.int32), jax.random.PRNGKey(0))
+
+
+def entry_args(engine, core, entry: str) -> tuple:
+    if entry == "prefill":
+        return _prefill_args(engine, core, min(16, engine.max_len))
+    if entry == "prefill_chunk":
+        return _prefill_chunk_args(engine, core,
+                                   engine.prefill_chunk or
+                                   min(16, engine.max_len))
+    if entry == "decode":
+        return _decode_args(engine, core)
+    if entry == "decode_paged":
+        return _decode_paged_args(engine, core)
+    raise ValueError(f"unknown entry point {entry!r}")
+
+
+# ---------------------------------------------------------------------------
+# rule metadata
+# ---------------------------------------------------------------------------
+
+
+def _forbidden_weight_shapes(engine, entry: str) -> Dict[Tuple[int, ...], str]:
+    """Full augmented-weight shapes (any stacking prefix) whose wide
+    materialization R1 forbids — only weights larger than one GEMM tile
+    (see module docstring for the interpret-mode tile caveat)."""
+    m = entry_rows(engine, entry)
+    out: Dict[Tuple[int, ...], str] = {}
+    for site, n, ka in _quantized_sites(engine.qparams):
+        gp = gemm_plan(m, n, ka)
+        if n <= gp["bn"] and ka <= gp["bk"]:
+            continue                        # one tile covers the weight
+        out[(n, ka)] = site
+        out[(ka, n)] = site                 # transposed materialization
+    return out
+
+
+def _cache_meta(cache) -> Tuple[int, set]:
+    leaves = jax.tree_util.tree_leaves(cache)
+    return len(leaves), {tuple(leaf.shape) for leaf in leaves}
+
+
+def build_meta(engine, core, entry: str, cache,
+               vmem_limit: int = DEFAULT_VMEM_LIMIT) -> Dict:
+    cfg = engine.cfg
+    n_leaves, pool_shapes = _cache_meta(cache)
+    meta = {
+        "deployed": engine.quant.backend == "pallas"
+        and bool(_quantized_sites(engine.qparams)),
+        "step_loop": True,
+        "expect_aliased": n_leaves,
+        "pool_leaf_shapes": pool_shapes,
+        "num_devices": jax.device_count(),
+        "vmem_limit": vmem_limit,
+        "vmem_reports": entry_vmem_reports(engine, entry),
+        "forbidden_weight_shapes": _forbidden_weight_shapes(engine, entry),
+    }
+    if entry == "decode_paged":
+        pool = core.pool
+        view = (engine.batch_size, pool.max_blocks * pool.block_size,
+                cfg.num_kv_heads, cfg.head_dim)
+        meta["gathered_view_shapes"] = {view: "paged K/V logical view"}
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# artifact construction / linting
+# ---------------------------------------------------------------------------
+
+
+def build_artifact(engine, entry: str, core=None,
+                   vmem_limit: int = DEFAULT_VMEM_LIMIT,
+                   include_jaxpr: bool = True) -> EntryArtifact:
+    """Lower + compile one entry point and package it for the rules."""
+    core = core or engine.make_core()
+    args = entry_args(engine, core, entry)
+    fn = getattr(engine.fns, entry)
+    lowered = fn.lower(*args)
+    compiled_text = lowered.compile().as_text()
+    jaxpr_text = ""
+    if include_jaxpr:
+        jaxpr_text = str(jax.make_jaxpr(fn)(*args))
+    meta = build_meta(engine, core, entry, cache=args[1],
+                      vmem_limit=vmem_limit)
+    return EntryArtifact(entry=entry, compiled_text=compiled_text,
+                         lowered_text=lowered.as_text(),
+                         jaxpr_text=jaxpr_text,
+                         hlo=parse_hlo(compiled_text), meta=meta)
+
+
+def analyze_engine(engine, entries: Optional[List[str]] = None,
+                   vmem_limit: int = DEFAULT_VMEM_LIMIT,
+                   include_jaxpr: bool = True) -> Dict[str, EntryArtifact]:
+    """Artifacts for every (requested) entry point of one engine. One
+    core (pool) is shared across entries so pool buffers are built once."""
+    core = engine.make_core()
+    return {entry: build_artifact(engine, entry, core=core,
+                                  vmem_limit=vmem_limit,
+                                  include_jaxpr=include_jaxpr)
+            for entry in (entries or engine_entrypoints(engine))}
+
+
+def lint_engine(engine, entries: Optional[List[str]] = None,
+                vmem_limit: int = DEFAULT_VMEM_LIMIT,
+                only: Optional[List[str]] = None,
+                exclude: tuple = ()) -> Tuple[Dict[str, EntryArtifact],
+                                              List[Finding]]:
+    """Run the full rule suite over an engine; returns (artifacts,
+    findings across all entry points)."""
+    artifacts = analyze_engine(engine, entries=entries,
+                               vmem_limit=vmem_limit)
+    findings: List[Finding] = []
+    for art in artifacts.values():
+        findings.extend(run_rules(art.context(), only=only, exclude=exclude))
+    return artifacts, findings

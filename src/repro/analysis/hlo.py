@@ -1,0 +1,181 @@
+"""Structured parser for post-optimization HLO text.
+
+The rule engine (``analysis.rules``) needs more than the cost totals
+``launch.hlo_analysis.analyze_hlo`` produces: it asks *which* ops
+materialize *which* shapes, whether the module aliases its pool inputs
+to outputs, and what custom-call targets the step loop reaches. This
+module parses the ``compiled.as_text()`` dump into a light object model:
+
+    HloModule
+      .computations: {name: HloComputation}
+      .entry: the ENTRY computation (when marked)
+      .input_output_alias: [(output_index, parameter_number), ...]
+      .instructions(): iterator over every HloInstr in the module
+
+    HloInstr
+      .name / .opcode / .shapes / .computation / .line / .text
+      .custom_call_target (custom-call ops only)
+
+Parsing is line-oriented and regex-based like the cost analyzer — HLO
+text is stable enough for that across XLA versions, and the rules only
+depend on opcode names, result shapes, and a few header attributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+# dtype[d0,d1,...] possibly followed by a layout annotation {...}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+_ALIAS_PAIR_RE = re.compile(r"\{([0-9,\s]*)\}\s*:\s*\((\d+)")
+
+Shape = Tuple[str, Tuple[int, ...]]     # (dtype, dims)
+
+
+@dataclasses.dataclass
+class HloInstr:
+    """One HLO instruction (one ``%name = ...`` line)."""
+
+    name: str
+    opcode: str
+    shapes: List[Shape]                 # result shape(s); tuples flattened
+    computation: str
+    line: int                           # 1-based line number in the dump
+    text: str
+    is_root: bool = False
+
+    @property
+    def custom_call_target(self) -> str:
+        if self.opcode != "custom-call":
+            return ""
+        m = _TARGET_RE.search(self.text)
+        return m.group(1) if m else ""
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    instrs: List[HloInstr]
+    is_entry: bool = False
+
+
+@dataclasses.dataclass
+class HloModule:
+    text: str
+    computations: Dict[str, HloComputation]
+    # header input_output_alias pairs: (output tuple-index path, param no.)
+    input_output_alias: List[Tuple[Tuple[int, ...], int]]
+
+    @property
+    def entry(self) -> Optional[HloComputation]:
+        for comp in self.computations.values():
+            if comp.is_entry:
+                return comp
+        return None
+
+    def instructions(self) -> Iterator[HloInstr]:
+        for comp in self.computations.values():
+            yield from comp.instrs
+
+    def find_shape(self, dims: Tuple[int, ...],
+                   dtypes: Optional[Tuple[str, ...]] = None
+                   ) -> List[HloInstr]:
+        """Instructions producing a result of exactly ``dims`` (any dtype
+        unless ``dtypes`` restricts)."""
+        out = []
+        for instr in self.instructions():
+            for dt, d in instr.shapes:
+                if d == dims and (dtypes is None or dt in dtypes):
+                    out.append(instr)
+                    break
+        return out
+
+
+def _result_shapes(rhs: str) -> Tuple[List[Shape], str]:
+    """Split an instruction rhs into (result shapes, rest-after-shapes).
+
+    The rhs looks like ``f32[8,16]{1,0} add(%a, %b), meta=...`` or, for
+    tuple results, ``(f32[4]{0}, s32[]) tuple(%a, %b)``. Returns the
+    parsed shapes and the remainder starting at the opcode.
+    """
+    s = rhs.lstrip()
+    if s.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(s):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        head, rest = s[: i + 1], s[i + 1:]
+    else:
+        # consume "dtype[dims]{layout}" tokens up to the opcode
+        m = re.match(r"^(\w+\[[0-9,]*\](?:\{[^}]*\})?\s*)+", s)
+        if not m:
+            return [], s
+        head, rest = m.group(0), s[m.end():]
+    shapes = [(dt, tuple(int(d) for d in dims.split(",")) if dims else ())
+              for dt, dims in _SHAPE_RE.findall(head)]
+    return shapes, rest.lstrip()
+
+
+def _parse_alias_header(text: str) -> List[Tuple[Tuple[int, ...], int]]:
+    """``input_output_alias={ {0}: (1, {}, may-alias), ... }`` from the
+    ``HloModule`` header line; empty when the module aliases nothing."""
+    key = "input_output_alias={"
+    start = text.find(key)
+    if start < 0:
+        return []
+    i = start + len(key) - 1
+    depth = 0
+    for j in range(i, min(len(text), i + 100_000)):
+        depth += text[j] == "{"
+        depth -= text[j] == "}"
+        if depth == 0:
+            body = text[i + 1: j]
+            break
+    else:
+        return []
+    pairs = []
+    for out_idx, param in _ALIAS_PAIR_RE.findall(body):
+        idx = tuple(int(x) for x in out_idx.replace(" ", "").split(",")
+                    if x != "")
+        pairs.append((idx, int(param)))
+    return pairs
+
+
+def parse_hlo(text: str) -> HloModule:
+    """Parse one post-optimization HLO module dump."""
+    comps: Dict[str, HloComputation] = {}
+    cur: Optional[HloComputation] = None
+    header = text.splitlines()[0] if text else ""
+    alias = _parse_alias_header(header if "input_output_alias" in header
+                                else text)
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.rstrip()
+        stripped = line.strip()
+        if "{" in line and "->" in line:
+            mc = _COMP_RE.match(stripped)
+            if mc and not stripped.startswith("%param"):
+                cur = HloComputation(mc.group(1), [],
+                                     is_entry=stripped.startswith("ENTRY"))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(line)
+        if not md or "=" not in line:
+            continue
+        is_root, name, rhs = bool(md.group(1)), md.group(2), md.group(3)
+        shapes, rest = _result_shapes(rhs)
+        mo = re.match(r"([\w\-]+)", rest)
+        if not mo:
+            continue
+        cur.instrs.append(HloInstr(name=name, opcode=mo.group(1),
+                                   shapes=shapes, computation=cur.name,
+                                   line=lineno, text=line, is_root=is_root))
+    return HloModule(text=text, computations=comps,
+                     input_output_alias=alias)

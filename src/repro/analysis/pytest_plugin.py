@@ -1,0 +1,55 @@
+"""Pytest fixtures for inline rule assertions.
+
+Registered via ``pytest_plugins`` in ``tests/conftest.py``; tests use
+them as:
+
+    def test_decode_is_clean(hlo_lint, assert_no_findings):
+        engine = ...
+        _, findings = hlo_lint(engine)
+        assert_no_findings(findings, max_severity="warning")
+
+    def test_no_retrace(trace_guard):
+        core = engine.make_core(trace_guard=trace_guard)
+        ...serve...
+        assert not [f for f in trace_guard.findings()
+                    if f.severity == "error"]
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+import pytest
+
+from repro.analysis.entrypoints import lint_engine
+from repro.analysis.retrace import TraceGuard
+from repro.analysis.rules import _SEV_ORDER, Finding
+
+
+@pytest.fixture
+def trace_guard() -> TraceGuard:
+    """A fresh R5 trace counter to thread into ``make_core``."""
+    return TraceGuard()
+
+
+@pytest.fixture
+def hlo_lint():
+    """``hlo_lint(engine, **kw) -> (artifacts, findings)`` — the full
+    rule suite over every entry point of one engine."""
+    return lint_engine
+
+
+@pytest.fixture
+def assert_no_findings():
+    """Fail the test (with the offending findings listed) when any
+    finding at or above ``max_severity`` survives."""
+
+    def check(findings: Iterable[Finding], max_severity: str = "error",
+              exclude_rules: Optional[List[str]] = None) -> None:
+        bar = _SEV_ORDER[max_severity]
+        bad = [f for f in findings
+               if _SEV_ORDER[f.severity] <= bar
+               and f.rule not in (exclude_rules or [])]
+        assert not bad, "rule violations:\n" + "\n".join(
+            str(f) for f in bad)
+
+    return check

@@ -1,0 +1,140 @@
+"""Retrace guard (rule R5): count jit traces per serving entry point.
+
+The serving contract is that scheduling state never enters a trace: a
+full serving run — admissions, chunked prefill, preemption + resume,
+aborts, and every active-request count — must compile each entry point
+at most once per *declared* shape bucket (one for the fixed-width decode
+launch; one per pow2 prompt bucket for one-shot prefill; one per pow2
+width when the legacy ``decode_buckets`` knob is on). A retrace on the
+hot path is a silent multi-second stall per occurrence, invisible to
+correctness tests.
+
+:class:`TraceGuard` wraps an :class:`~repro.serving.core.EngineFns`
+with counting shims that fingerprint every call's argument tree by
+(structure, leaf shapes, leaf dtypes) — exactly the signature jit keys
+its trace cache on for array arguments — and cross-checks the count of
+distinct fingerprints against the jitted functions' own ``_cache_size``
+where the runtime exposes it. ``EngineCore(..., trace_guard=...)`` (or
+``ServingEngine.make_core(trace_guard=...)``) threads the guard under a
+core without touching the shared engine fns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.analysis.rules import ERROR, INFO, Finding
+
+ENTRY_NAMES = ("prefill", "prefill_chunk", "decode", "decode_paged",
+               "sample")
+
+
+def _fingerprint(args, kwargs) -> tuple:
+    """Trace-cache key proxy: pytree structure + per-leaf (shape, dtype).
+
+    Weak types and non-array leaves hash by type name — close enough for
+    the serving entry points, whose leaves are all committed arrays.
+    """
+    leaves, treedef = jax.tree.flatten((args, kwargs))
+    sig = tuple(
+        (tuple(getattr(leaf, "shape", ())),
+         str(getattr(leaf, "dtype", type(leaf).__name__)))
+        for leaf in leaves)
+    return (hash(treedef), sig)
+
+
+class TraceGuard:
+    """Counts calls and distinct argument signatures per entry point."""
+
+    def __init__(self):
+        self.calls: Dict[str, int] = {}
+        self.signatures: Dict[str, Dict[tuple, int]] = {}
+        self._jitted: Dict[str, Callable] = {}
+        self._baseline: Dict[str, int] = {}
+
+    # -- wrapping ----------------------------------------------------------
+
+    def wrap_fns(self, fns):
+        """A copy of ``fns`` whose entry points count through this guard.
+
+        Wrapping records each jitted function's current ``_cache_size``
+        as the baseline, so a guard installed on an engine whose fns
+        already carry traces (shared across cores) still measures only
+        the traces *this* run adds.
+        """
+        wrapped = {}
+        for name in ENTRY_NAMES:
+            fn = getattr(fns, name)
+            self._jitted[name] = fn
+            self._baseline[name] = self._cache_size(fn) or 0
+            wrapped[name] = self._wrap(name, fn)
+        return dataclasses.replace(fns, **wrapped)
+
+    def _wrap(self, name: str, fn: Callable) -> Callable:
+        def shim(*args, **kwargs):
+            self.calls[name] = self.calls.get(name, 0) + 1
+            sigs = self.signatures.setdefault(name, {})
+            key = _fingerprint(args, kwargs)
+            sigs[key] = sigs.get(key, 0) + 1
+            return fn(*args, **kwargs)
+        shim.__name__ = f"traced_{name}"
+        return shim
+
+    @staticmethod
+    def _cache_size(fn) -> Optional[int]:
+        getter = getattr(fn, "_cache_size", None)
+        if getter is None:
+            return None
+        try:
+            return int(getter())
+        except Exception:       # noqa: BLE001 — diagnostic only
+            return None
+
+    # -- reporting ---------------------------------------------------------
+
+    def trace_counts(self) -> Dict[str, int]:
+        """Distinct argument signatures seen per called entry point."""
+        return {name: len(sigs) for name, sigs in self.signatures.items()}
+
+    def compile_counts(self) -> Dict[str, Optional[int]]:
+        """Traces the jit caches actually added since wrapping (None when
+        the runtime does not expose cache sizes)."""
+        out = {}
+        for name, fn in self._jitted.items():
+            if self.calls.get(name, 0) == 0:
+                continue
+            size = self._cache_size(fn)
+            out[name] = (None if size is None
+                         else max(size - self._baseline[name], 0))
+        return out
+
+    def findings(self, declared: Optional[Dict[str, int]] = None
+                 ) -> List[Finding]:
+        """R5 findings: entry points that traced more than their declared
+        shape-bucket allowance (default: one bucket each)."""
+        declared = declared or {}
+        compiled = self.compile_counts()
+        out = []
+        for name, sigs in sorted(self.signatures.items()):
+            allowance = declared.get(name, 1)
+            distinct = len(sigs)
+            actual = compiled.get(name)
+            observed = distinct if actual is None else actual
+            detail = (f"{self.calls[name]} calls, {distinct} distinct "
+                      f"signatures"
+                      + (f", {actual} traces compiled" if actual is not None
+                         else ""))
+            if observed > allowance:
+                out.append(Finding(
+                    "R5", "retrace-guard", ERROR,
+                    f"{observed} traces but only {allowance} shape "
+                    f"bucket(s) declared ({detail}) — scheduling state "
+                    f"leaked into a trace", entry=name))
+            else:
+                out.append(Finding(
+                    "R5", "retrace-guard", INFO,
+                    f"within budget: {detail}, allowance {allowance}",
+                    entry=name))
+        return out

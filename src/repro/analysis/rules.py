@@ -1,0 +1,363 @@
+"""Compiled-artifact invariant rules over jaxprs and post-optimization HLO.
+
+Every serving invariant that lives in the *compiled* artifact — not in
+any Python-visible state — is encoded here as a rule: a function from a
+:class:`RuleContext` (parsed HLO module + lowered MLIR + jaxpr text +
+per-entry metadata) to a list of typed :class:`Finding`. The test suite,
+the ``launch/analyze.py`` CLI, and the CI ``lint-hlo`` gate all run the
+same rules, so the gathered-view regex that used to live inline in
+``benchmarks/paged_attention.py`` has one source of truth.
+
+Shipped rules:
+
+    R1 no-dequant-materialization  deployed pallas path must not hold a
+       f32/bf16 tensor of a full augmented-weight shape ``(N, K_aug)``
+       larger than one kernel tile (in-kernel tile decodes are the
+       *point*; a full-shape dequant means the ~4.5 bit/value HBM story
+       is gone)
+    R2 no-gathered-kv-view         decode must not materialize the
+       ``(B, max_blocks*block_size, Hkv, D)`` logical K/V view the jnp
+       gather fallback builds
+    R3 donation-aliasing           cache-pool arguments must appear in
+       the module's ``input_output_alias`` map (donated buffers), and no
+       per-tick full-pool ``copy`` may survive optimization
+    R4 no-host-callback            nothing in the step loop may host-
+       transfer or call back into Python (infeed/outfeed/send/recv,
+       ``xla_python_*callback`` custom-calls, jaxpr callback primitives)
+    R5 retrace-guard               (dynamic; see ``analysis.retrace``)
+       each entry point compiles at most once per declared shape bucket
+       across a full serving run
+    R6 vmem-budget                 per-kernel VMEM estimates from the
+       exported BlockSpec plans must stay under the configured budget
+    R7 collective-lint             a single-device serving lowering must
+       contain no collectives; sharded lowerings get wire-byte reporting
+
+Rules degrade to no-ops when their metadata is absent, so partial
+contexts (e.g. a bare HLO string in a unit test) lint cleanly with just
+the rules their inputs support.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.collectives import COLLECTIVE_OPS, parse_collectives
+from repro.analysis.hlo import HloModule, parse_hlo
+
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+_SEV_ORDER = {ERROR: 0, WARNING: 1, INFO: 2}
+
+# dtypes that count as a "materialized dequant" / wide-value tensor
+WIDE_DTYPES = ("f32", "bf16", "f16", "f64")
+
+# custom-call targets that reach back into the host Python runtime
+_CALLBACK_TARGET_RE = re.compile(r"callback|py_func|host", re.IGNORECASE)
+_HOST_OPCODES = ("infeed", "outfeed", "send", "recv", "send-done",
+                 "recv-done")
+# jaxpr primitives that imply a host round trip per launch
+_JAXPR_CALLBACK_RE = re.compile(
+    r"\b(pure_callback|io_callback|debug_callback|host_callback)\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or report) anchored to an op site."""
+
+    rule: str                       # "R2"
+    name: str                       # "no-gathered-kv-view"
+    severity: str                   # error | warning | info
+    message: str
+    entry: str = ""                 # entry-point name ("decode_paged")
+    op: str = ""                    # HLO instruction name, when known
+    computation: str = ""
+    line: int = 0
+
+    def __str__(self) -> str:
+        site = f" @{self.computation}%{self.op}" if self.op else ""
+        return (f"[{self.severity.upper():7s}] {self.rule} {self.name} "
+                f"({self.entry}){site}: {self.message}")
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """Everything one entry point exposes to the rules.
+
+    ``meta`` keys (each rule no-ops when its keys are missing):
+      deployed                bool  — packed-weight pallas path (R1)
+      forbidden_weight_shapes {dims: site} — full augmented-weight shapes
+                              exceeding one kernel tile (R1)
+      gathered_view_shapes    {dims: site} — logical K/V view shapes (R2)
+      expect_aliased          int   — cache leaves that must alias (R3)
+      pool_leaf_shapes        {dims} — pool buffer shapes (R3 copy scan)
+      step_loop               bool  — entry runs per tick (R4)
+      vmem_reports            [dict] — kernel VMEM plans (R6)
+      vmem_limit              int   — VMEM budget in bytes (R6)
+      num_devices             int   — devices the lowering targets (R7)
+    """
+
+    entry: str
+    hlo: Optional[HloModule] = None
+    hlo_text: str = ""
+    lowered_text: str = ""
+    jaxpr_text: str = ""
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.hlo is None and self.hlo_text:
+            self.hlo = parse_hlo(self.hlo_text)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSpec:
+    rule: str
+    name: str
+    fn: Callable[[RuleContext], List[Finding]]
+    doc: str
+
+
+RULES: Dict[str, RuleSpec] = {}
+
+
+def rule(rid: str, name: str):
+    def deco(fn):
+        RULES[rid] = RuleSpec(rid, name, fn, (fn.__doc__ or "").strip())
+        return fn
+    return deco
+
+
+def run_rules(ctx: RuleContext, only: Optional[Iterable[str]] = None,
+              exclude: Iterable[str] = ()) -> List[Finding]:
+    """Run the rule suite over one entry point's context; findings are
+    ordered most-severe first, then by rule id."""
+    findings: List[Finding] = []
+    for rid, spec in sorted(RULES.items()):
+        if only is not None and rid not in only:
+            continue
+        if rid in exclude:
+            continue
+        findings.extend(spec.fn(ctx))
+    return sorted(findings, key=lambda f: (_SEV_ORDER[f.severity], f.rule,
+                                           f.line))
+
+
+def max_severity(findings: Iterable[Finding]) -> Optional[str]:
+    worst = None
+    for f in findings:
+        if worst is None or _SEV_ORDER[f.severity] < _SEV_ORDER[worst]:
+            worst = f.severity
+    return worst
+
+
+def _fmt_dims(dims: Tuple[int, ...]) -> str:
+    return "(" + ",".join(str(d) for d in dims) + ")"
+
+
+# ---------------------------------------------------------------------------
+# R1: no dequantized full-weight materialization on the deployed path
+# ---------------------------------------------------------------------------
+
+
+@rule("R1", "no-dequant-materialization")
+def no_dequant_materialization(ctx: RuleContext) -> List[Finding]:
+    """The deployed pallas path decodes packed E2M1/E4M3 weight *tiles*
+    in-kernel; a wide (f32/bf16) tensor of a full augmented-weight shape
+    ``(N, K_aug)`` bigger than one tile means some refactor reintroduced
+    a whole-weight dequantization — the ~4.5 bits/value HBM traffic story
+    silently becomes 16-32 bits/value."""
+    forbidden = ctx.meta.get("forbidden_weight_shapes") or {}
+    if not (ctx.hlo and forbidden and ctx.meta.get("deployed")):
+        return []
+    out = []
+    for instr in ctx.hlo.instructions():
+        for dt, dims in instr.shapes:
+            site = forbidden.get(dims)
+            if site is None or dt not in WIDE_DTYPES:
+                continue
+            out.append(Finding(
+                "R1", "no-dequant-materialization", ERROR,
+                f"{dt}{_fmt_dims(dims)} materializes the full augmented "
+                f"weight of {site} (op {instr.opcode}) — dequant must stay "
+                f"in-kernel at tile granularity",
+                entry=ctx.entry, op=instr.name,
+                computation=instr.computation, line=instr.line))
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R2: no gathered logical K/V view on the decode path
+# ---------------------------------------------------------------------------
+
+
+@rule("R2", "no-gathered-kv-view")
+def no_gathered_kv_view(ctx: RuleContext) -> List[Finding]:
+    """The paged-attention kernel streams K/V pages through the block
+    table inside the launch; a ``(B, max_blocks*block_size, Hkv, D)``
+    tensor in the decode HLO is the jnp gather fallback's full logical
+    view — O(pool) HBM traffic per tick instead of O(resident tokens)."""
+    views = ctx.meta.get("gathered_view_shapes") or {}
+    if not (ctx.hlo and views):
+        return []
+    out = []
+    for instr in ctx.hlo.instructions():
+        for dt, dims in instr.shapes:
+            site = views.get(dims)
+            if site is None:
+                continue
+            out.append(Finding(
+                "R2", "no-gathered-kv-view", ERROR,
+                f"{dt}{_fmt_dims(dims)} materializes the gathered K/V "
+                f"view ({site}; op {instr.opcode}) — the block table must "
+                f"be walked in-kernel, not gathered into a logical view",
+                entry=ctx.entry, op=instr.name,
+                computation=instr.computation, line=instr.line))
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3: cache-pool donation / aliasing
+# ---------------------------------------------------------------------------
+
+
+@rule("R3", "donation-aliasing")
+def donation_aliasing(ctx: RuleContext) -> List[Finding]:
+    """Cache-pool buffers are donated into every step-loop entry point;
+    the compiled module must alias them input->output
+    (``input_output_alias``) or every tick pays a full pool copy. When
+    aliasing is deficient, pool-shaped ``copy`` ops are listed as the
+    corroborating op sites (a fully aliased module legitimately keeps a
+    few pool-shaped copies feeding fused in-place updates, so the copy
+    scan alone is not evidence)."""
+    expect = ctx.meta.get("expect_aliased")
+    if not (ctx.hlo and expect):
+        return []
+    out = []
+    aliased = len(ctx.hlo.input_output_alias)
+    if aliased == 0:
+        out.append(Finding(
+            "R3", "donation-aliasing", ERROR,
+            f"no input_output_alias in the compiled module but "
+            f"{expect} cache leaves are donated — the pool is copied "
+            f"every tick (donate_argnums lost?)", entry=ctx.entry))
+    elif aliased < expect:
+        out.append(Finding(
+            "R3", "donation-aliasing", WARNING,
+            f"only {aliased} of {expect} donated cache leaves alias "
+            f"input->output; the rest are copied per tick",
+            entry=ctx.entry))
+    if aliased >= expect:
+        return out
+    pool_shapes = ctx.meta.get("pool_leaf_shapes") or set()
+    for instr in ctx.hlo.instructions():
+        if instr.opcode != "copy":
+            continue
+        for dt, dims in instr.shapes:
+            if dims in pool_shapes:
+                out.append(Finding(
+                    "R3", "donation-aliasing", WARNING,
+                    f"full pool-buffer copy {dt}{_fmt_dims(dims)} "
+                    f"survives optimization — the per-tick pool copy a "
+                    f"lost donation pays", entry=ctx.entry, op=instr.name,
+                    computation=instr.computation, line=instr.line))
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4: no host transfer / Python callback in the step loop
+# ---------------------------------------------------------------------------
+
+
+@rule("R4", "no-host-callback")
+def no_host_callback(ctx: RuleContext) -> List[Finding]:
+    """A step-loop entry point runs every tick; an infeed/outfeed/send/
+    recv or a Python-callback custom-call inside it serializes the loop
+    on host round trips (and breaks donation). Debug prints count."""
+    if not ctx.meta.get("step_loop"):
+        return []
+    out = []
+    if ctx.hlo is not None:
+        for instr in ctx.hlo.instructions():
+            if instr.opcode in _HOST_OPCODES:
+                out.append(Finding(
+                    "R4", "no-host-callback", ERROR,
+                    f"host-transfer op '{instr.opcode}' in the step loop",
+                    entry=ctx.entry, op=instr.name,
+                    computation=instr.computation, line=instr.line))
+            elif (instr.opcode == "custom-call"
+                  and _CALLBACK_TARGET_RE.search(instr.custom_call_target)):
+                out.append(Finding(
+                    "R4", "no-host-callback", ERROR,
+                    f"Python callback custom-call "
+                    f"'{instr.custom_call_target}' in the step loop",
+                    entry=ctx.entry, op=instr.name,
+                    computation=instr.computation, line=instr.line))
+    if ctx.jaxpr_text:
+        m = _JAXPR_CALLBACK_RE.search(ctx.jaxpr_text)
+        if m:
+            out.append(Finding(
+                "R4", "no-host-callback", ERROR,
+                f"jaxpr contains callback primitive '{m.group(1)}' — a "
+                f"host round trip per launch", entry=ctx.entry))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R6: Pallas VMEM budget
+# ---------------------------------------------------------------------------
+
+
+@rule("R6", "vmem-budget")
+def vmem_budget(ctx: RuleContext) -> List[Finding]:
+    """Per-kernel VMEM residency (double-buffered BlockSpec blocks +
+    scratch, from the kernels' exported plans) must stay under the
+    budget — an over-budget launch fails to lower on real TPUs or forces
+    the compiler to spill the pipeline."""
+    reports = ctx.meta.get("vmem_reports") or []
+    limit = ctx.meta.get("vmem_limit")
+    if not (reports and limit):
+        return []
+    out = []
+    for rep in reports:
+        used = rep["vmem_bytes"]
+        if used > limit:
+            out.append(Finding(
+                "R6", "vmem-budget", ERROR,
+                f"{rep['kernel']} at {rep['site']}: estimated VMEM "
+                f"{used / 2**20:.2f} MiB > budget {limit / 2**20:.2f} MiB "
+                f"(grid={rep.get('grid')}, blocks={rep.get('blocks')})",
+                entry=ctx.entry))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R7: collective lint
+# ---------------------------------------------------------------------------
+
+
+@rule("R7", "collective-lint")
+def collective_lint(ctx: RuleContext) -> List[Finding]:
+    """A single-device serving lowering must contain no collectives (one
+    would mean sharding constraints leaked into the unsharded path);
+    multi-device lowerings get an informational wire-byte report."""
+    if ctx.hlo is None or "num_devices" not in ctx.meta:
+        return []
+    coll = parse_collectives(ctx.hlo.text)
+    if coll["count"] == 0:
+        return []
+    detail = ", ".join(f"{op}={coll[op]:.0f}B" for op in COLLECTIVE_OPS
+                       if coll[op])
+    if ctx.meta["num_devices"] <= 1:
+        return [Finding(
+            "R7", "collective-lint", ERROR,
+            f"{int(coll['count'])} collective(s) in a single-device "
+            f"lowering ({detail}) — sharding constraints leaked into the "
+            f"serving path", entry=ctx.entry)]
+    return [Finding(
+        "R7", "collective-lint", INFO,
+        f"{int(coll['count'])} collective(s), wire bytes/device: {detail}",
+        entry=ctx.entry)]

@@ -1,0 +1,119 @@
+"""Per-kernel VMEM budget estimation (rule R6).
+
+A Pallas launch whose double-buffered blocks + scratch exceed the
+per-core VMEM (~16 MiB on current TPUs) fails to lower on hardware —
+but CI runs the kernels in interpret mode, where any block size "works".
+This module re-derives every kernel launch an entry point will make from
+static metadata (the quantized weight pytree, the engine geometry, and
+the plans' outlier counts) and prices it with the estimators the kernels
+themselves export (``gemm_vmem_bytes``, ``fused_quant_plan``,
+``paged_attention_plan``) — the estimators live next to the BlockSpecs
+they mirror, so a kernel schedule change updates both or fails R6.
+
+Reports deduplicate by launch geometry: a 28-layer model has 28
+identical ``wq`` launches, which is one row with a site count.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.quant import QTensor
+from repro.kernels.arc_fused_quant import fused_quant_plan
+from repro.kernels.nvfp4_gemm import gemm_plan, gemm_vmem_bytes
+from repro.kernels.paged_attention import paged_attention_plan
+from repro.quant.apply import QUANTIZABLE
+
+DEFAULT_VMEM_LIMIT = 16 * 2**20     # per-core VMEM (pallas_guide.md)
+
+# entry point -> how many activation rows one launch flattens together
+_ENTRY_ROWS = {
+    "prefill": "max_len",           # one-shot prefill: up to max_len tokens
+    "prefill_chunk": "chunk",       # chunk width (max_len when unchunked)
+    "decode": "slots",              # one token per slot
+    "decode_paged": "slots",
+}
+
+
+def _quantized_sites(qparams: Dict) -> List[Tuple[str, int, int]]:
+    """(site name, N, Ka) for every packed-QTensor linear weight."""
+    sites = []
+    for i, block in enumerate(qparams.get("blocks", [])):
+        for module, leaves in QUANTIZABLE.items():
+            if module not in block:
+                continue
+            for leaf in leaves:
+                qt = block[module].get(leaf)
+                if isinstance(qt, QTensor) and qt.packed:
+                    sites.append((f"b{i}.{module}.{leaf}",
+                                  int(qt.shape[-2]), int(qt.valid_k)))
+    return sites
+
+
+def entry_rows(engine, entry: str) -> int:
+    """Conservative activation-row count for one launch of ``entry``."""
+    kind = _ENTRY_ROWS.get(entry, "slots")
+    if kind == "max_len":
+        return engine.max_len
+    if kind == "chunk":
+        return engine.prefill_chunk or engine.max_len
+    return engine.batch_size
+
+
+def entry_vmem_reports(engine, entry: str) -> List[dict]:
+    """Estimated VMEM per unique kernel launch ``entry`` makes.
+
+    Each report: ``{kernel, site, count, grid, blocks, vmem_bytes}``.
+    GEMM + fused-quantize launches exist only on the deployed pallas
+    path (packed QTensor weights); the paged-attention launch exists on
+    decode_paged whenever the attention kernel is enabled — including
+    unquantized engines.
+    """
+    reports: List[dict] = []
+    m = entry_rows(engine, entry)
+
+    if engine.quant.backend == "pallas":
+        plans = getattr(engine, "plans", None)
+        meta = plans.meta if plans is not None else {}
+        seen: Dict[tuple, dict] = {}
+        for site, n, ka in _quantized_sites(engine.qparams):
+            s = meta.get(site, 0)
+            gp = gemm_plan(m, n, ka)
+            key = ("nvfp4_gemm", m, n, ka)
+            if key in seen:
+                seen[key]["count"] += 1
+                continue
+            seen[key] = {
+                "kernel": "nvfp4_gemm", "site": site, "count": 1,
+                "grid": gp["grid"],
+                "blocks": (gp["bm"], gp["bn"], gp["bk"]),
+                "vmem_bytes": gemm_vmem_bytes(gp, w_packed=True),
+            }
+            qkey = ("arc_fused_quantize", m, ka - s, s)
+            if qkey not in seen:
+                fp = fused_quant_plan(m, ka - s, s)
+                seen[qkey] = {
+                    "kernel": "arc_fused_quantize", "site": site,
+                    "count": 1, "grid": fp["grid"],
+                    "blocks": (fp["bm"], ka - s),
+                    "vmem_bytes": fp["vmem_bytes"],
+                }
+            else:
+                seen[qkey]["count"] += 1
+        reports.extend(seen.values())
+
+    if entry == "decode_paged" and engine.quant.attn_kernel:
+        cfg = engine.cfg
+        bs = getattr(engine, "block_size", 16)
+        nblocks = -(-engine.max_len // bs)
+        pp = paged_attention_plan(engine.batch_size, cfg.num_heads,
+                                  cfg.head_dim, cfg.num_kv_heads, bs,
+                                  nblocks)
+        reports.append({
+            "kernel": "paged_attention_decode", "site": "attn.decode",
+            "count": sum(mix in ("full", "local")
+                         for mix in cfg.mixer_pattern) * cfg.num_periods,
+            "grid": pp["grid"],
+            "blocks": (cfg.num_heads, cfg.head_dim, bs),
+            "vmem_bytes": pp["vmem_bytes"],
+        })
+    return reports

@@ -78,6 +78,28 @@ def _fused_kernel(s, eps, apply_norm, order_ref, ts_ref, x_ref, gamma_ref,
     scales_ref[...] = jnp.concatenate([inter_s, scales[:, nb:]], axis=1)
 
 
+def fused_quant_plan(m: int, k: int, s: int, block_m: int = 128,
+                     x_bytes: int = 4) -> dict:
+    """Static schedule + VMEM estimate for one fused-quantize launch
+    (no tracing). Mirrors the BlockSpecs in :func:`arc_fused_quantize` —
+    update both together. In/out blocks are double-buffered (x2);
+    ``x_bytes`` is the activation element width (4 for the f32 datapath).
+    """
+    bm = max(min(block_m, -(-m // 8) * 8), 8)
+    mp = -(-m // bm) * bm
+    ka = k + s
+    inputs = (k * 4                         # channel order (i32)
+              + 2 * 4                       # tensor scales (f32)
+              + bm * k * x_bytes            # x block
+              + k * x_bytes)                # gamma
+    outputs = (bm * ka                      # codes (uint8)
+               + bm * (ka // GROUP) * 4)    # scales (f32)
+    return {
+        "bm": bm, "mp": mp, "ka": ka, "grid": (mp // bm,),
+        "vmem_bytes": 2 * (inputs + outputs),
+    }
+
+
 @functools.partial(jax.jit, static_argnames=("s", "eps", "block_m",
                                              "apply_norm", "interpret"))
 def arc_fused_quantize(x: jax.Array, gamma: jax.Array, order: jax.Array,

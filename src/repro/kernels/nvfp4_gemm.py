@@ -157,6 +157,26 @@ def gemm_plan(m: int, n: int, ka: int, block_m: int = 256,
     }
 
 
+def gemm_vmem_bytes(plan: dict, w_packed: bool = True) -> int:
+    """Estimated VMEM residency of one launch under ``plan``.
+
+    Pipeline in/out blocks are double-buffered (x2); the decode fast
+    path adds its f32 accumulator scratch. Mirrors the BlockSpecs in
+    :func:`nvfp4_gemm` — update both together.
+    """
+    bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
+    wc = bk // 2 if w_packed else bk
+    ws = (bk // GROUP) * (1 if w_packed else 4)
+    inputs = (bm * bk                       # x codes (uint8)
+              + bm * (bk // GROUP) * 4      # x scales (f32)
+              + bn * wc                     # w codes
+              + bn * ws                     # w scales
+              + 4)                          # tensor scale
+    outputs = bm * bn * 4                   # f32 out tile
+    scratch = bm * bn * 4 if plan["path"] == "decode_fast" else 0
+    return 2 * (inputs + outputs) + scratch
+
+
 def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
     pad = rows - a.shape[0]
     if pad == 0:

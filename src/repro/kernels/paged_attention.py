@@ -112,6 +112,29 @@ def _decode_kernel(table_ref, qpos_ref, active_ref,   # scalar prefetch
         o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
 
 
+def paged_attention_plan(batch: int, hq: int, hd: int, hkv: int,
+                         block_size: int, nblocks: int,
+                         dtype_bytes: int = 2) -> dict:
+    """Static schedule + VMEM estimate for one decode launch (no
+    tracing). Mirrors the grid spec in :func:`paged_attention_decode` —
+    update both together. In/out blocks are double-buffered (x2); the
+    online-softmax accumulator scratch is single-buffered; the scalar-
+    prefetch operands (block table, positions, active) live in SMEM and
+    are reported separately.
+    """
+    rep = hq // hkv
+    inputs = (hq * hd * dtype_bytes                 # q block
+              + 2 * block_size * hkv * hd * dtype_bytes   # k + v page
+              + block_size * 4)                     # page positions (i32)
+    outputs = hq * hd * dtype_bytes
+    scratch = (hkv * rep * hd + 2 * hkv * rep) * 4  # acc + max + sum (f32)
+    return {
+        "grid": (batch, nblocks),
+        "vmem_bytes": 2 * (inputs + outputs) + scratch,
+        "smem_bytes": batch * nblocks * 4 + batch * 4 + 4,
+    }
+
+
 def paged_attention_decode(q: jax.Array, kp: jax.Array, vp: jax.Array,
                            posp: jax.Array, block_table: jax.Array,
                            q_pos: jax.Array,

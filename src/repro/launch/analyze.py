@@ -1,0 +1,167 @@
+"""Compiled-artifact lint CLI: run the ``repro.analysis`` rule suite
+over the jitted serving entry points and print a per-entry report.
+
+    # one engine, explicit knobs
+    PYTHONPATH=src python -m repro.launch.analyze --arch qwen2-1.5b \
+        --smoke --paged --backend pallas --interpret
+
+    # the CI gate: slot/paged x dense/MoE on tiny proxies
+    PYTHONPATH=src python -m repro.launch.analyze --matrix --fail-on error
+
+Per entry point the report carries the rule findings (R1-R4, R6, R7 —
+R5 is dynamic; see ``tests/test_retrace_guard.py``), the VMEM launch
+table, and ``launch.hlo_analysis.analyze_hlo`` flops/bytes for cost
+context. Exit status is nonzero when any finding at or above
+``--fail-on`` severity survives.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, TextIO
+
+import jax
+
+from repro.analysis import DEFAULT_VMEM_LIMIT, Finding, lint_engine
+from repro.analysis.rules import _SEV_ORDER
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models import capture_stats, init_params
+from repro.quant import make_plan_bundle, quantize_weights_for_serving
+from repro.serving import PagedServingEngine, ServingEngine
+
+# the CI matrix: one dense and one MoE proxy, slot and paged pools
+MATRIX_ARCHS = ("qwen2-1.5b", "qwen3-moe-235b-a22b")
+
+
+def build_engine(arch: str, paged: bool, backend: str = "pallas",
+                 method: str = "arc", smoke: bool = True,
+                 batch_size: int = 4, max_len: int = 64,
+                 interpret: bool = True, prefill_chunk: Optional[int] = None):
+    """A small serving engine over freshly calibrated ARC weights (the
+    test-suite idiom: one capture batch stands in for calibration)."""
+    cfg = ARCHS[arch]
+    if smoke:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    quant = QuantConfig(method=method)
+    plans = None
+    qparams = params
+    if method in ("arc", "rtn"):
+        toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+        stats = capture_stats(params, cfg, tokens=toks)
+        plans = make_plan_bundle(stats, cfg, quant, params)
+        qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                               pack=True)
+    cls = PagedServingEngine if paged else ServingEngine
+    return cls(qparams, cfg, quant, plans, batch_size=batch_size,
+               max_len=max_len, backend=backend, interpret=interpret,
+               prefill_chunk=prefill_chunk)
+
+
+def report_engine(engine, label: str,
+                  vmem_limit: int = DEFAULT_VMEM_LIMIT,
+                  out: TextIO = sys.stdout) -> List[Finding]:
+    """Lint one engine and print its per-entry report; returns the
+    findings (all severities)."""
+    artifacts, findings = lint_engine(engine, vmem_limit=vmem_limit)
+    print(f"== {label} ==", file=out)
+    for entry, art in artifacts.items():
+        acc = analyze_hlo(art.compiled_text)
+        print(f"-- {entry}: {acc['flops'] / 1e6:.1f} MFLOP, "
+              f"{acc['bytes'] / 1e6:.1f} MB accessed, "
+              f"{len(art.hlo.input_output_alias)} aliased outputs",
+              file=out)
+        for rep in art.meta.get("vmem_reports", []):
+            mark = (" OVER BUDGET" if rep["vmem_bytes"] > vmem_limit
+                    else "")
+            print(f"   vmem {rep['kernel']:<24s} x{rep['count']:<3d} "
+                  f"grid={rep['grid']} blocks={rep['blocks']} "
+                  f"{rep['vmem_bytes'] / 2**20:.2f} MiB{mark}", file=out)
+    shown = [f for f in findings if f.severity != "info"] or findings
+    for f in shown:
+        print(f"   {f}", file=out)
+    if not findings:
+        print("   (no findings)", file=out)
+    return findings
+
+
+def _matrix_cells(backend: str):
+    for arch in MATRIX_ARCHS:
+        for paged in (False, True):
+            yield arch, paged, backend
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (default; full-size lowering of "
+                         "real archs is dryrun territory)")
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--backend", default="pallas",
+                    choices=["reference", "pallas"])
+    ap.add_argument("--method", default="arc",
+                    choices=["arc", "rtn", "none"])
+    ap.add_argument("--interpret", action="store_true", default=True)
+    ap.add_argument("--prefill-chunk", type=int, default=4,
+                    help="also exercise the chunked-prefill entry width")
+    ap.add_argument("--vmem-limit-mib", type=float,
+                    default=DEFAULT_VMEM_LIMIT / 2**20,
+                    help="R6 per-kernel VMEM budget in MiB")
+    ap.add_argument("--matrix", action="store_true",
+                    help="the CI gate: slot/paged x dense/MoE proxies")
+    ap.add_argument("--fail-on", default="error",
+                    choices=["error", "warning", "never"],
+                    help="exit nonzero when findings at/above this "
+                         "severity survive")
+    args = ap.parse_args(argv)
+    limit = int(args.vmem_limit_mib * 2**20)
+
+    cells = (_matrix_cells(args.backend) if args.matrix
+             else [(args.arch, args.paged, args.backend)])
+    all_findings: List[Finding] = []
+    for arch, paged, backend in cells:
+        label = f"{arch} {'paged' if paged else 'slot'} {backend}"
+        try:
+            engine = build_engine(arch, paged, backend=backend,
+                                  method=args.method, smoke=args.smoke,
+                                  interpret=args.interpret,
+                                  prefill_chunk=args.prefill_chunk or None)
+            all_findings += report_engine(engine, label, vmem_limit=limit)
+        except Exception as e:      # noqa: BLE001 — report, don't crash the matrix
+            if backend == "pallas" and not args.matrix:
+                raise
+            if backend == "pallas":
+                # MoE routing under the fused pallas pipeline is still an
+                # open ROADMAP item; lint that cell on the reference
+                # backend (R2/R3/R4/R7 still bind) instead of failing CI
+                print(f"== {label} == lowering failed "
+                      f"({type(e).__name__}: {e}); retrying on the "
+                      f"reference backend")
+                engine = build_engine(arch, paged, backend="reference",
+                                      method=args.method, smoke=args.smoke,
+                                      interpret=args.interpret,
+                                      prefill_chunk=args.prefill_chunk
+                                      or None)
+                all_findings += report_engine(
+                    engine, label.replace("pallas", "reference(fallback)"),
+                    vmem_limit=limit)
+            else:
+                raise
+
+    errors = [f for f in all_findings if f.severity == "error"]
+    warnings = [f for f in all_findings if f.severity == "warning"]
+    print(f"\n{len(errors)} error(s), {len(warnings)} warning(s), "
+          f"{len(all_findings) - len(errors) - len(warnings)} info")
+    if args.fail_on == "never":
+        return 0
+    bar = _SEV_ORDER[args.fail_on]
+    return 1 if any(_SEV_ORDER[f.severity] <= bar for f in all_findings) \
+        else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,10 @@ _DTYPE_BYTES = {
     "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
     "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
     "s8": 1, "u8": 1, "pred": 1,
+    # fp8 scale codes and packed 4-bit nibbles flow through the deployed
+    # NVFP4 path — dropping them understated its HBM bytes
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e8m0fnu": 1,
+    "s4": 0.5, "u4": 0.5,
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")

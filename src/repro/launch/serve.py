@@ -119,6 +119,10 @@ def main():
     ap.add_argument("--no-nan-guard", action="store_true",
                     help="disable the per-row non-finite-logit guard "
                          "(the isolation A/B baseline)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="after the engine is built, lint its compiled "
+                         "entry points with the repro.analysis rule suite "
+                         "and print the per-entry report before serving")
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
@@ -173,6 +177,10 @@ def main():
                  prefill_budget=args.prefill_budget or None,
                  nan_guard=not args.no_nan_guard,
                  max_queue=args.max_queue or None, **kw)
+    if args.analyze:
+        from repro.launch.analyze import report_engine
+        report_engine(engine, f"{args.arch} ({'paged' if args.paged else 'slot'}"
+                              f" pool, backend={args.backend})")
     try:
         if args.stream:
             for out in engine.stream(reqs):

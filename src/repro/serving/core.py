@@ -241,7 +241,8 @@ class EngineCore:
                  bucket_prompts: bool = False,
                  max_queue: Optional[int] = None,
                  max_preemptions: Optional[int] = 64,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 trace_guard=None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         if prefill_budget is not None and prefill_budget < 1:
@@ -250,7 +251,10 @@ class EngineCore:
             raise ValueError("max_queue must be >= 1")
         if max_preemptions is not None and max_preemptions < 0:
             raise ValueError("max_preemptions must be >= 0")
-        self.fns = fns
+        # an analysis.retrace.TraceGuard (or anything with wrap_fns)
+        # interposes counting shims on this core's entry points without
+        # touching the engine-shared fns or their trace caches
+        self.fns = fns if trace_guard is None else trace_guard.wrap_fns(fns)
         self.qparams = qparams
         self.cfg = cfg
         self.backend = cache_backend or SlotBackend()

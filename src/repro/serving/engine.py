@@ -193,14 +193,16 @@ class ServingEngine:
 
     def make_core(self, prefill_chunk: int | None = None,
                   prefill_budget: int | None = None,
-                  faults=None) -> EngineCore:
+                  faults=None, trace_guard=None) -> EngineCore:
         """A fresh step-driven core over a new cache pool. Jit trace
         caches are shared across cores of the same engine.
         ``prefill_chunk`` / ``prefill_budget`` override the engine
         defaults for this core (``0`` forces one-shot / unbudgeted
         prefill, as in the CLIs). ``faults`` threads a
         :class:`~repro.serving.faults.FaultInjector` through the core
-        and backend for deterministic failure testing."""
+        and backend for deterministic failure testing; ``trace_guard``
+        threads an :class:`~repro.analysis.retrace.TraceGuard` that
+        counts jit traces per entry point (rule R5)."""
         if prefill_chunk is None:
             chunk = self.prefill_chunk
         else:
@@ -217,7 +219,7 @@ class ServingEngine:
                           bucket_prompts=self._bucket_prompts,
                           max_queue=self.max_queue,
                           max_preemptions=self.max_preemptions,
-                          faults=faults)
+                          faults=faults, trace_guard=trace_guard)
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve ``requests`` to completion (compatibility wrapper).

@@ -3,6 +3,10 @@ import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS
 
+# compiled-artifact rule fixtures (hlo_lint / trace_guard /
+# assert_no_findings) — see src/repro/analysis/pytest_plugin.py
+pytest_plugins = ("repro.analysis.pytest_plugin",)
+
 if HAVE_HYPOTHESIS:
     # keep hypothesis fast on the single-core CI box; registered only when
     # the real library is installed (the fallback shim has its own budget)

@@ -1,0 +1,290 @@
+"""Compiled-artifact rule engine (``repro.analysis``): per-rule unit
+tests on synthetic HLO, parser coverage for the alias header / tuple
+shapes / custom-call targets, and the two seeded engine-level
+regressions the PR's acceptance criteria name — the jnp gather fallback
+tripping R2 and a lost ``donate_argnums`` tripping R3. The slow matrix
+asserts the full suite is clean on current main for slot/paged x
+dense/MoE arc-quantized engines (the same cells as the CI ``lint-hlo``
+gate).
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.analysis import build_artifact, max_severity, parse_hlo, run_rules
+from repro.analysis.rules import RuleContext
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.models import init_params
+from repro.serving import PagedServingEngine, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+PLAIN_HDR = "HloModule jit_step\n"
+# three donated cache leaves aliased through to outputs 0..2
+ALIAS3_HDR = ("HloModule jit_step, input_output_alias={ "
+              "{0}: (1, {}, may-alias), {1}: (2, {}, may-alias), "
+              "{2}: (3, {}, may-alias) }\n")
+ALIAS1_HDR = ("HloModule jit_step, input_output_alias={ "
+              "{0}: (1, {}, may-alias) }\n")
+
+
+def _mod(header, *body_lines):
+    return header + "\n".join(
+        ["", "ENTRY %main (p0: f32[4]) -> f32[4] {",
+         *(f"  {line}" for line in body_lines), "}", ""])
+
+
+# ---------------------------------------------------------------------------
+# parse_hlo
+# ---------------------------------------------------------------------------
+
+
+def test_parse_hlo_alias_header_and_shapes():
+    hlo = _mod(ALIAS3_HDR,
+               "%p0 = f32[4] parameter(0)",
+               "%t = (f32[4]{0}, s32[]) tuple(%p0, %p0)",
+               '%cc = f32[4] custom-call(%p0), custom_call_target="__cublas$gemm"',
+               "ROOT %r = f32[4] copy(%p0)")
+    mod = parse_hlo(hlo)
+    assert mod.input_output_alias == [((0,), 1), ((1,), 2), ((2,), 3)]
+    by_name = {i.name: i for i in mod.instructions()}
+    assert by_name["t"].opcode == "tuple"
+    assert by_name["t"].shapes == [("f32", (4,)), ("s32", ())]
+    assert by_name["cc"].custom_call_target == "__cublas$gemm"
+    assert by_name["r"].is_root
+    assert mod.entry is not None and mod.entry.name == "main"
+    assert [i.name for i in mod.find_shape((4,), ("s32",))] == []
+
+
+def test_parse_hlo_no_alias_header():
+    assert parse_hlo(_mod(PLAIN_HDR, "%p0 = f32[4] parameter(0)")
+                     ).input_output_alias == []
+
+
+# ---------------------------------------------------------------------------
+# R1: no dequantized full-weight materialization
+# ---------------------------------------------------------------------------
+
+R1_META = {"deployed": True,
+           "forbidden_weight_shapes": {(64, 160): "b0.mlp.up",
+                                       (160, 64): "b0.mlp.up"}}
+
+
+def test_r1_fires_on_wide_full_weight_tensor():
+    hlo = _mod(PLAIN_HDR,
+               "%p0 = f32[4] parameter(0)",
+               "%w = bf16[64,160] convert(%p0)",
+               "%pk = u8[64,80] copy(%p0)")     # packed bytes: legal
+    f = run_rules(RuleContext(entry="decode", hlo_text=hlo, meta=R1_META),
+                  only=["R1"])
+    assert [x.severity for x in f] == ["error"]
+    assert f[0].op == "w" and "b0.mlp.up" in f[0].message
+
+
+def test_r1_transposed_materialization_also_fires():
+    hlo = _mod(PLAIN_HDR, "%wt = f32[160,64] transpose(%p0)")
+    f = run_rules(RuleContext(entry="decode", hlo_text=hlo, meta=R1_META),
+                  only=["R1"])
+    assert len(f) == 1 and f[0].severity == "error"
+
+
+def test_r1_silent_off_the_deployed_path():
+    hlo = _mod(PLAIN_HDR, "%w = bf16[64,160] convert(%p0)")
+    meta = dict(R1_META, deployed=False)
+    assert not run_rules(RuleContext(entry="decode", hlo_text=hlo,
+                                     meta=meta), only=["R1"])
+
+
+# ---------------------------------------------------------------------------
+# R2: no gathered logical K/V view
+# ---------------------------------------------------------------------------
+
+R2_META = {"gathered_view_shapes": {(2, 64, 2, 32): "paged K/V view"}}
+
+
+def test_r2_fires_on_view_shape_any_dtype():
+    hlo = _mod(PLAIN_HDR, "%g = bf16[2,64,2,32] transpose(%p0)")
+    f = run_rules(RuleContext(entry="decode_paged", hlo_text=hlo,
+                              meta=R2_META), only=["R2"])
+    assert [x.severity for x in f] == ["error"] and f[0].rule == "R2"
+
+
+def test_r2_clean_without_view_shape():
+    hlo = _mod(PLAIN_HDR, "%g = bf16[2,16,2,32] transpose(%p0)")
+    assert not run_rules(RuleContext(entry="decode_paged", hlo_text=hlo,
+                                     meta=R2_META), only=["R2"])
+
+
+# ---------------------------------------------------------------------------
+# R3: donation / aliasing
+# ---------------------------------------------------------------------------
+
+POOL = {"expect_aliased": 3, "pool_leaf_shapes": {(2, 1, 48, 2, 32)}}
+POOL_COPY = "%cp = bf16[2,1,48,2,32] copy(%p0)"
+
+
+def test_r3_no_alias_is_error_with_pool_copy_site():
+    f = run_rules(RuleContext(entry="decode",
+                              hlo_text=_mod(PLAIN_HDR, POOL_COPY),
+                              meta=POOL), only=["R3"])
+    assert [x.severity for x in f] == ["error", "warning"]
+    assert "donate_argnums" in f[0].message
+    assert f[1].op == "cp"                      # corroborating copy site
+
+
+def test_r3_partial_alias_is_warning():
+    f = run_rules(RuleContext(entry="decode",
+                              hlo_text=_mod(ALIAS1_HDR, POOL_COPY),
+                              meta=POOL), only=["R3"])
+    assert max_severity(f) == "warning"
+    assert any("only 1 of 3" in x.message for x in f)
+
+
+def test_r3_fully_aliased_module_tolerates_pool_shaped_copies():
+    # XLA legitimately keeps pool-shaped copies feeding fused in-place
+    # updates; with full aliasing the copy scan must not fire
+    assert not run_rules(RuleContext(entry="decode",
+                                     hlo_text=_mod(ALIAS3_HDR, POOL_COPY),
+                                     meta=POOL), only=["R3"])
+
+
+# ---------------------------------------------------------------------------
+# R4: no host transfer / Python callback in the step loop
+# ---------------------------------------------------------------------------
+
+
+def test_r4_flags_callback_custom_call_and_host_ops():
+    hlo = _mod(PLAIN_HDR,
+               '%cb = f32[4] custom-call(%p0), custom_call_target="xla_python_cpu_callback"',
+               "%of = token[] outfeed(%p0)",
+               '%ok = f32[4] custom-call(%p0), custom_call_target="__cublas$gemm"')
+    f = run_rules(RuleContext(entry="decode", hlo_text=hlo,
+                              meta={"step_loop": True}), only=["R4"])
+    assert len(f) == 2 and all(x.severity == "error" for x in f)
+    assert {x.op for x in f} == {"cb", "of"}
+
+
+def test_r4_flags_jaxpr_callback_primitive():
+    ctx = RuleContext(entry="decode",
+                      jaxpr_text="a:f32[4] = pure_callback[callback=...] b",
+                      meta={"step_loop": True})
+    f = run_rules(ctx, only=["R4"])
+    assert len(f) == 1 and "pure_callback" in f[0].message
+
+
+def test_r4_only_binds_to_step_loop_entries():
+    hlo = _mod(PLAIN_HDR, "%of = token[] outfeed(%p0)")
+    assert not run_rules(RuleContext(entry="offline", hlo_text=hlo,
+                                     meta={"step_loop": False}),
+                         only=["R4"])
+
+
+# ---------------------------------------------------------------------------
+# R6: Pallas VMEM budget
+# ---------------------------------------------------------------------------
+
+
+def _vmem_meta(used):
+    return {"vmem_limit": 16 * 2**20,
+            "vmem_reports": [{"kernel": "nvfp4_gemm", "site": "decode",
+                              "grid": (1, 1), "blocks": {},
+                              "vmem_bytes": used}]}
+
+
+def test_r6_over_budget_is_error():
+    f = run_rules(RuleContext(entry="decode", meta=_vmem_meta(20 * 2**20)),
+                  only=["R6"])
+    assert [x.severity for x in f] == ["error"]
+    assert "nvfp4_gemm" in f[0].message
+
+
+def test_r6_under_budget_is_clean():
+    assert not run_rules(RuleContext(entry="decode",
+                                     meta=_vmem_meta(8 * 2**20)),
+                         only=["R6"])
+
+
+# ---------------------------------------------------------------------------
+# R7: collective lint
+# ---------------------------------------------------------------------------
+
+COLL_LINE = ("%ar = f32[256] all-reduce(%p0), replica_groups={{0,1}}, "
+             "to_apply=%add")
+
+
+def test_r7_collective_on_single_device_is_error():
+    f = run_rules(RuleContext(entry="decode",
+                              hlo_text=_mod(PLAIN_HDR, COLL_LINE),
+                              meta={"num_devices": 1}), only=["R7"])
+    assert [x.severity for x in f] == ["error"]
+
+
+def test_r7_multi_device_reports_wire_bytes():
+    f = run_rules(RuleContext(entry="decode",
+                              hlo_text=_mod(PLAIN_HDR, COLL_LINE),
+                              meta={"num_devices": 2}), only=["R7"])
+    assert [x.severity for x in f] == ["info"]
+    assert "all-reduce" in f[0].message
+
+
+# ---------------------------------------------------------------------------
+# Seeded engine-level regressions (fast: unquantized reduced model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=2)
+    return cfg, init_params(cfg, KEY), QuantConfig(method="none")
+
+
+def test_r2_catches_gather_fallback_and_passes_kernel(tiny):
+    """The benchmark's old inline regex, now as rule R2: the jnp gather
+    fallback materializes the logical K/V view; the Pallas kernel path
+    must not."""
+    cfg, params, quant = tiny
+    gather = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                                max_len=48, attn_kernel=False)
+    f = run_rules(build_artifact(gather, "decode_paged",
+                                 include_jaxpr=False).context(),
+                  only=["R2"])
+    assert f and all(x.rule == "R2" and x.severity == "error" for x in f)
+    kernel = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                                max_len=48)
+    assert not run_rules(build_artifact(kernel, "decode_paged",
+                                        include_jaxpr=False).context(),
+                         only=["R2"])
+
+
+def test_r3_catches_lost_donation(tiny):
+    """Re-jitting decode without ``donate_argnums`` empties the compiled
+    module's alias map — R3 must turn that into an error."""
+    cfg, params, quant = tiny
+    eng = ServingEngine(params, cfg, quant, None, batch_size=2, max_len=48)
+    healthy = build_artifact(eng, "decode", include_jaxpr=False)
+    assert not run_rules(healthy.context(), only=["R3"])
+    eng.fns = dataclasses.replace(
+        eng.fns, decode=jax.jit(eng.fns.decode.__wrapped__))
+    f = run_rules(build_artifact(eng, "decode",
+                                 include_jaxpr=False).context(),
+                  only=["R3"])
+    assert any(x.severity == "error" and "donate_argnums" in x.message
+               for x in f)
+
+
+# ---------------------------------------------------------------------------
+# Full suite clean on main (slow: the CI lint-hlo matrix as a test)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [False, True], ids=["slot", "paged"])
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "qwen3-moe-235b-a22b"],
+                         ids=["dense", "moe"])
+def test_rule_suite_clean_on_main(arch, paged, hlo_lint, assert_no_findings):
+    from repro.launch.analyze import build_engine
+    engine = build_engine(arch, paged, prefill_chunk=4)
+    _, findings = hlo_lint(engine)
+    assert_no_findings(findings, max_severity="warning")

@@ -1,0 +1,153 @@
+"""Unit coverage for ``launch.hlo_analysis.analyze_hlo`` on synthetic
+HLO: the dtype byte table (fp8 scale codes / packed 4-bit nibbles on the
+deployed NVFP4 path), dot-FLOP accounting on ROOT lines, and
+trip-count-aware multiplication through (nested) while loops — plus the
+fp8 wire-byte path of the canonical collective parser.
+
+The synthetic modules follow the post-optimization text format the
+regex parser expects: computation headers like
+``ENTRY %main (p0: ...) -> ... {``, ``%``-prefixed instruction names,
+and while lines carrying ``body=``/``condition=`` plus a
+``known_trip_count`` backend_config.
+"""
+from repro.analysis.collectives import parse_collectives
+from repro.launch.hlo_analysis import analyze_hlo
+
+FP8_MODULE = """\
+HloModule fp8_bytes
+
+ENTRY %main (p0: f32[128,4]) -> s4[64,64] {
+  %p0 = f32[128,4] parameter(0)
+  %q = f8e4m3fn[128,4] convert(%p0)
+  ROOT %pk = s4[64,64] copy(%q)
+}
+"""
+
+DOT_MODULE = """\
+HloModule root_dot
+
+ENTRY %main (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+  %p0 = f32[8,16] parameter(0)
+  %p1 = f32[16,4] parameter(1)
+  ROOT %d = f32[8,4] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def _while_module(inner_trip='backend_config={"known_trip_count":{"n":"3"}}',
+                  outer_trip='backend_config={"known_trip_count":{"n":"4"}}'):
+    """Nested whiles: the inner body's 64-byte copy must be charged
+    inner_trip * outer_trip times."""
+    return f"""\
+HloModule nested_while
+
+%inner_body (x: f32[16]) -> f32[16] {{
+  %x = f32[16] parameter(0)
+  ROOT %cp = f32[16] copy(%x)
+}}
+
+%inner_cond (xc: f32[16]) -> pred[] {{
+  ROOT %t0 = pred[] constant(false)
+}}
+
+%outer_body (y: f32[16]) -> f32[16] {{
+  %y = f32[16] parameter(0)
+  ROOT %w_in = f32[16] while(%y), condition=%inner_cond, body=%inner_body, {inner_trip}
+}}
+
+%outer_cond (yc: f32[16]) -> pred[] {{
+  ROOT %t1 = pred[] constant(false)
+}}
+
+ENTRY %main (p0: f32[16]) -> f32[16] {{
+  %p0 = f32[16] parameter(0)
+  ROOT %w_out = f32[16] while(%p0), condition=%outer_cond, body=%outer_body, {outer_trip}
+}}
+"""
+
+
+DOT_IN_LOOP_MODULE = """\
+HloModule scanned_dot
+
+%body (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,4] broadcast(%a), dimensions={}
+  ROOT %d = f32[8,4] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%cond (c: f32[8,16]) -> pred[] {
+  ROOT %t = pred[] constant(false)
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16] parameter(0)
+  ROOT %w = f32[8,16] while(%p0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# dtype byte table: fp8 scale codes and packed nibbles must count
+# ---------------------------------------------------------------------------
+
+
+def test_fp8_and_packed_nibble_bytes_counted():
+    acc = analyze_hlo(FP8_MODULE)
+    # convert -> f8e4m3fn[128,4] = 512 B at 1 B/elem; copy -> s4[64,64]
+    # = 2048 B at 0.5 B/elem. Before the table carried these dtypes the
+    # deployed NVFP4 path's HBM bytes silently read as zero.
+    assert acc["bytes"] == 128 * 4 * 1 + 64 * 64 * 0.5
+
+
+def test_f8e5m2_scale_codes_counted():
+    hlo = FP8_MODULE.replace("f8e4m3fn", "f8e5m2")
+    assert analyze_hlo(hlo)["bytes"] == 128 * 4 * 1 + 64 * 64 * 0.5
+
+
+# ---------------------------------------------------------------------------
+# dot FLOPs (including on ROOT lines) and trip-count accounting
+# ---------------------------------------------------------------------------
+
+
+def test_root_dot_flops_from_contracting_dims():
+    acc = analyze_hlo(DOT_MODULE)
+    # 2 * out_elems * K = 2 * (8*4) * 16; the ROOT prefix must not hide
+    # the instruction from the def regex
+    assert acc["flops"] == 2 * 8 * 4 * 16
+
+
+def test_nested_while_trip_counts_multiply():
+    acc = analyze_hlo(_while_module())
+    # the 64-byte inner copy runs inner(3) * outer(4) = 12 times
+    assert acc["bytes"] == 16 * 4 * 3 * 4
+
+
+def test_unknown_trip_count_is_conservative():
+    # strip the backend_config: an unknown trip count multiplies by 1
+    hlo = _while_module(inner_trip="metadata={}", outer_trip="metadata={}")
+    assert analyze_hlo(hlo)["bytes"] == 16 * 4
+
+
+def test_dot_inside_while_scales_flops():
+    acc = analyze_hlo(DOT_IN_LOOP_MODULE)
+    assert acc["flops"] == 2 * 8 * 4 * 16 * 4      # base dot x trip 4
+
+
+# ---------------------------------------------------------------------------
+# collective parser: fp8 wire bytes (ring model)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_collectives_counts_fp8_wire_bytes():
+    hlo = ("  %ag = f8e4m3fn[1024] all-gather(%x), dimensions={0}, "
+           "replica_groups={{0,1,2,3}}\n")
+    coll = parse_collectives(hlo)
+    assert coll["count"] == 1
+    # ring all-gather: (n-1)/n * result bytes, 1 B/elem at fp8
+    assert coll["all-gather"] == (4 - 1) / 4 * 1024
+
+
+def test_parse_collectives_iota_replica_groups():
+    hlo = "  %ar = f32[256] all-reduce(%x), replica_groups=[2,4], to_apply=%add\n"
+    coll = parse_collectives(hlo)
+    assert coll["all-reduce"] == 2.0 * (4 - 1) / 4 * 256 * 4

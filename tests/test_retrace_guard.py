@@ -1,0 +1,111 @@
+"""Rule R5 (retrace guard): a full mixed serving run — admissions,
+chunked prefill, preemption + resume, a mid-run abort, and every
+active-request count — must compile each jitted entry point exactly
+once. The negative control flips the legacy ``decode_buckets`` knob,
+whose pow2 launch widths are a *declared* multi-bucket shape family:
+the guard must flag it at the default allowance and accept it once the
+buckets are declared.
+
+Workload constraints that keep the positive run single-trace:
+  * every prompt is longer than ``prefill_chunk`` so all prefill work
+    (including preemption resumes) goes through the chunked path — the
+    final chunk pads to the chunk width, so ``prefill`` always launches
+    at one shape (a short prompt would instead take the one-shot
+    pow2-bucketed path at a different width);
+  * prompt + generation stays well under ``max_len`` so the final-chunk
+    pad is never truncated.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.retrace import _fingerprint
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.models import init_params
+from repro.serving import (GenerationRequest, PagedServingEngine,
+                           SamplingParams)
+from repro.serving.request import FinishReason
+
+import jax
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=2)
+    return cfg, init_params(cfg, KEY), QuantConfig(method="none")
+
+
+def _req(rng, vocab, plen, new):
+    return GenerationRequest(
+        prompt=rng.integers(0, vocab, plen).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=new))
+
+
+def test_fingerprint_keys_on_structure_shape_dtype():
+    f = _fingerprint
+    a = jnp.zeros((2, 3))
+    assert f((a,), {}) == f((jnp.ones((2, 3)),), {})    # values don't key
+    assert f((a,), {}) != f((jnp.zeros((3, 2)),), {})   # shape does
+    assert f((a,), {}) != f((jnp.zeros((2, 3), jnp.int32),), {})  # dtype does
+    assert f((a,), {}) != f(([a],), {})                 # structure does
+
+
+def test_single_trace_across_mixed_serving_run(tiny, trace_guard):
+    cfg, params, quant = tiny
+    eng = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                             max_len=48, num_pages=3, block_size=16,
+                             prefill_chunk=4)
+    core = eng.make_core(trace_guard=trace_guard)
+    rng = np.random.default_rng(9)
+    rids = [core.add_request(_req(rng, cfg.vocab_size,
+                                  plen=int(rng.integers(5, 13)),
+                                  new=int(rng.integers(3, 9))))
+            for _ in range(4)]
+    for _ in range(6):
+        core.step()
+    # abort one in-flight request between ticks, then admit a latecomer
+    # so the run also covers post-abort active-count transitions
+    victim = next(r for r in rids if not core.states[r].done)
+    assert core.abort_request(victim)
+    core.add_request(_req(rng, cfg.vocab_size, plen=7, new=4))
+    while core.has_unfinished():
+        core.step()
+    assert core.states[victim].finish_reason is FinishReason.ABORTED
+    # the tiny pool forced preemption + resume re-prefill mid-run
+    assert core.stats.preemptions > 0
+
+    counts = trace_guard.trace_counts()
+    # every entry point the run exercised saw exactly one signature
+    assert counts == {"prefill": 1, "prefill_chunk": 1,
+                      "decode_paged": 1, "sample": 1}, counts
+    # cross-check against the jit caches where the runtime exposes them
+    for name, n in trace_guard.compile_counts().items():
+        if n is not None:
+            assert n <= 1, (name, n)
+    assert not [f for f in trace_guard.findings()
+                if f.severity == "error"]
+
+
+def test_decode_buckets_retrace_flagged_and_declarable(tiny, trace_guard):
+    cfg, params, quant = tiny
+    eng = PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                             max_len=48, decode_buckets=True)
+    core = eng.make_core(trace_guard=trace_guard)
+    rng = np.random.default_rng(3)
+    # gen lengths 2 vs 10: the active count drops from 2 to 1 mid-run,
+    # so bucketed decode launches at two pow2 widths
+    core.add_request(_req(rng, cfg.vocab_size, plen=6, new=2))
+    core.add_request(_req(rng, cfg.vocab_size, plen=6, new=10))
+    while core.has_unfinished():
+        core.step()
+    assert trace_guard.trace_counts()["decode_paged"] >= 2
+    errs = [f for f in trace_guard.findings() if f.severity == "error"]
+    assert errs and all(f.rule == "R5" and f.entry == "decode_paged"
+                        for f in errs)
+    # declaring the pow2 buckets clears the finding — the knob is a
+    # shape family, not a leak
+    assert not [f for f in trace_guard.findings({"decode_paged": 2})
+                if f.severity == "error"]
