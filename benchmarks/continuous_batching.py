@@ -78,7 +78,9 @@ def run(n_requests: int = 12, slots: int = 4, seed: int = 0):
              f"steps={s.decode_steps} waste={s.padding_waste:.3f} "
              f"decode_tok_per_step={s.tokens_per_step:.3f} "
              f"prefill_sampled={s.prefill_sampled_tokens} "
-             f"sim_tok_per_s={s.tokens_per_step / step_s:.1f}")
+             f"sim_tok_per_s={s.tokens_per_step / step_s:.1f} "
+             f"ttft_p50/p95={s.ttft_p50:.0f}/{s.ttft_p95:.0f} "
+             f"latency_p50/p95={s.latency_p50:.0f}/{s.latency_p95:.0f}")
         results[name] = (s, served)
 
     st, ct = results["static"][0], results["continuous"][0]
@@ -121,11 +123,12 @@ def run_chunked_prefill(cfg, qparams, quant, plans, slots: int = 4,
         while core.has_unfinished():
             core.step()
         states = [core.states[rid] for rid in rids]
-        ttft = [st.ttft_steps for st in states]
-        emit(f"serve_prefill_{name}", core.stats.wall_seconds * 1e6,
-             f"stall_tokens={core.stats.max_prefill_tokens_per_step} "
-             f"ttft_p50={int(np.median(ttft))} ttft_max={max(ttft)} "
-             f"decode_steps={core.stats.decode_steps}")
+        s = core.stats
+        emit(f"serve_prefill_{name}", s.wall_seconds * 1e6,
+             f"stall_tokens={s.max_prefill_tokens_per_step} "
+             f"ttft_p50={s.ttft_p50:.0f} ttft_p95={s.ttft_p95:.0f} "
+             f"ttft_max={max(st.ttft_steps for st in states)} "
+             f"decode_steps={s.decode_steps}")
         results[name] = (core.stats, [st.out_tokens for st in states])
 
     one, chk = results["oneshot"][0], results["chunked"][0]

@@ -1,0 +1,160 @@
+"""Shared CLI plumbing for the serving launchers.
+
+``repro.launch.serve`` (batch/stream workload runner) and
+``repro.launch.server`` (the OpenAI-compatible HTTP front end) expose
+the same model/engine/robustness surface; this module is the single
+definition of those flags and of the argparse-namespace -> engine
+construction, so the two launchers cannot drift apart flag-by-flag.
+
+``calibrate_and_quantize`` lives here too (it is the shared offline
+phase); ``repro.launch.serve`` re-exports it for existing importers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.data import make_calibration_set
+from repro.models import capture_stats, init_params
+from repro.quant import make_plan_bundle, quantize_weights_for_serving
+from repro.serving import (PagedServingEngine, ServingEngine,
+                           StaticBatchEngine)
+
+
+def calibrate_and_quantize(params, cfg, method: str = "arc",
+                           fmt: str = "nvfp4", n_calib: int = 8,
+                           seq: int = 128, corpus: str = "wikitext2"):
+    """Offline phase: calibration pass -> plans -> quantized weights."""
+    quant = QuantConfig(method=method, fmt=fmt)
+    calib = make_calibration_set(cfg.vocab_size, n_calib, seq, corpus=corpus)
+    stats = None
+    import jax.numpy as jnp
+    for toks in calib.batches:
+        s = capture_stats(params, cfg, tokens=jnp.asarray(toks))
+        if stats is None:
+            stats = {k: np.array(v) for k, v in s.items()}
+        else:
+            for k, v in s.items():
+                np.maximum(stats[k], np.asarray(v), out=stats[k])
+    plans = make_plan_bundle(stats, cfg, quant, params)
+    if method in ("arc", "rtn"):
+        qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                               pack=(fmt in ("nvfp4", "mxfp4")))
+    else:
+        qparams = params
+    return qparams, quant, plans
+
+
+# -- shared flag groups ------------------------------------------------------
+
+
+def add_model_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", default="arc",
+                    choices=["arc", "rtn", "smooth", "quarot", "none"])
+    ap.add_argument("--fmt", default="nvfp4")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="deployed-linear kernel backend (pallas = fused "
+                         "quant + packed NVFP4 GEMM)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run Pallas kernels in interpret mode (CPU)")
+
+
+def add_engine_args(ap: argparse.ArgumentParser,
+                    allow_static: bool = True) -> None:
+    ap.add_argument("--batch", type=int, default=4,
+                    help="cache slots (continuous) / batch size (static)")
+    if allow_static:
+        ap.add_argument("--static", action="store_true",
+                        help="gang-scheduled fixed-batch baseline engine")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache pool (block tables, on-demand "
+                         "page allocation, preemption when pages run dry)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size for --paged (default: slot "
+                         "parity; smaller shares memory and may preempt)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="positions per KV page for --paged")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed paged pool (implies --paged): "
+                         "requests sharing a prompt prefix reuse its pages "
+                         "ref-counted; copy-on-write on shared-tail writes")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: feed prompts longer than N in "
+                         "N-token slices across ticks (0 = one-shot)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="shared per-tick prefill token budget across all "
+                         "admissions (vLLM-style max_num_batched_tokens; "
+                         "0 = unbudgeted)")
+
+
+def add_robustness_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request deadline in engine ticks: requests "
+                         "alive past it finish with reason 'deadline' "
+                         "(0 = none)")
+    ap.add_argument("--queue-timeout-steps", type=int, default=0,
+                    help="max ticks a request may wait for first admission "
+                         "before finishing with 'queue_timeout' (0 = none)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue: submissions beyond it "
+                         "are rejected with QueueFullError (0 = unbounded; "
+                         "the HTTP server maps rejections to 429)")
+    ap.add_argument("--no-nan-guard", action="store_true",
+                    help="disable the per-row non-finite-logit guard "
+                         "(the isolation A/B baseline)")
+
+
+# -- namespace -> objects ----------------------------------------------------
+
+
+def build_model(args):
+    """Resolve the config and run the offline phase; returns
+    ``(cfg, qparams, quant, plans)`` and prints the phase timing."""
+    import jax
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    t0 = time.time()
+    qparams, quant, plans = calibrate_and_quantize(params, cfg, args.method,
+                                                   fmt=args.fmt)
+    print(f"calibration+quantization: {time.time() - t0:.1f}s "
+          f"(paper Table 4 analogue); method={args.method} fmt={args.fmt}")
+    return cfg, qparams, quant, plans
+
+
+def build_engine(args, qparams, cfg, quant, plans, max_len: int):
+    """Construct the engine the flags describe. Raises ``ValueError`` on
+    contradictory selections (callers surface it via ``ap.error``)."""
+    if args.prefix_cache:
+        args.paged = True
+    static = getattr(args, "static", False)
+    if static and args.paged:
+        raise ValueError("--static and --paged are mutually exclusive")
+    kw = {}
+    if args.paged:
+        cls = PagedServingEngine
+        kw = {"num_pages": args.num_pages, "block_size": args.block_size,
+              "prefix_cache": args.prefix_cache}
+    else:
+        cls = StaticBatchEngine if static else ServingEngine
+    return cls(qparams, cfg, quant, plans, batch_size=args.batch,
+               max_len=max_len, seed=args.seed,
+               backend=args.backend, interpret=args.interpret,
+               prefill_chunk=args.prefill_chunk or None,
+               prefill_budget=args.prefill_budget or None,
+               nan_guard=not args.no_nan_guard,
+               max_queue=args.max_queue or None, **kw)
+
+
+def engine_mode(args) -> str:
+    return ("paged" if args.paged
+            else "static" if getattr(args, "static", False) else "continuous")

@@ -18,127 +18,58 @@ CPU. ``--prefill-chunk N`` feeds long prompts in N-token slices across
 ticks (chunked prefill — bounds the admission stall a long prompt
 imposes on in-flight decodes) and ``--stream`` prints tokens per tick as
 the step-driven core emits them instead of waiting for completion.
+
+``--http`` skips the synthetic workload and serves the engine over the
+OpenAI-compatible HTTP front end instead (same as
+``python -m repro.launch.server``, which exposes the full server flag
+surface). Model/engine/robustness flags are shared with that launcher
+via ``repro.launch.cli``.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
 import numpy as np
 
-from repro.configs import ARCHS
-from repro.configs.base import QuantConfig
-from repro.data import SyntheticLM, make_calibration_set
-from repro.models import capture_stats, init_params
-from repro.quant import make_plan_bundle, quantize_weights_for_serving
-from repro.serving import (PagedServingEngine, QueueFullError, Request,
-                           ServingEngine, StaticBatchEngine)
-
-
-def calibrate_and_quantize(params, cfg, method: str = "arc",
-                           fmt: str = "nvfp4", n_calib: int = 8,
-                           seq: int = 128, corpus: str = "wikitext2"):
-    """Offline phase: calibration pass -> plans -> quantized weights."""
-    quant = QuantConfig(method=method, fmt=fmt)
-    calib = make_calibration_set(cfg.vocab_size, n_calib, seq, corpus=corpus)
-    stats = None
-    import jax.numpy as jnp
-    for toks in calib.batches:
-        s = capture_stats(params, cfg, tokens=jnp.asarray(toks))
-        if stats is None:
-            stats = {k: np.array(v) for k, v in s.items()}
-        else:
-            for k, v in s.items():
-                np.maximum(stats[k], np.asarray(v), out=stats[k])
-    plans = make_plan_bundle(stats, cfg, quant, params)
-    if method in ("arc", "rtn"):
-        qparams = quantize_weights_for_serving(params, cfg, quant, plans,
-                                               pack=(fmt in ("nvfp4", "mxfp4")))
-    else:
-        qparams = params
-    return qparams, quant, plans
+# re-exported: examples/serve_quantized.py (and any external caller)
+# imports the offline phase from here
+from repro.launch.cli import (add_engine_args, add_model_args,  # noqa: F401
+                              add_robustness_args, build_engine, build_model,
+                              calibrate_and_quantize, engine_mode)
+from repro.serving import QueueFullError, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--method", default="arc",
-                    choices=["arc", "rtn", "smooth", "quarot", "none"])
-    ap.add_argument("--fmt", default="nvfp4")
+    add_model_args(ap)
+    add_engine_args(ap)
+    add_robustness_args(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4,
-                    help="cache slots (continuous) / batch size (static)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--static", action="store_true",
-                    help="gang-scheduled fixed-batch baseline engine")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged KV cache pool (block tables, on-demand "
-                         "page allocation, preemption when pages run dry)")
-    ap.add_argument("--num-pages", type=int, default=None,
-                    help="page-pool size for --paged (default: slot "
-                         "parity; smaller shares memory and may preempt)")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="positions per KV page for --paged")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="content-addressed paged pool (implies --paged): "
-                         "requests sharing a prompt prefix reuse its pages "
-                         "ref-counted; copy-on-write on shared-tail writes")
-    ap.add_argument("--backend", default="reference",
-                    choices=["reference", "pallas"],
-                    help="deployed-linear kernel backend (pallas = fused "
-                         "quant + packed NVFP4 GEMM)")
-    ap.add_argument("--interpret", action="store_true",
-                    help="run Pallas kernels in interpret mode (CPU)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples per request")
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="vary prompt/generation lengths across requests")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill: feed prompts longer than N in "
-                         "N-token slices across ticks (0 = one-shot)")
-    ap.add_argument("--prefill-budget", type=int, default=0,
-                    help="shared per-tick prefill token budget across all "
-                         "admissions (vLLM-style max_num_batched_tokens; "
-                         "0 = unbudgeted)")
     ap.add_argument("--stream", action="store_true",
                     help="print per-request token deltas as each tick "
                          "emits them (the streaming API)")
-    ap.add_argument("--deadline-steps", type=int, default=0,
-                    help="per-request deadline in engine ticks: requests "
-                         "alive past it finish with reason 'deadline' "
-                         "(0 = none)")
-    ap.add_argument("--queue-timeout-steps", type=int, default=0,
-                    help="max ticks a request may wait for first admission "
-                         "before finishing with 'queue_timeout' (0 = none)")
-    ap.add_argument("--max-queue", type=int, default=0,
-                    help="bound the admission queue: submissions beyond it "
-                         "are rejected with QueueFullError (0 = unbounded)")
-    ap.add_argument("--no-nan-guard", action="store_true",
-                    help="disable the per-row non-finite-logit guard "
-                         "(the isolation A/B baseline)")
     ap.add_argument("--analyze", action="store_true",
                     help="after the engine is built, lint its compiled "
                          "entry points with the repro.analysis rule suite "
                          "and print the per-entry report before serving")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over the OpenAI-compatible HTTP front end "
+                         "instead of running the synthetic workload")
+    ap.add_argument("--host", default="127.0.0.1", help="bind host (--http)")
+    ap.add_argument("--port", type=int, default=8000, help="bind port (--http)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache positions per request with --http "
+                         "(default 128; workload runs derive it)")
     args = ap.parse_args()
     if args.new_tokens < 1:
         ap.error("--new-tokens must be >= 1 (prefill samples the first token)")
 
-    cfg = ARCHS[args.arch]
-    if args.smoke:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-
-    t0 = time.time()
-    qparams, quant, plans = calibrate_and_quantize(params, cfg, args.method,
-                                                   fmt=args.fmt)
-    t_quant = time.time() - t0
-    print(f"calibration+quantization: {t_quant:.1f}s "
-          f"(paper Table 4 analogue); method={args.method} fmt={args.fmt}")
+    cfg, qparams, quant, plans = build_model(args)
 
     if args.prefix_cache:
         args.paged = True
@@ -160,27 +91,27 @@ def main():
                             deadline_steps=args.deadline_steps or None,
                             queue_timeout_steps=(args.queue_timeout_steps
                                                  or None)))
-    if args.static and args.paged:
-        ap.error("--static and --paged are mutually exclusive")
-    kw = {}
-    if args.paged:
-        cls = PagedServingEngine
-        kw = {"num_pages": args.num_pages, "block_size": args.block_size,
-              "prefix_cache": args.prefix_cache}
-    else:
-        cls = StaticBatchEngine if args.static else ServingEngine
-    engine = cls(qparams, cfg, quant, plans, batch_size=args.batch,
-                 max_len=len(sys_prompt) + 16 + args.new_tokens + 1,
-                 seed=args.seed,
-                 backend=args.backend, interpret=args.interpret,
-                 prefill_chunk=args.prefill_chunk or None,
-                 prefill_budget=args.prefill_budget or None,
-                 nan_guard=not args.no_nan_guard,
-                 max_queue=args.max_queue or None, **kw)
+    max_len = (args.max_len or 128) if args.http \
+        else len(sys_prompt) + 16 + args.new_tokens + 1
+    try:
+        engine = build_engine(args, qparams, cfg, quant, plans,
+                              max_len=max_len)
+    except ValueError as e:
+        ap.error(str(e))
     if args.analyze:
         from repro.launch.analyze import report_engine
         report_engine(engine, f"{args.arch} ({'paged' if args.paged else 'slot'}"
                               f" pool, backend={args.backend})")
+    if args.http:
+        from repro.launch.server import run_server
+        from repro.server import ServerDefaults
+        run_server(engine, host=args.host, port=args.port,
+                   model_id=args.arch,
+                   defaults=ServerDefaults(
+                       max_new_tokens=args.new_tokens,
+                       deadline_steps=args.deadline_steps or None,
+                       queue_timeout_steps=args.queue_timeout_steps or None))
+        return
     try:
         if args.stream:
             for out in engine.stream(reqs):
@@ -194,9 +125,7 @@ def main():
     s = engine.last_stats
     print(f"backend={args.backend}"
           f"{' (interpret)' if args.interpret else ''}")
-    mode = ("paged" if args.paged
-            else "static" if args.static else "continuous")
-    print(f"{mode} engine: "
+    print(f"{engine_mode(args)} engine: "
           f"served {len(reqs)} requests, {s.generated_tokens} tokens in "
           f"{s.wall_seconds:.1f}s ({s.summary()['wall_tokens_per_s']:.1f} "
           f"tok/s on CPU emulation)")

@@ -1,0 +1,104 @@
+"""OpenAI-compatible HTTP server launcher.
+
+    PYTHONPATH=src python -m repro.launch.server --smoke --method arc \
+        --paged --prefix-cache --port 8000
+
+Calibrates and quantizes the model (same offline phase as
+``repro.launch.serve``), builds the serving engine the shared flags
+describe, and serves it over the asyncio front end:
+
+    curl http://127.0.0.1:8000/v1/chat/completions -d '{
+        "messages": [{"role": "user", "content": "hello"}],
+        "max_tokens": 16, "stream": true}'
+
+Endpoints: ``/v1/completions``, ``/v1/chat/completions`` (JSON or SSE),
+``/v1/models``, ``/health``, ``/metrics`` (Prometheus text). The
+robustness flags become the serving policy: ``--max-queue`` turns into
+HTTP 429 backpressure, ``--deadline-steps``/``--queue-timeout-steps``
+into default per-request watchdogs (clients may override per request).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import logging
+import signal
+
+from repro.launch.cli import (add_engine_args, add_model_args,
+                              add_robustness_args, build_engine, build_model,
+                              engine_mode)
+from repro.server import ServerApp, ServerDefaults
+
+
+def run_server(engine, host: str = "127.0.0.1", port: int = 8000,
+               model_id: str = "repro",
+               defaults: ServerDefaults = None) -> None:
+    """Serve one engine until SIGINT/SIGTERM (blocking)."""
+    core = engine.make_core()
+    app = ServerApp(core, model_id=model_id, defaults=defaults)
+
+    async def _main():
+        await app.start(host, port)
+        print(f"listening on http://{host}:{app.port}  "
+              f"(Ctrl-C to stop)")
+        # graceful: signals set an event instead of raising mid-handler,
+        # so in-flight connections unwind through app.stop()'s abort path
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except NotImplementedError:     # non-Unix event loops
+                pass
+        await stop.wait()
+        print("shutting down (in-flight requests aborted)")
+        await app.stop()
+
+    try:
+        asyncio.run(_main())
+    except KeyboardInterrupt:               # signal handler unavailable
+        print("shutting down (in-flight requests aborted)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    add_model_args(ap)
+    # no --static: a gang-scheduled fixed batch cannot admit mid-flight,
+    # which is the whole point of an online server
+    add_engine_args(ap, allow_static=False)
+    add_robustness_args(ap)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="0 picks an ephemeral port")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="cache positions per request (prompt + generation)")
+    ap.add_argument("--default-max-tokens", type=int, default=64,
+                    help="max_tokens applied when a request omits it")
+    ap.add_argument("--model-id", default=None,
+                    help="model id reported by /v1/models (default: --arch)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="per-request INFO logging")
+    args = ap.parse_args()
+
+    logging.basicConfig(
+        level=logging.INFO if args.verbose else logging.WARNING,
+        format="%(asctime)s %(name)s %(levelname)s %(message)s")
+
+    cfg, qparams, quant, plans = build_model(args)
+    try:
+        engine = build_engine(args, qparams, cfg, quant, plans,
+                              max_len=args.max_len)
+    except ValueError as e:
+        ap.error(str(e))
+    defaults = ServerDefaults(
+        max_new_tokens=args.default_max_tokens,
+        deadline_steps=args.deadline_steps or None,
+        queue_timeout_steps=args.queue_timeout_steps or None)
+    print(f"{engine_mode(args)} engine, batch={args.batch}, "
+          f"max_len={args.max_len}, backend={args.backend}")
+    run_server(engine, host=args.host, port=args.port,
+               model_id=args.model_id or args.arch, defaults=defaults)
+
+
+if __name__ == "__main__":
+    main()

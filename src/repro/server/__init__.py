@@ -1,0 +1,22 @@
+"""Async OpenAI-compatible serving front end.
+
+Stdlib-only (asyncio + json): :class:`ServerApp` binds an HTTP listener
+over one :class:`EnginePump`, which owns an ``EngineCore`` and bridges
+the event loop to the blocking step thread. See ``repro.server.http``
+for the endpoint and error-mapping contract.
+"""
+from repro.server.chat import ByteTokenizer, render_chat
+from repro.server.http import ServerApp
+from repro.server.metrics import render_metrics
+from repro.server.protocol import (ProtocolError, ServerDefaults,
+                                   completion_json, chunk_json, error_json,
+                                   models_json, parse_chat, parse_completion)
+from repro.server.pump import EnginePump
+from repro.server.sse import DONE_PAYLOAD, SSE_DONE, SSEParser, sse_event
+
+__all__ = [
+    "ByteTokenizer", "render_chat", "ServerApp", "render_metrics",
+    "ProtocolError", "ServerDefaults", "completion_json", "chunk_json",
+    "error_json", "models_json", "parse_chat", "parse_completion",
+    "EnginePump", "DONE_PAYLOAD", "SSE_DONE", "SSEParser", "sse_event",
+]

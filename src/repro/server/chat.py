@@ -1,0 +1,87 @@
+"""Chat templating + the byte-level serving tokenizer.
+
+The engine speaks int32 token ids; the OpenAI wire format speaks text.
+The repo's models are synthetic proxies with no trained vocabulary, so
+the server ships :class:`ByteTokenizer` — a deterministic, stateless
+byte-level codec: UTF-8 bytes map one-to-one onto token ids (reduced
+configs have vocab >= 512 >= 256, so every byte is a valid id), and each
+generated id renders independently of its neighbors. That per-token
+independence is what makes SSE delta framing exact: concatenating the
+streamed text deltas is *bit-identical* to detokenizing the full token
+sequence at once, which the server tests assert against
+``EngineCore.stream()``.
+
+Clients that want token-exact control (parity tests, replay) can bypass
+text entirely: ``/v1/completions`` accepts ``prompt`` as a raw token-id
+list, and every response carries the generated ``token_ids``.
+
+:func:`render_chat` is the chat template — a fixed ChatML-style
+flattening of ``messages`` into one prompt string, so identical
+conversations always produce identical token sequences (prefix-cache
+hits across requests sharing a system prompt come for free).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+CHAT_ROLES = ("system", "user", "assistant")
+
+
+class ByteTokenizer:
+    """Reversible-enough byte codec between text and engine token ids.
+
+    ``encode`` maps UTF-8 bytes to ids (mod vocab, for pathological
+    sub-256 vocabs); ``decode_token`` renders printable ASCII ids as
+    their character and everything else as the explicit ``<id>`` escape,
+    so decoding is a pure per-token function (see module docstring).
+    """
+
+    def __init__(self, vocab_size: int):
+        if vocab_size < 2:
+            raise ValueError("vocab_size must be >= 2")
+        self.vocab_size = vocab_size
+
+    def encode(self, text: str) -> np.ndarray:
+        data = text.encode("utf-8")
+        toks = np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+        if self.vocab_size < 256:
+            toks = toks % self.vocab_size
+        return toks
+
+    def decode_token(self, token: int) -> str:
+        if 32 <= token < 127:
+            return chr(token)
+        if token == 10:
+            return "\n"
+        return f"<{int(token)}>"
+
+    def decode(self, tokens: Sequence[int]) -> str:
+        return "".join(self.decode_token(int(t)) for t in tokens)
+
+
+def render_chat(messages: List[dict]) -> str:
+    """Flatten OpenAI ``messages`` into the serving prompt string.
+
+    ChatML-style framing with a trailing assistant header the model
+    "completes". Raises ``ValueError`` on malformed messages — the
+    protocol layer maps that onto HTTP 400.
+    """
+    if not isinstance(messages, list) or not messages:
+        raise ValueError("messages must be a non-empty list")
+    parts = []
+    for i, m in enumerate(messages):
+        if not isinstance(m, dict):
+            raise ValueError(f"messages[{i}] must be an object")
+        role = m.get("role")
+        content = m.get("content")
+        if role not in CHAT_ROLES:
+            raise ValueError(
+                f"messages[{i}].role must be one of {CHAT_ROLES}, "
+                f"got {role!r}")
+        if not isinstance(content, str):
+            raise ValueError(f"messages[{i}].content must be a string")
+        parts.append(f"<|im_start|>{role}\n{content}<|im_end|>\n")
+    parts.append("<|im_start|>assistant\n")
+    return "".join(parts)

@@ -1,0 +1,305 @@
+"""Stdlib-only asyncio HTTP/1.1 front end over one :class:`EnginePump`.
+
+Deliberately minimal: ``asyncio.start_server``, hand-parsed request
+head, ``Connection: close`` on every response (streaming bodies are
+EOF-delimited, so no chunked-encoding machinery). What it is *not*
+minimal about is the serving contract:
+
+  * ``POST /v1/completions`` and ``POST /v1/chat/completions`` — OpenAI
+    wire shapes, JSON or ``stream=true`` SSE (``data: {...}`` frames,
+    ``data: [DONE]`` terminator).
+  * Client disconnect mid-stream -> ``abort_request``: the handler races
+    each delta against a socket-EOF watch, and a vanished client frees
+    its slot and pages within one tick instead of generating to a dead
+    socket.
+  * Backpressure is status-coded: ``QueueFullError`` -> 429 with
+    ``Retry-After``, ``CapacityError``/malformed bodies -> 400, watchdog
+    expiries -> 200 with ``finish_reason: "timeout"``.
+  * ``GET /metrics`` (Prometheus text), ``GET /v1/models``,
+    ``GET /health``.
+
+Every request is logged under its engine request id (``cmpl-{rid}``),
+which is also the response ``id`` — one join key across client logs,
+server logs, and engine traces.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import logging
+import time
+from typing import Optional, Tuple
+
+from repro.serving.core import EngineCore
+from repro.serving.request import CapacityError, QueueFullError
+from repro.server.chat import ByteTokenizer
+from repro.server.metrics import render_metrics
+from repro.server.protocol import (ProtocolError, ServerDefaults, chunk_json,
+                                   completion_json, error_json, models_json,
+                                   parse_chat, parse_completion)
+from repro.server.pump import EnginePump
+from repro.server.sse import SSE_DONE, sse_event
+
+log = logging.getLogger("repro.server")
+
+MAX_BODY_BYTES = 1 << 20            # request bodies past 1 MiB -> 413
+MAX_HEAD_BYTES = 16 << 10
+RETRY_AFTER_S = 1                   # hint on 429; one tick is plenty
+
+
+def _http_response(status: int, body: bytes,
+                   content_type: str = "application/json",
+                   extra_headers: Tuple[Tuple[str, str], ...] = ()) -> bytes:
+    reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+              405: "Method Not Allowed", 413: "Payload Too Large",
+              429: "Too Many Requests", 500: "Internal Server Error"}
+    head = [f"HTTP/1.1 {status} {reason.get(status, 'Error')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
+    head += [f"{k}: {v}" for k, v in extra_headers]
+    return ("\r\n".join(head) + "\r\n\r\n").encode("ascii") + body
+
+
+def _json_response(status: int, obj: dict, **kw) -> bytes:
+    return _http_response(status, json.dumps(obj).encode("utf-8"), **kw)
+
+
+class ServerApp:
+    """The OpenAI-compatible server: routes HTTP onto one engine core."""
+
+    def __init__(self, core: EngineCore, model_id: str = "repro",
+                 defaults: Optional[ServerDefaults] = None):
+        self.core = core
+        self.model_id = model_id
+        self.defaults = defaults or ServerDefaults()
+        self.tokenizer = ByteTokenizer(core.cfg.vocab_size)
+        self.pump = EnginePump(core)
+        self._server: Optional[asyncio.base_events.Server] = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self, host: str = "127.0.0.1", port: int = 0) -> None:
+        """Bind and start serving (``port=0`` -> ephemeral, see
+        :attr:`port`). The pump starts with the listener so queued
+        admissions begin ticking immediately."""
+        self.pump.start()
+        self._server = await asyncio.start_server(self._handle, host, port)
+        log.info("serving %s on %s:%d", self.model_id, host, self.port)
+
+    @property
+    def port(self) -> int:
+        assert self._server is not None
+        return self._server.sockets[0].getsockname()[1]
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def stop(self) -> None:
+        """Stop accepting, then drain: the pump aborts anything still in
+        flight so shutdown never leaks pages."""
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        await self.pump.stop()
+
+    # -- connection handling ------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            parsed = await self._read_request(reader)
+            if isinstance(parsed, bytes):       # pre-baked error response
+                writer.write(parsed)
+            else:
+                method, path, body = parsed
+                await self._route(method, path, body, reader, writer)
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError, asyncio.TimeoutError):
+            pass                                # client went away; routes
+            # that own a request already aborted it
+        except Exception:                       # noqa: BLE001
+            log.exception("unhandled error in connection handler")
+            try:
+                writer.write(_json_response(
+                    500, error_json("internal server error", "server_error")))
+                await writer.drain()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _read_request(self, reader: asyncio.StreamReader):
+        """Parse one request; returns ``(method, path, body)`` or a
+        ready-to-send error response."""
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+        except asyncio.LimitOverrunError:
+            return _json_response(413, error_json("headers too large"))
+        except asyncio.IncompleteReadError:
+            raise ConnectionResetError from None
+        if len(head) > MAX_HEAD_BYTES:
+            return _json_response(413, error_json("headers too large"))
+        lines = head.decode("latin-1").split("\r\n")
+        parts = lines[0].split(" ")
+        if len(parts) != 3:
+            return _json_response(400, error_json("malformed request line"))
+        method, path = parts[0].upper(), parts[1].split("?")[0]
+        length = 0
+        for line in lines[1:]:
+            if line.lower().startswith("content-length:"):
+                try:
+                    length = int(line.split(":", 1)[1].strip())
+                except ValueError:
+                    return _json_response(
+                        400, error_json("bad Content-Length"))
+        if length > MAX_BODY_BYTES:
+            return _json_response(413, error_json("request body too large"))
+        body = await reader.readexactly(length) if length else b""
+        return method, path, body
+
+    async def _route(self, method: str, path: str, body: bytes,
+                     reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter) -> None:
+        if path == "/health":
+            writer.write(self._guard_method(method, "GET") or _json_response(
+                200, {"status": "ok",
+                      "unfinished": self.core.has_unfinished()}))
+        elif path == "/v1/models":
+            writer.write(self._guard_method(method, "GET") or _json_response(
+                200, models_json(self.model_id, int(time.time()))))
+        elif path == "/metrics":
+            err = self._guard_method(method, "GET")
+            writer.write(err or _http_response(
+                200, render_metrics(self.core, self.model_id).encode("utf-8"),
+                content_type="text/plain; version=0.0.4; charset=utf-8"))
+        elif path in ("/v1/completions", "/v1/chat/completions"):
+            err = self._guard_method(method, "POST")
+            if err:
+                writer.write(err)
+            else:
+                await self._completions(path.startswith("/v1/chat"), body,
+                                        reader, writer)
+        else:
+            writer.write(_json_response(
+                404, error_json(f"no route for {path}", code="not_found")))
+
+    @staticmethod
+    def _guard_method(method: str, want: str) -> Optional[bytes]:
+        if method == want:
+            return None
+        return _json_response(
+            405, error_json(f"method {method} not allowed"),
+            extra_headers=(("Allow", want),))
+
+    # -- the generation endpoints -------------------------------------------
+
+    async def _completions(self, chat: bool, body: bytes,
+                           reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        parse = parse_chat if chat else parse_completion
+        try:
+            obj = json.loads(body.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            writer.write(_json_response(
+                400, error_json("request body is not valid JSON")))
+            return
+        try:
+            request, stream = parse(obj, self.tokenizer, self.defaults)
+            rid, deltas = self.pump.submit(request)
+        except ProtocolError as e:
+            writer.write(_json_response(400, error_json(str(e), code=e.code)))
+            return
+        except QueueFullError as e:
+            log.warning("admission rejected (queue full): %s", e)
+            writer.write(_json_response(
+                429, error_json(str(e), "rate_limit_error", "queue_full"),
+                extra_headers=(("Retry-After", str(RETRY_AFTER_S)),)))
+            return
+        except CapacityError as e:
+            log.warning("admission rejected (capacity): %s", e)
+            writer.write(_json_response(
+                400, error_json(str(e), code="capacity")))
+            return
+        except ValueError as e:                 # e.g. duplicate request_id
+            writer.write(_json_response(400, error_json(str(e))))
+            return
+
+        req_id = f"{'chatcmpl' if chat else 'cmpl'}-{rid}"
+        created = int(time.time())
+        log.info("%s: %d prompt tokens, stream=%s", req_id,
+                 request.prompt_len, stream)
+        if stream:
+            await self._stream_response(req_id, rid, created, chat, deltas,
+                                        reader, writer)
+        else:
+            await self._collect_response(req_id, rid, created, chat,
+                                         request.prompt_len, deltas, writer)
+
+    async def _collect_response(self, req_id: str, rid: int, created: int,
+                                chat: bool, prompt_tokens: int,
+                                deltas: asyncio.Queue,
+                                writer: asyncio.StreamWriter) -> None:
+        tokens, reason, error = [], None, None
+        while True:
+            ro = await deltas.get()
+            if ro is None:
+                break
+            tokens.extend(ro.new_tokens)
+            if ro.finished:
+                reason, error = ro.finish_reason, ro.error
+        text = self.tokenizer.decode(tokens)
+        log.info("%s: finished %s, %d tokens", req_id, reason, len(tokens))
+        writer.write(_json_response(200, completion_json(
+            req_id, self.model_id, created, text, tokens, reason, error,
+            prompt_tokens, chat)))
+
+    async def _stream_response(self, req_id: str, rid: int, created: int,
+                               chat: bool, deltas: asyncio.Queue,
+                               reader: asyncio.StreamReader,
+                               writer: asyncio.StreamWriter) -> None:
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-cache\r\n"
+                     b"Connection: close\r\n\r\n")
+        # Socket-EOF watch: the request body is fully consumed, so this
+        # read only ever completes when the client closes its end.
+        eof = asyncio.ensure_future(reader.read(1))
+        first = True
+        try:
+            while True:
+                getter = asyncio.ensure_future(deltas.get())
+                done, _ = await asyncio.wait(
+                    {getter, eof}, return_when=asyncio.FIRST_COMPLETED)
+                if getter not in done:          # disconnect won the race
+                    getter.cancel()
+                    log.info("%s: client disconnected, aborting", req_id)
+                    self.pump.abort(rid)
+                    return
+                ro = getter.result()
+                if ro is None:
+                    writer.write(SSE_DONE)
+                    await writer.drain()
+                    return
+                text = self.tokenizer.decode(ro.new_tokens)
+                writer.write(sse_event(chunk_json(
+                    req_id, self.model_id, created, text,
+                    list(ro.new_tokens), ro.finish_reason, ro.error, chat,
+                    first)))
+                first = False
+                await writer.drain()
+                if ro.finished:
+                    log.info("%s: finished %s, %d tokens", req_id,
+                             ro.finish_reason, ro.num_generated)
+        except (ConnectionResetError, BrokenPipeError):
+            # write-side detection of the same disconnect
+            log.info("%s: connection reset, aborting", req_id)
+            self.pump.abort(rid)
+        finally:
+            eof.cancel()

@@ -1,0 +1,122 @@
+"""Prometheus text-format rendering of :class:`EngineStats`.
+
+One flat exposition (text format 0.0.4) over the core's live stats
+object — the stats are mutated in place by the step thread, so a scrape
+always sees current values with no snapshotting machinery. Counters
+carry the robustness story (aborted / expired / rejected / nan_isolated
+/ preemption_retries / step_failures); the TTFT and request-latency
+summaries export p50/p95 over the per-finish tick histograms, because a
+mean hides exactly the tail a serving dashboard exists to show.
+
+All durations are in *engine ticks* (one ``step()`` each), matching the
+engine's deterministic clock; ``repro_engine_wall_seconds`` anchors
+ticks to wall time.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.serving.core import EngineCore
+
+
+def _metric(lines: List[str], name: str, help_: str, mtype: str,
+            value, labels: str = "") -> None:
+    lines.append(f"# HELP {name} {help_}")
+    lines.append(f"# TYPE {name} {mtype}")
+    lines.append(f"{name}{labels} {_fmt(value)}")
+
+
+def _fmt(value) -> str:
+    if isinstance(value, bool):
+        return "1" if value else "0"
+    if isinstance(value, int):
+        return str(value)
+    return repr(float(value))
+
+
+def render_metrics(core: EngineCore,
+                   model_id: Optional[str] = None) -> str:
+    """The full ``/metrics`` payload for one engine core."""
+    s = core.stats
+    out: List[str] = []
+    if model_id is not None:
+        out.append("# HELP repro_build_info Serving front end identity.")
+        out.append("# TYPE repro_build_info gauge")
+        out.append('repro_build_info{model="%s"} 1' % model_id)
+
+    # throughput counters
+    _metric(out, "repro_engine_decode_steps_total",
+            "Batched decode ticks executed.", "counter", s.decode_steps)
+    _metric(out, "repro_engine_generated_tokens_total",
+            "Tokens generated (prefill-sampled + decode).", "counter",
+            s.generated_tokens)
+    _metric(out, "repro_engine_prefill_tokens_total",
+            "Prompt tokens actually prefilled (cache hits excluded).",
+            "counter", s.prefill_tokens)
+    _metric(out, "repro_engine_cached_prefix_tokens_total",
+            "Prompt tokens served from the prefix cache.", "counter",
+            s.cached_prefix_tokens)
+
+    # robustness counters (the PR 7 hardening story)
+    _metric(out, "repro_requests_aborted_total",
+            "Requests cancelled by the caller (incl. client disconnects).",
+            "counter", s.aborted)
+    _metric(out, "repro_requests_expired_total",
+            "Requests terminated by a deadline/queue-timeout watchdog.",
+            "counter", s.expired)
+    _metric(out, "repro_requests_rejected_total",
+            "Admissions refused (bounded queue full, capacity fail-fast).",
+            "counter", s.rejected)
+    _metric(out, "repro_requests_nan_isolated_total",
+            "Requests finished ERROR by the non-finite-logit guard.",
+            "counter", s.nan_isolated)
+    _metric(out, "repro_preemption_retries_total",
+            "Re-admissions of previously preempted requests.", "counter",
+            s.preemption_retries)
+    _metric(out, "repro_step_failures_total",
+            "Decode launches that raised (batch finished ERROR).", "counter",
+            s.step_failures)
+    _metric(out, "repro_preemptions_total",
+            "Requests evicted to free cache pages.", "counter",
+            s.preemptions)
+
+    # capacity gauges
+    _metric(out, "repro_pages", "Page-pool size (0 on the slot backend).",
+            "gauge", s.num_pages)
+    _metric(out, "repro_pages_in_use",
+            "Pages currently allocated from the pool.", "gauge",
+            int(getattr(core.pool, "pages_in_use", 0)))
+    _metric(out, "repro_page_utilization",
+            "Mean fraction of the page pool in use across decode steps.",
+            "gauge", s.page_utilization)
+    _metric(out, "repro_peak_pages",
+            "High-water mark of pages in use.", "gauge", s.peak_pages)
+    denom = s.cached_prefix_tokens + s.prefill_tokens
+    _metric(out, "repro_prefix_hit_ratio",
+            "Fraction of prompt tokens served from the prefix cache.",
+            "gauge", (s.cached_prefix_tokens / denom) if denom else 0.0)
+    _metric(out, "repro_max_prefill_tokens_per_step",
+            "Most prefill tokens one tick computed (admission-stall bound).",
+            "gauge", s.max_prefill_tokens_per_step)
+    _metric(out, "repro_engine_wall_seconds",
+            "Wall-clock seconds the engine has spent ticking.", "gauge",
+            s.wall_seconds)
+
+    # latency summaries, in engine ticks
+    _summary(out, "repro_ttft_steps",
+             "Submit-to-first-token, in engine ticks.",
+             s.ttft_hist, s.ttft_p50, s.ttft_p95)
+    _summary(out, "repro_request_latency_steps",
+             "Submit-to-finish, in engine ticks.",
+             s.latency_hist, s.latency_p50, s.latency_p95)
+    return "\n".join(out) + "\n"
+
+
+def _summary(lines: List[str], name: str, help_: str, hist: List[int],
+             p50: float, p95: float) -> None:
+    lines.append(f"# HELP {name} {help_}")
+    lines.append(f"# TYPE {name} summary")
+    lines.append('%s{quantile="0.5"} %s' % (name, _fmt(p50)))
+    lines.append('%s{quantile="0.95"} %s' % (name, _fmt(p95)))
+    lines.append(f"{name}_sum {_fmt(float(sum(hist)))}")
+    lines.append(f"{name}_count {len(hist)}")

@@ -1,0 +1,225 @@
+"""OpenAI-compatible protocol layer: request parsing, response shapes,
+and the engine-error -> HTTP mapping.
+
+Parsing is strict where it protects the engine (token ids in range,
+``n == 1``, positive ``max_tokens``) and lenient everywhere else
+(unknown fields are ignored, as OpenAI servers do). Engine extensions
+ride as extra request fields: ``request_id`` pins the PRNG stream
+(slot-invariant sampling makes pinned-id traces reproducible across
+batch compositions), ``deadline_steps``/``queue_timeout_steps`` set the
+per-request watchdog bounds.
+
+The error contract (also rendered in the README's mapping table):
+
+  ============================  ======  ================================
+  engine condition              status  wire shape
+  ============================  ======  ================================
+  malformed request             400     ``{"error": {...}}``
+  ``CapacityError``             400     can never fit this pool
+  duplicate ``request_id``      400
+  unknown route                 404
+  ``QueueFullError``            429     + ``Retry-After`` header
+  handler crash                 500
+  watchdog expiry               200     ``finish_reason: "timeout"`` +
+                                        ``finish_details``
+  NaN-isolated / step failure   200     ``finish_reason: "error"`` +
+                                        ``finish_details.message``
+  client disconnect mid-stream  —       ``EngineCore.abort_request``
+  ============================  ======  ================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.request import (FinishReason, GenerationRequest,
+                                   SamplingParams)
+from repro.server.chat import ByteTokenizer, render_chat
+
+
+class ProtocolError(ValueError):
+    """A malformed or unsupported request body -> HTTP 400."""
+
+    def __init__(self, message: str, code: str = "invalid_request"):
+        super().__init__(message)
+        self.code = code
+
+
+def error_json(message: str, etype: str = "invalid_request_error",
+               code: Optional[str] = None) -> dict:
+    return {"error": {"message": message, "type": etype, "code": code}}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerDefaults:
+    """Server-side defaults applied when a request omits the field —
+    the robustness knobs the CLI exposes (``--deadline-steps`` etc.)."""
+
+    max_new_tokens: int = 64
+    deadline_steps: Optional[int] = None
+    queue_timeout_steps: Optional[int] = None
+
+
+def _field(obj: dict, key: str, kind, default=None):
+    v = obj.get(key, default)
+    if v is default:
+        return default
+    if kind is float and isinstance(v, int) and not isinstance(v, bool):
+        v = float(v)
+    if not isinstance(v, kind) or isinstance(v, bool):
+        raise ProtocolError(f"'{key}' must be a {kind.__name__}")
+    return v
+
+
+def _prompt_tokens(obj: dict, tokenizer: ByteTokenizer) -> np.ndarray:
+    prompt = obj.get("prompt")
+    if isinstance(prompt, str):
+        toks = tokenizer.encode(prompt)
+    elif isinstance(prompt, list):
+        if not all(isinstance(t, int) and not isinstance(t, bool)
+                   for t in prompt):
+            raise ProtocolError("'prompt' list must contain token ids "
+                                "(integers)")
+        if any(t < 0 or t >= tokenizer.vocab_size for t in prompt):
+            raise ProtocolError(
+                f"'prompt' token ids must be in [0, {tokenizer.vocab_size})")
+        toks = np.asarray(prompt, dtype=np.int32)
+    else:
+        raise ProtocolError("'prompt' must be a string or a token-id list")
+    if len(toks) == 0:
+        raise ProtocolError("'prompt' must not be empty")
+    return toks
+
+
+def _sampling(obj: dict, defaults: ServerDefaults) -> SamplingParams:
+    if obj.get("n", 1) != 1:
+        raise ProtocolError("'n' != 1 is not supported")
+    max_tokens = _field(obj, "max_tokens", int, defaults.max_new_tokens)
+    if max_tokens < 1:
+        raise ProtocolError("'max_tokens' must be >= 1")
+    temperature = _field(obj, "temperature", float, 0.0)
+    if temperature < 0:
+        raise ProtocolError("'temperature' must be >= 0")
+    deadline = _field(obj, "deadline_steps", int, defaults.deadline_steps)
+    queue_to = _field(obj, "queue_timeout_steps", int,
+                      defaults.queue_timeout_steps)
+    for name, v in (("deadline_steps", deadline),
+                    ("queue_timeout_steps", queue_to)):
+        if v is not None and v < 1:
+            raise ProtocolError(f"'{name}' must be >= 1")
+    return SamplingParams(max_new_tokens=max_tokens, temperature=temperature,
+                          deadline_steps=deadline,
+                          queue_timeout_steps=queue_to)
+
+
+def parse_completion(obj: dict, tokenizer: ByteTokenizer,
+                     defaults: ServerDefaults
+                     ) -> Tuple[GenerationRequest, bool]:
+    """Build the engine request for ``POST /v1/completions``.
+
+    Returns ``(request, stream)``."""
+    if not isinstance(obj, dict):
+        raise ProtocolError("request body must be a JSON object")
+    toks = _prompt_tokens(obj, tokenizer)
+    rid = _field(obj, "request_id", int)
+    stream = bool(obj.get("stream", False))
+    return (GenerationRequest(prompt=toks,
+                              sampling=_sampling(obj, defaults),
+                              request_id=rid),
+            stream)
+
+
+def parse_chat(obj: dict, tokenizer: ByteTokenizer, defaults: ServerDefaults
+               ) -> Tuple[GenerationRequest, bool]:
+    """Build the engine request for ``POST /v1/chat/completions``:
+    messages are flattened through the chat template, then tokenized."""
+    if not isinstance(obj, dict):
+        raise ProtocolError("request body must be a JSON object")
+    try:
+        text = render_chat(obj.get("messages"))
+    except ValueError as e:
+        raise ProtocolError(str(e)) from None
+    toks = tokenizer.encode(text)
+    rid = _field(obj, "request_id", int)
+    stream = bool(obj.get("stream", False))
+    return (GenerationRequest(prompt=toks,
+                              sampling=_sampling(obj, defaults),
+                              request_id=rid),
+            stream)
+
+
+# -- response shapes --------------------------------------------------------
+
+
+def finish_fields(reason: Optional[FinishReason],
+                  error: Optional[str] = None
+                  ) -> Tuple[Optional[str], Optional[dict]]:
+    """(openai finish_reason, finish_details) for one finish.
+
+    ``finish_details`` carries the engine-level reason (which watchdog
+    fired, the NaN-guard/step-failure message) that the coarse OpenAI
+    strings collapse away."""
+    if reason is None:
+        return None, None
+    wire = reason.to_openai()
+    details: Optional[dict] = None
+    if wire not in ("stop", "length"):
+        details = {"type": wire, "reason": str(reason)}
+        if error:
+            details["message"] = error
+    return wire, details
+
+
+def _choice(text: str, token_ids: List[int], reason: Optional[FinishReason],
+            error: Optional[str], chat: bool, chunk: bool,
+            first: bool) -> dict:
+    wire, details = finish_fields(reason, error)
+    c: dict = {"index": 0, "finish_reason": wire}
+    if details is not None:
+        c["finish_details"] = details
+    if chat:
+        body = {"role": "assistant", "content": text} if (first or not chunk) \
+            else {"content": text}
+        c["delta" if chunk else "message"] = body
+    else:
+        c["text"] = text
+    c["token_ids"] = token_ids
+    return c
+
+
+def completion_json(req_id: str, model: str, created: int, text: str,
+                    token_ids: List[int], reason: Optional[FinishReason],
+                    error: Optional[str], prompt_tokens: int,
+                    chat: bool) -> dict:
+    return {
+        "id": req_id,
+        "object": "chat.completion" if chat else "text_completion",
+        "created": created,
+        "model": model,
+        "choices": [_choice(text, token_ids, reason, error, chat,
+                            chunk=False, first=True)],
+        "usage": {"prompt_tokens": prompt_tokens,
+                  "completion_tokens": len(token_ids),
+                  "total_tokens": prompt_tokens + len(token_ids)},
+    }
+
+
+def chunk_json(req_id: str, model: str, created: int, text: str,
+               token_ids: List[int], reason: Optional[FinishReason],
+               error: Optional[str], chat: bool, first: bool) -> dict:
+    return {
+        "id": req_id,
+        "object": "chat.completion.chunk" if chat else "text_completion",
+        "created": created,
+        "model": model,
+        "choices": [_choice(text, token_ids, reason, error, chat,
+                            chunk=True, first=first)],
+    }
+
+
+def models_json(model_id: str, created: int) -> dict:
+    return {"object": "list",
+            "data": [{"id": model_id, "object": "model",
+                      "created": created, "owned_by": "repro"}]}

@@ -1,0 +1,144 @@
+"""The engine pump: one asyncio task that owns the ``EngineCore``.
+
+Concurrency model (the part worth getting right):
+
+  * **One pump task, one step thread.** ``core.step()`` blocks (jitted
+    device launches), so the pump runs it on a single-worker executor
+    via ``run_in_executor`` — the event loop stays responsive while a
+    tick is in flight, and ticks never overlap.
+  * **Submission is synchronous on the loop thread.** ``submit()`` calls
+    the core's thread-safe ``add_request`` directly instead of routing
+    through the pump. That keeps backpressure *deterministic*: a full
+    bounded queue raises ``QueueFullError`` on the spot (HTTP 429), even
+    while a tick is stalled — the core takes its injected-fault stall
+    outside the submission lock for exactly this reason.
+  * **Aborts apply between ticks.** ``abort()`` only records the rid;
+    the pump task calls ``core.abort_request`` after the in-flight tick
+    returns, so slot/page release never races the step that is using
+    them. The freed request's ABORTED output flushes on the next tick
+    (``has_pending_outputs`` forces one even when nothing else runs).
+  * **Fanout on the loop thread.** Each submitted request gets an
+    ``asyncio.Queue`` of ``RequestOutput`` deltas, terminated by a
+    ``None`` sentinel. Registration happens in the same synchronous
+    block as ``add_request``, so no delta can be fanned out before its
+    subscriber exists. Finished requests are ``pop_request``-ed so a
+    long-lived core's state map stays bounded.
+  * **Idle is free.** With nothing unfinished, no pending flush, and no
+    queued commands, the pump parks on an event — zero ticks, zero
+    device launches (the core's idle guard backstops this anyway).
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import logging
+from collections import deque
+from typing import Deque, Dict, Optional
+
+from repro.serving.core import EngineCore
+from repro.serving.request import GenerationRequest, RequestOutput
+
+log = logging.getLogger("repro.server")
+
+
+class EnginePump:
+    """Owns an :class:`EngineCore` for the server: admissions in, ticks
+    through a worker thread, per-request delta queues out."""
+
+    def __init__(self, core: EngineCore):
+        self.core = core
+        self._subs: Dict[int, asyncio.Queue] = {}
+        self._aborts: Deque[int] = deque()
+        self._wake = asyncio.Event()
+        self._stopping = False
+        self._task: Optional[asyncio.Task] = None
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="engine-step")
+
+    # -- handler-facing API (event-loop thread only) ------------------------
+
+    def submit(self, request: GenerationRequest) -> "tuple[int, asyncio.Queue]":
+        """Admit ``request``; returns ``(rid, delta queue)``.
+
+        Synchronous and atomic with subscriber registration. Raises
+        ``QueueFullError`` (bounded queue full -> 429), ``CapacityError``
+        (can never fit -> 400), or ``ValueError`` (duplicate pinned
+        ``request_id`` -> 400) — nothing is enqueued on a raise.
+        """
+        rid = self.core.add_request(request)
+        q: asyncio.Queue = asyncio.Queue()
+        self._subs[rid] = q
+        self._wake.set()
+        return rid, q
+
+    def abort(self, rid: int) -> None:
+        """Request cancellation of ``rid`` (client disconnect). Applied
+        by the pump between ticks; the subscriber queue still receives
+        the final ABORTED delta and its ``None`` sentinel."""
+        self._aborts.append(rid)
+        self._wake.set()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        self._task = asyncio.get_running_loop().create_task(
+            self._run(), name="engine-pump")
+
+    async def stop(self) -> None:
+        """Stop the pump and abort anything still in flight.
+
+        After the pump task has quiesced (no step running), leftover
+        requests are aborted directly — pages release immediately — and
+        every surviving subscriber gets its sentinel so streaming
+        handlers unwind cleanly.
+        """
+        self._stopping = True
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+        for rid, q in list(self._subs.items()):
+            if self.core.abort_request(rid):
+                log.info("request %d aborted at shutdown", rid)
+            self.core.pop_request(rid)
+            q.put_nowait(None)
+        self._subs.clear()
+        self._executor.shutdown(wait=True)
+
+    # -- pump loop ----------------------------------------------------------
+
+    def _idle(self) -> bool:
+        return (not self._aborts
+                and not self.core.has_unfinished()
+                and not self.core.has_pending_outputs())
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while not self._stopping:
+            if self._idle():
+                self._wake.clear()
+                if self._idle() and not self._stopping:   # recheck post-clear
+                    await self._wake.wait()
+                continue
+            while self._aborts:                  # between ticks, by design
+                rid = self._aborts.popleft()
+                if self.core.abort_request(rid):
+                    log.info("request %d aborted (client disconnect)", rid)
+            try:
+                out = await loop.run_in_executor(self._executor,
+                                                 self.core.step)
+            except Exception:                    # noqa: BLE001 — keep serving
+                log.exception("engine step raised; pump continues")
+                continue
+            self._fanout(out.outputs)
+
+    def _fanout(self, outputs: "list[RequestOutput]") -> None:
+        for ro in outputs:
+            q = self._subs.get(ro.request_id)
+            if q is not None:
+                q.put_nowait(ro)
+            if ro.finished:
+                self.core.pop_request(ro.request_id)
+                if q is not None:
+                    q.put_nowait(None)
+                    del self._subs[ro.request_id]

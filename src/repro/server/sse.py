@@ -1,0 +1,57 @@
+"""Server-sent-events framing: the OpenAI streaming wire format.
+
+One event per engine delta, ``data: {json}\\n\\n``, terminated by the
+literal ``data: [DONE]\\n\\n`` sentinel — exactly what OpenAI client
+libraries parse. :class:`SSEParser` is the incremental decoder the
+tests (and any raw-socket client) use to round-trip the framing: feed
+it arbitrary byte chunks, get back complete event payload strings.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Union
+
+DONE_PAYLOAD = "[DONE]"
+SSE_DONE = b"data: [DONE]\n\n"
+
+
+def sse_event(data: Union[dict, str]) -> bytes:
+    """Frame one event. Dicts are JSON-encoded; strings pass through."""
+    if not isinstance(data, str):
+        data = json.dumps(data, separators=(",", ":"))
+    return b"data: " + data.encode("utf-8") + b"\n\n"
+
+
+class SSEParser:
+    """Incremental SSE decoder over an arbitrary byte-chunk stream.
+
+    Follows the event-stream grammar: events are separated by blank
+    lines; each ``data:`` line contributes one line of the event's
+    payload (multiple ``data:`` lines join with ``\\n``); comment lines
+    (``:``) and unknown fields are ignored. ``feed`` returns the
+    payloads of every event completed by the chunk.
+    """
+
+    def __init__(self):
+        self._buf = b""
+
+    def feed(self, chunk: bytes) -> List[str]:
+        self._buf += chunk
+        out = []
+        while True:
+            # events end at the first blank line (\n\n, tolerating \r\n)
+            sep = self._buf.find(b"\n\n")
+            sep_crlf = self._buf.find(b"\r\n\r\n")
+            if sep_crlf != -1 and (sep == -1 or sep_crlf < sep):
+                raw, self._buf = (self._buf[:sep_crlf],
+                                  self._buf[sep_crlf + 4:])
+            elif sep != -1:
+                raw, self._buf = self._buf[:sep], self._buf[sep + 2:]
+            else:
+                return out
+            datas = []
+            for line in raw.decode("utf-8").splitlines():
+                if line.startswith("data:"):
+                    datas.append(line[5:].lstrip(" "))
+            if datas:
+                out.append("\n".join(datas))

@@ -49,6 +49,7 @@ every one of these paths deterministically in tests.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -118,6 +119,51 @@ class EngineStats:
     nan_isolated: int = 0
     preemption_retries: int = 0
     step_failures: int = 0
+    # per-request tick-clock observations, appended at each finish (any
+    # reason). Averages hide tail latency entirely, so the /metrics
+    # endpoint and summary() export p50/p95 over these. One int per
+    # finished request — a long-lived server trims via trim_histograms()
+    # if it ever cares (at 8 bytes/request this is years of traffic).
+    ttft_hist: List[int] = dataclasses.field(default_factory=list)
+    latency_hist: List[int] = dataclasses.field(default_factory=list)
+
+    def observe_finish(self, state) -> None:
+        """Record one finished request's TTFT/latency (engine ticks).
+        A request that never emitted (queue timeout, prefill poison)
+        has no TTFT; one that never got submit-stamped has neither."""
+        ttft = state.ttft_steps
+        if ttft is not None:
+            self.ttft_hist.append(int(ttft))
+        lat = state.latency_steps
+        if lat is not None:
+            self.latency_hist.append(int(lat))
+
+    def trim_histograms(self, keep: int = 10000) -> None:
+        """Drop all but the most recent ``keep`` observations."""
+        del self.ttft_hist[:-keep]
+        del self.latency_hist[:-keep]
+
+    @staticmethod
+    def _pct(hist: List[int], q: float) -> float:
+        if not hist:
+            return 0.0
+        return float(np.percentile(np.asarray(hist), q))
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttft_hist, 50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self._pct(self.ttft_hist, 95)
+
+    @property
+    def latency_p50(self) -> float:
+        return self._pct(self.latency_hist, 50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self._pct(self.latency_hist, 95)
 
     @property
     def padding_waste(self) -> float:
@@ -156,6 +202,10 @@ class EngineStats:
             "wall_tokens_per_s": round(
                 self.generated_tokens / self.wall_seconds, 2)
             if self.wall_seconds else 0.0,
+            "ttft_p50": round(self.ttft_p50, 1),
+            "ttft_p95": round(self.ttft_p95, 1),
+            "latency_p50": round(self.latency_p50, 1),
+            "latency_p95": round(self.latency_p95, 1),
             "aborted": self.aborted,
             "expired": self.expired,
             "rejected": self.rejected,
@@ -282,6 +332,14 @@ class EngineCore:
         # RequestOutputs on the *next* StepOutput, so streaming consumers
         # always observe the finish
         self._pending: List[RequestOutput] = []
+        # the thread-safe submission seam the async server front end
+        # relies on: add_request/abort_request may be called from the
+        # event-loop thread while step() runs on an executor thread —
+        # every mutation of scheduler/pool/stats state is serialized
+        # under this lock (step's injected-fault stall sits *outside*
+        # it, so a deliberately held tick never blocks admissions, and
+        # backpressure 429s stay responsive while the engine stalls)
+        self._lock = threading.Lock()
 
     # -- public API --------------------------------------------------------
 
@@ -290,10 +348,16 @@ class EngineCore:
 
         Accepts a :class:`GenerationRequest` or a legacy :class:`Request`
         (converted). An explicit ``request_id`` pins the PRNG stream;
-        otherwise the next monotonic id is assigned.
+        otherwise the next monotonic id is assigned. Thread-safe: may be
+        called from any thread, including concurrently with a ``step()``
+        running on another (the server's submission path).
         """
         if isinstance(request, Request):
             request = request.to_generation_request()
+        with self._lock:
+            return self._add_request_locked(request)
+
+    def _add_request_locked(self, request) -> int:
         rid = request.request_id
         if rid is None:
             rid = self._next_id
@@ -334,16 +398,20 @@ class EngineCore:
         ``RequestOutput``. Returns False when the request had already
         finished (abort raced completion — a no-op), True otherwise.
         Raises ``KeyError`` for an unknown (or already popped) rid.
-        Call between ticks, never from inside a ``step()``.
+        Thread-safe: serialized against ``step()``'s mutation phase, so
+        a client-disconnect abort may land from the event-loop thread
+        while a tick runs on the executor. Never call from *inside* a
+        ``step()`` (same thread re-entry would deadlock).
         """
-        st = self.states.get(rid)
-        if st is None:
-            raise KeyError(f"unknown request id {rid}")
-        if st.done:
-            return False
-        self._terminate(st, FinishReason.ABORTED)
-        self.stats.aborted += 1
-        return True
+        with self._lock:
+            st = self.states.get(rid)
+            if st is None:
+                raise KeyError(f"unknown request id {rid}")
+            if st.done:
+                return False
+            self._terminate(st, FinishReason.ABORTED)
+            self.stats.aborted += 1
+            return True
 
     def pop_request(self, rid: int) -> RequestState:
         """Remove and return a *finished* request's state.
@@ -352,26 +420,46 @@ class EngineCore:
         read results back; a long-lived core serving an open-ended stream
         should pop each request once its results are consumed, or the
         map grows without bound."""
-        state = self.states.get(rid)
-        if state is None:
-            raise KeyError(
-                f"unknown request id {rid}: never added or already popped")
-        if not state.done:
-            raise ValueError(
-                f"request {rid} is still in flight "
-                f"(finish it, abort_request({rid}), or wait)")
-        return self.states.pop(rid)
+        with self._lock:
+            state = self.states.get(rid)
+            if state is None:
+                raise KeyError(
+                    f"unknown request id {rid}: never added or already popped")
+            if not state.done:
+                raise ValueError(
+                    f"request {rid} is still in flight "
+                    f"(finish it, abort_request({rid}), or wait)")
+            return self.states.pop(rid)
 
     def has_unfinished(self) -> bool:
         return self.sched.has_work()
 
+    def has_pending_outputs(self) -> bool:
+        """True when between-tick terminations (aborts) are waiting to
+        surface on the next ``step()`` — the server pump ticks once more
+        to flush them even when nothing else is unfinished."""
+        return bool(self._pending)
+
     def step(self) -> StepOutput:
-        """Advance the engine by one tick; returns the tokens it emitted."""
+        """Advance the engine by one tick; returns the tokens it emitted.
+
+        An *idle* tick — nothing queued, nothing resident, no pending
+        between-tick finishes — returns an empty :class:`StepOutput`
+        without launching any jitted function, advancing the tick clock,
+        or starting the wall clock: the server's pump loop may call
+        ``step()`` continuously, and idle ticks must cost nothing.
+        """
         tick = self.sched.step
+        if not self._pending and not self.sched.has_work():
+            return StepOutput(step=tick, outputs=[])
         if self._t0 is None:
             self._t0 = time.time()
         if self.faults is not None:
-            self.faults.sleep(tick)         # injected straggler tick
+            self.faults.sleep(tick)         # injected straggler/held tick
+        with self._lock:
+            return self._step_locked(tick)
+
+    def _step_locked(self, tick: int) -> StepOutput:
         self._tick_prefill = 0
         deltas: Dict[int, RequestOutput] = {}
         for ro in self._pending:            # between-tick aborts
@@ -420,6 +508,7 @@ class EngineCore:
             st.finish_reason = reason
             st.error = error
             st.finish_step = self.sched.step
+        self.stats.observe_finish(st)
         ro = RequestOutput(request_id=st.rid, new_tokens=[],
                            num_generated=len(st.out_tokens), finished=True,
                            finish_reason=reason, error=error)
@@ -737,6 +826,7 @@ class EngineCore:
         if finished:
             ro.finished = True
             ro.finish_reason = st.finish_reason
+            self.stats.observe_finish(st)
             self.pool.release(slot.index)
             self.sched.free(slot)
         return finished

@@ -24,7 +24,12 @@ production path, not a test double):
   * ``raise_step_error`` — raised inside the engine's decode-launch try
     block: stands in for a backend/device failure of the whole tick.
   * ``sleep`` — stalls a tick for a scheduled duration: a straggler
-    tick for wall-clock watchdog/metrics behavior.
+    tick for wall-clock watchdog/metrics behavior. ``hold_at`` is the
+    deterministic variant: the tick blocks on an event until the test
+    calls ``release`` (or a safety timeout fires), which is how the
+    server tests pin the engine mid-flight while they fill the
+    admission queue (deterministic HTTP 429) or disconnect a streaming
+    client (deterministic abort), with no sleeps to race against.
 
 ``FaultInjector.random(seed, ...)`` builds a seeded randomized schedule
 (the crash-consistency sweep's driver); the fluent ``*_at`` methods
@@ -34,10 +39,15 @@ delivered, so tests can assert a schedule fired.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
+
+# safety net for hold_at: a test that forgets to release() fails its own
+# assertions instead of hanging the suite forever
+HOLD_TIMEOUT_S = 30.0
 
 
 class FaultInjectedError(RuntimeError):
@@ -58,6 +68,7 @@ class FaultInjector:
     nan_rows: Set[Tuple[int, int]] = dataclasses.field(default_factory=set)
     step_errors: Dict[int, str] = dataclasses.field(default_factory=dict)
     slow_ticks: Dict[int, float] = dataclasses.field(default_factory=dict)
+    holds: Dict[int, threading.Event] = dataclasses.field(default_factory=dict)
     log: List[dict] = dataclasses.field(default_factory=list)
 
     # -- scripted-schedule builders (fluent) -------------------------------
@@ -82,6 +93,21 @@ class FaultInjector:
     def slow_tick_at(self, tick: int, seconds: float) -> "FaultInjector":
         self.slow_ticks[tick] = seconds
         return self
+
+    def hold_at(self, tick: int) -> "FaultInjector":
+        """Block ``tick`` (on the thread driving ``step()``) until
+        :meth:`release` — the deterministic straggler the server tests
+        use to pin the engine while they act from another thread."""
+        self.holds[tick] = threading.Event()
+        return self
+
+    def release(self, tick: Optional[int] = None) -> None:
+        """Release one held tick (or all of them when ``tick`` is None).
+        Safe to call before the tick is reached: the hold is consumed
+        pre-released and never blocks."""
+        for t, ev in self.holds.items():
+            if tick is None or t == tick:
+                ev.set()
 
     # -- consumption (called by core/backend) ------------------------------
 
@@ -113,6 +139,10 @@ class FaultInjector:
         if dt:
             self.log.append({"kind": "slow_tick", "tick": tick, "dt": dt})
             time.sleep(dt)
+        ev = self.holds.get(tick)
+        if ev is not None and not ev.is_set():
+            self.log.append({"kind": "hold", "tick": tick})
+            ev.wait(HOLD_TIMEOUT_S)
 
     # -- randomized schedules ----------------------------------------------
 

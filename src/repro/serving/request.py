@@ -45,6 +45,25 @@ class FinishReason(str, enum.Enum):
     def __str__(self) -> str:       # str(reason) == "eos", not the repr
         return self.value
 
+    def to_openai(self) -> str:
+        """The OpenAI wire-format ``finish_reason`` string for this
+        reason. EOS maps to ``"stop"`` and both watchdog expirations map
+        to ``"timeout"`` (the structured detail — which timeout, and any
+        error text — rides in the response's ``finish_details``);
+        everything else serializes as its own value."""
+        return _OPENAI_FINISH[self]
+
+
+_OPENAI_FINISH = {
+    FinishReason.LENGTH: "length",
+    FinishReason.EOS: "stop",
+    FinishReason.ABORTED: "abort",
+    FinishReason.DEADLINE: "timeout",
+    FinishReason.QUEUE_TIMEOUT: "timeout",
+    FinishReason.CAPACITY: "capacity",
+    FinishReason.ERROR: "error",
+}
+
 
 # legacy aliases (pre-enum modules import these names)
 FINISH_LENGTH = FinishReason.LENGTH

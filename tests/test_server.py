@@ -1,0 +1,496 @@
+"""OpenAI-compatible HTTP front end: wire-format and lifecycle contract.
+
+Raw ``asyncio.open_connection`` clients against a real ``ServerApp`` on
+an ephemeral port — no HTTP library on either side, so the bytes on the
+wire are exactly what is asserted. The load-bearing contracts:
+
+  * streaming SSE deltas concatenate *bit-identical* to
+    ``engine.stream()`` for the same pinned request id and seed (the
+    per-token byte tokenizer makes text deltas exact, and slot-invariant
+    sampling makes temperature>0 reproducible);
+  * a client that disconnects mid-stream gets its request aborted:
+    ``EngineStats.aborted`` increments and the paged pool releases every
+    page (invariants checked);
+  * a full bounded admission queue maps to HTTP 429 + ``Retry-After``
+    — made deterministic by pinning the engine mid-tick with
+    ``FaultInjector.hold_at``;
+  * watchdog expiries surface as ``finish_reason: "timeout"`` with
+    structured ``finish_details``, capacity misfits as HTTP 400;
+  * ``/metrics`` exposes the robustness counters and TTFT/latency
+    percentiles in Prometheus text format.
+
+Event-loop use: each test drives its own ``asyncio.run`` (no
+pytest-asyncio dependency); the app is started and torn down inside the
+coroutine so the pump task lives on that loop.
+"""
+import asyncio
+import copy
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.models import init_params
+from repro.serving import (GenerationRequest, PagedServingEngine,
+                           SamplingParams, ServingEngine)
+from repro.serving.faults import FaultInjector
+from repro.server import ServerApp, ServerDefaults
+from repro.server.chat import ByteTokenizer, render_chat
+from repro.server.sse import DONE_PAYLOAD, SSEParser
+
+KEY = jax.random.PRNGKey(0)
+POLL_S = 0.02
+POLLS = 500                         # 10s liveness bound on every wait loop
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=2)
+    params = init_params(cfg, KEY)
+    quant = QuantConfig(method="none")
+    return cfg, params, quant
+
+
+@pytest.fixture(scope="module")
+def slot_engine(tiny):
+    cfg, params, quant = tiny
+    return ServingEngine(params, cfg, quant, None, batch_size=2, max_len=48)
+
+
+@pytest.fixture(scope="module")
+def paged_engine(tiny):
+    cfg, params, quant = tiny
+    return PagedServingEngine(params, cfg, quant, None, batch_size=2,
+                              max_len=48, block_size=4, prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def chat_engine(tiny):
+    """Chat prompts run ~90 template tokens; give them room."""
+    cfg, params, quant = tiny
+    return ServingEngine(params, cfg, quant, None, batch_size=2, max_len=128)
+
+
+@pytest.fixture(scope="module")
+def bounded_engine(tiny):
+    """One queue slot: the second concurrent submission must 429."""
+    cfg, params, quant = tiny
+    return ServingEngine(params, cfg, quant, None, batch_size=2, max_len=48,
+                         max_queue=1)
+
+
+# -- raw-socket HTTP client --------------------------------------------------
+
+
+def _parse_response(raw: bytes):
+    head, _, body = raw.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split(" ")[1])
+    headers = {}
+    for line in lines[1:]:
+        k, _, v = line.partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return status, headers, body
+
+
+async def _connect(port: int, method: str, path: str, obj=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(obj).encode("utf-8") if obj is not None else b""
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: test\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode("ascii")
+                 + body)
+    await writer.drain()
+    return reader, writer
+
+
+async def _request(port: int, method: str, path: str, obj=None):
+    """One request/response round trip (server closes the connection)."""
+    reader, writer = await _connect(port, method, path, obj)
+    raw = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    return _parse_response(raw)
+
+
+async def _read_sse(reader) -> list:
+    """Read status+headers then SSE events until [DONE]; returns the
+    decoded JSON payloads (without the DONE sentinel)."""
+    head = await reader.readuntil(b"\r\n\r\n")
+    assert b" 200 " in head.split(b"\r\n")[0]
+    assert b"text/event-stream" in head
+    parser, events = SSEParser(), []
+    while True:
+        chunk = await reader.read(64)       # small reads exercise reassembly
+        assert chunk, "stream ended before [DONE]"
+        for payload in parser.feed(chunk):
+            if payload == DONE_PAYLOAD:
+                return events
+            events.append(json.loads(payload))
+
+
+class _App:
+    """Start/stop a ServerApp around a test body."""
+
+    def __init__(self, engine, faults=None, defaults=None, **core_kw):
+        self.core = engine.make_core(faults=faults, **core_kw)
+        self.app = ServerApp(self.core, model_id="tiny-proxy",
+                             defaults=defaults
+                             or ServerDefaults(max_new_tokens=8))
+
+    async def __aenter__(self):
+        await self.app.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.app.stop()
+
+    @property
+    def port(self):
+        return self.app.port
+
+
+async def _poll(cond, msg: str):
+    for _ in range(POLLS):
+        if cond():
+            return
+        await asyncio.sleep(POLL_S)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+# -- plumbing endpoints ------------------------------------------------------
+
+
+def test_health_models_and_routing(slot_engine):
+    async def body():
+        async with _App(slot_engine) as h:
+            status, _, payload = await _request(h.port, "GET", "/health")
+            assert status == 200 and json.loads(payload)["status"] == "ok"
+            status, _, payload = await _request(h.port, "GET", "/v1/models")
+            data = json.loads(payload)["data"]
+            assert status == 200 and data[0]["id"] == "tiny-proxy"
+            status, _, _ = await _request(h.port, "GET", "/nope")
+            assert status == 404
+            status, headers, _ = await _request(h.port, "POST", "/health")
+            assert status == 405 and headers["allow"] == "GET"
+    asyncio.run(body())
+
+
+def test_malformed_requests_get_400(slot_engine):
+    async def body():
+        async with _App(slot_engine) as h:
+            for bad in [{"prompt": ""},                      # empty
+                        {"prompt": 7},                       # wrong type
+                        {"prompt": [0, 99999]},              # id out of range
+                        {"prompt": [1, 2], "n": 2},          # n unsupported
+                        {"prompt": [1, 2], "max_tokens": 0}]:
+                status, _, payload = await _request(
+                    h.port, "POST", "/v1/completions", bad)
+                assert status == 400, (bad, payload)
+                assert "error" in json.loads(payload)
+            # invalid JSON body
+            reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                           h.port)
+            writer.write(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                         b"Content-Length: 4\r\n\r\n{{{{")
+            await writer.drain()
+            status, _, _ = _parse_response(await reader.read())
+            writer.close()
+            assert status == 400
+            # chat role validation
+            status, _, _ = await _request(
+                h.port, "POST", "/v1/chat/completions",
+                {"messages": [{"role": "robot", "content": "x"}]})
+            assert status == 400
+    asyncio.run(body())
+
+
+# -- generation: parity with the engine API ----------------------------------
+
+
+def test_completion_matches_engine_stream(tiny, slot_engine):
+    """Non-stream completion over raw token ids is token-exact against
+    engine.stream() with the same pinned request id."""
+    cfg = tiny[0]
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    ref = []
+    for ro in slot_engine.stream([GenerationRequest(
+            prompt=prompt, request_id=0,
+            sampling=SamplingParams(max_new_tokens=6))]):
+        ref.extend(ro.new_tokens)
+
+    async def body():
+        async with _App(slot_engine) as h:
+            status, _, payload = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [int(t) for t in prompt], "max_tokens": 6,
+                 "request_id": 0})
+            assert status == 200
+            out = json.loads(payload)
+            choice = out["choices"][0]
+            assert choice["token_ids"] == [int(t) for t in ref]
+            assert choice["finish_reason"] == "length"
+            tok = ByteTokenizer(cfg.vocab_size)
+            assert choice["text"] == tok.decode(ref)
+            assert out["usage"]["completion_tokens"] == len(ref)
+            assert out["id"] == "cmpl-0"
+    asyncio.run(body())
+
+
+def test_sse_stream_bit_identical_to_engine(tiny, slot_engine):
+    """Streaming deltas (temperature>0, pinned rid) concatenate to the
+    exact engine.stream() token/text sequence — the SSE framing adds and
+    loses nothing."""
+    cfg = tiny[0]
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    sampling = SamplingParams(max_new_tokens=7, temperature=0.8)
+    ref = []
+    for ro in slot_engine.stream([GenerationRequest(
+            prompt=prompt, request_id=11, sampling=sampling)]):
+        ref.extend(ro.new_tokens)
+
+    async def body():
+        async with _App(slot_engine) as h:
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [int(t) for t in prompt], "max_tokens": 7,
+                 "temperature": 0.8, "request_id": 11, "stream": True})
+            events = await _read_sse(reader)
+            writer.close()
+            await writer.wait_closed()
+            toks, text = [], ""
+            for ev in events:
+                assert ev["id"] == "cmpl-11"
+                choice = ev["choices"][0]
+                toks.extend(choice["token_ids"])
+                text += choice["text"]
+            assert toks == [int(t) for t in ref]
+            tok = ByteTokenizer(cfg.vocab_size)
+            assert text == tok.decode(ref)              # bit-identical
+            assert events[-1]["choices"][0]["finish_reason"] == "length"
+    asyncio.run(body())
+
+
+def test_chat_stream_roundtrip(tiny, chat_engine):
+    cfg = tiny[0]
+    messages = [{"role": "system", "content": "terse"},
+                {"role": "user", "content": "hi"}]
+
+    async def body():
+        async with _App(chat_engine) as h:
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/chat/completions",
+                {"messages": messages, "max_tokens": 5, "stream": True,
+                 "request_id": 2})
+            events = await _read_sse(reader)
+            writer.close()
+            assert events[0]["object"] == "chat.completion.chunk"
+            assert events[0]["choices"][0]["delta"]["role"] == "assistant"
+            toks, text = [], ""
+            for ev in events:
+                choice = ev["choices"][0]
+                toks.extend(choice["token_ids"])
+                text += choice["delta"].get("content", "")
+            assert len(toks) == 5
+            assert text == ByteTokenizer(cfg.vocab_size).decode(toks)
+            # same conversation, non-stream: identical tokens (greedy)
+            status, _, payload = await _request(
+                h.port, "POST", "/v1/chat/completions",
+                {"messages": messages, "max_tokens": 5, "request_id": 3})
+            assert status == 200
+            out = json.loads(payload)["choices"][0]
+            assert out["token_ids"] == toks
+            assert out["message"]["content"] == text
+    asyncio.run(body())
+
+    # chat prompt == tokenized template render (prefix-cache determinism)
+    assert render_chat(messages) == render_chat(list(messages))
+
+
+# -- lifecycle: disconnect, backpressure, watchdogs --------------------------
+
+
+def test_disconnect_aborts_and_releases_pages(paged_engine):
+    """Kill the socket mid-stream: the request aborts within a tick, the
+    paged pool releases every page, and the pool invariants hold."""
+    async def body():
+        async with _App(paged_engine) as h:
+            core = h.core
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3, 4], "max_tokens": 40,
+                 "stream": True})
+            # prove the stream is live before cutting it
+            head = await reader.readuntil(b"\r\n\r\n")
+            assert b"text/event-stream" in head
+            first = await reader.readuntil(b"\n\n")
+            assert first.startswith(b"data: ")
+            writer.close()                  # mid-stream disconnect
+            await writer.wait_closed()
+            await _poll(lambda: core.stats.aborted == 1, "abort counted")
+            await _poll(lambda: core.pool.pages_in_use == 0,
+                        "pages released")
+            core.pool.check_invariants()
+            assert not core.has_unfinished()
+            assert core.states == {}        # popped: state map stays bounded
+    asyncio.run(body())
+
+
+def test_queue_full_maps_to_429(bounded_engine):
+    """Bounded admission queue -> deterministic HTTP 429: the engine is
+    pinned mid-tick by an injected hold, so the queued request cannot be
+    admitted while the second submission arrives."""
+    faults = FaultInjector().hold_at(0)
+
+    async def body():
+        async with _App(bounded_engine, faults=faults) as h:
+            first = asyncio.ensure_future(_request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3], "max_tokens": 3}))
+            # the hold is logged once tick 0 is pinned inside step()
+            await _poll(lambda: any(e["kind"] == "hold"
+                                    for e in faults.log), "tick 0 held")
+            status, headers, payload = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [4, 5, 6], "max_tokens": 3})
+            assert status == 429
+            assert headers["retry-after"] == "1"
+            assert json.loads(payload)["error"]["code"] == "queue_full"
+            assert h.core.stats.rejected == 1
+            faults.release()
+            status, _, payload = await first
+            assert status == 200
+            assert json.loads(payload)["choices"][0]["finish_reason"] \
+                == "length"
+    asyncio.run(body())
+
+
+def test_capacity_misfit_maps_to_400(slot_engine):
+    async def body():
+        async with _App(slot_engine) as h:
+            status, _, payload = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": list(range(1, 47)), "max_tokens": 50})
+            assert status == 400
+            assert json.loads(payload)["error"]["code"] == "capacity"
+            assert h.core.stats.rejected == 1
+    asyncio.run(body())
+
+
+def test_deadline_expiry_is_structured_timeout(slot_engine):
+    async def body():
+        async with _App(slot_engine) as h:
+            status, _, payload = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3], "max_tokens": 40,
+                 "deadline_steps": 3})
+            assert status == 200
+            choice = json.loads(payload)["choices"][0]
+            assert choice["finish_reason"] == "timeout"
+            assert choice["finish_details"] == {"type": "timeout",
+                                                "reason": "deadline"}
+            assert h.core.stats.expired == 1
+    asyncio.run(body())
+
+
+def test_duplicate_request_id_maps_to_400(slot_engine):
+    async def body():
+        async with _App(slot_engine) as h:
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2], "max_tokens": 30, "request_id": 5,
+                 "stream": True})
+            await reader.readuntil(b"\r\n\r\n")     # in flight
+            status, _, payload = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [3, 4], "request_id": 5})
+            assert status == 400
+            assert "duplicate" in json.loads(payload)["error"]["message"]
+            writer.close()
+    asyncio.run(body())
+
+
+# -- /metrics ----------------------------------------------------------------
+
+
+def test_metrics_exposition(paged_engine):
+    """After real traffic (one finish, one disconnect-abort), /metrics
+    carries the robustness counters, pool gauges, and tick-latency
+    percentiles in Prometheus text format."""
+    async def body():
+        async with _App(paged_engine) as h:
+            status, _, _ = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3, 4], "max_tokens": 4})
+            assert status == 200
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3, 4], "max_tokens": 40,
+                 "stream": True})
+            await reader.readuntil(b"\n\n")
+            writer.close()
+            await _poll(lambda: h.core.stats.aborted == 1, "abort counted")
+            status, headers, payload = await _request(h.port, "GET",
+                                                      "/metrics")
+            assert status == 200
+            assert headers["content-type"].startswith("text/plain")
+            text = payload.decode("utf-8")
+            for needle in [
+                    "repro_requests_aborted_total 1",
+                    "repro_requests_expired_total 0",
+                    "repro_requests_rejected_total 0",
+                    "repro_requests_nan_isolated_total 0",
+                    "repro_step_failures_total 0",
+                    'repro_ttft_steps{quantile="0.5"}',
+                    'repro_ttft_steps{quantile="0.95"}',
+                    'repro_request_latency_steps{quantile="0.5"}',
+                    "repro_pages_in_use 0",
+                    "repro_prefix_hit_ratio",
+                    "# TYPE repro_ttft_steps summary",
+                    "# TYPE repro_requests_aborted_total counter",
+            ]:
+                assert needle in text, f"missing {needle!r} in:\n{text}"
+            # histograms observed both finishes (length + abort)
+            assert "repro_request_latency_steps_count 2" in text
+    asyncio.run(body())
+
+
+# -- e2e smoke on the quantized proxy (slow job) -----------------------------
+
+
+@pytest.mark.slow
+def test_server_e2e_quantized_smoke(tiny):
+    """End-to-end: ARC-quantized tiny proxy behind the full stack — one
+    streaming chat completion, a /metrics scrape, and a clean shutdown
+    with zero pages leaked."""
+    from repro.launch.cli import calibrate_and_quantize
+    cfg, params, _ = tiny
+    qparams, quant, plans = calibrate_and_quantize(params, cfg, "arc",
+                                                   n_calib=2, seq=32)
+    engine = PagedServingEngine(qparams, cfg, quant, plans, batch_size=2,
+                                max_len=96, block_size=4, prefix_cache=True)
+
+    async def body():
+        async with _App(engine) as h:
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/chat/completions",
+                {"messages": [{"role": "user", "content": "ping"}],
+                 "max_tokens": 4, "stream": True})
+            events = await _read_sse(reader)
+            writer.close()
+            assert sum(len(e["choices"][0]["token_ids"])
+                       for e in events) == 4
+            assert events[-1]["choices"][0]["finish_reason"] == "length"
+            status, _, payload = await _request(h.port, "GET", "/metrics")
+            assert status == 200
+            assert "repro_engine_generated_tokens_total 4" \
+                in payload.decode()
+            return h.core
+    core = asyncio.run(body())
+    core.pool.check_invariants()
+    assert core.pool.pages_in_use == 0
+    assert not core.has_unfinished()
