@@ -65,6 +65,21 @@ def _json_response(status: int, obj: dict, **kw) -> bytes:
     return _http_response(status, json.dumps(obj).encode("utf-8"), **kw)
 
 
+async def _watch_eof(reader: asyncio.StreamReader) -> None:
+    """Resolve only when the client's end is truly gone (EOF or reset).
+
+    Stray bytes after the request body — a trailing newline, a pipelined
+    request the client will never get an answer to (every response is
+    ``Connection: close``) — are read and discarded, NOT treated as a
+    disconnect, so a healthy in-flight request is never aborted over
+    them."""
+    try:
+        while await reader.read(256):
+            pass
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+
+
 class ServerApp:
     """The OpenAI-compatible server: routes HTTP onto one engine core."""
 
@@ -240,20 +255,38 @@ class ServerApp:
                                         reader, writer)
         else:
             await self._collect_response(req_id, rid, created, chat,
-                                         request.prompt_len, deltas, writer)
+                                         request.prompt_len, deltas,
+                                         reader, writer)
 
     async def _collect_response(self, req_id: str, rid: int, created: int,
                                 chat: bool, prompt_tokens: int,
                                 deltas: asyncio.Queue,
+                                reader: asyncio.StreamReader,
                                 writer: asyncio.StreamWriter) -> None:
+        # same disconnect contract as the streaming path: a client that
+        # vanishes mid-generation aborts within one tick instead of
+        # holding its slot and pages until the response it will never
+        # read completes
+        eof = asyncio.ensure_future(_watch_eof(reader))
         tokens, reason, error = [], None, None
-        while True:
-            ro = await deltas.get()
-            if ro is None:
-                break
-            tokens.extend(ro.new_tokens)
-            if ro.finished:
-                reason, error = ro.finish_reason, ro.error
+        try:
+            while True:
+                getter = asyncio.ensure_future(deltas.get())
+                done, _ = await asyncio.wait(
+                    {getter, eof}, return_when=asyncio.FIRST_COMPLETED)
+                if getter not in done:          # disconnect won the race
+                    getter.cancel()
+                    log.info("%s: client disconnected, aborting", req_id)
+                    self.pump.abort(rid)
+                    return
+                ro = getter.result()
+                if ro is None:
+                    break
+                tokens.extend(ro.new_tokens)
+                if ro.finished:
+                    reason, error = ro.finish_reason, ro.error
+        finally:
+            eof.cancel()
         text = self.tokenizer.decode(tokens)
         log.info("%s: finished %s, %d tokens", req_id, reason, len(tokens))
         writer.write(_json_response(200, completion_json(
@@ -268,9 +301,10 @@ class ServerApp:
                      b"Content-Type: text/event-stream\r\n"
                      b"Cache-Control: no-cache\r\n"
                      b"Connection: close\r\n\r\n")
-        # Socket-EOF watch: the request body is fully consumed, so this
-        # read only ever completes when the client closes its end.
-        eof = asyncio.ensure_future(reader.read(1))
+        # Socket-EOF watch: resolves only on a real close/reset — stray
+        # client bytes after the body are discarded, not misread as a
+        # disconnect.
+        eof = asyncio.ensure_future(_watch_eof(reader))
         first = True
         try:
             while True:

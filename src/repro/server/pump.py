@@ -40,6 +40,9 @@ from repro.serving.request import GenerationRequest, RequestOutput
 
 log = logging.getLogger("repro.server")
 
+TRIM_EVERY_TICKS = 4096             # histogram-trim cadence (pump ticks)
+HIST_KEEP = 10000                   # observations retained per histogram
+
 
 class EnginePump:
     """Owns an :class:`EngineCore` for the server: admissions in, ticks
@@ -52,6 +55,10 @@ class EnginePump:
         self._wake = asyncio.Event()
         self._stopping = False
         self._task: Optional[asyncio.Task] = None
+        self._ticks = 0
+        # tunables (tests shrink them to exercise the trim path)
+        self.trim_every = TRIM_EVERY_TICKS
+        self.hist_keep = HIST_KEEP
         self._executor = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="engine-step")
 
@@ -74,7 +81,9 @@ class EnginePump:
     def abort(self, rid: int) -> None:
         """Request cancellation of ``rid`` (client disconnect). Applied
         by the pump between ticks; the subscriber queue still receives
-        the final ABORTED delta and its ``None`` sentinel."""
+        the final ABORTED delta and its ``None`` sentinel. An abort that
+        races completion — the rid finished and was popped before it
+        applied — is a no-op."""
         self._aborts.append(rid)
         self._wake.set()
 
@@ -98,9 +107,12 @@ class EnginePump:
             await self._task
             self._task = None
         for rid, q in list(self._subs.items()):
-            if self.core.abort_request(rid):
-                log.info("request %d aborted at shutdown", rid)
-            self.core.pop_request(rid)
+            try:
+                if self.core.abort_request(rid):
+                    log.info("request %d aborted at shutdown", rid)
+                self.core.pop_request(rid)
+            except KeyError:
+                pass        # finished and popped before shutdown applied
             q.put_nowait(None)
         self._subs.clear()
         self._executor.shutdown(wait=True)
@@ -122,15 +134,44 @@ class EnginePump:
                 continue
             while self._aborts:                  # between ticks, by design
                 rid = self._aborts.popleft()
-                if self.core.abort_request(rid):
-                    log.info("request %d aborted (client disconnect)", rid)
+                try:
+                    if self.core.abort_request(rid):
+                        log.info("request %d aborted (client disconnect)",
+                                 rid)
+                except KeyError:
+                    pass    # abort raced completion: the rid finished and
+                    # was popped before the abort applied — a no-op, not
+                    # a pump-killing error
             try:
                 out = await loop.run_in_executor(self._executor,
                                                  self.core.step)
             except Exception:                    # noqa: BLE001 — keep serving
                 log.exception("engine step raised; pump continues")
+                self._sweep_lost_finishes()
                 continue
             self._fanout(out.outputs)
+            self._ticks += 1
+            if self._ticks % self.trim_every == 0:
+                self.core.stats.trim_histograms(self.hist_keep)
+
+    def _sweep_lost_finishes(self) -> None:
+        """A step that raised may have finished requests (watchdog, fault
+        containment) before dying — their final deltas died with it.
+        Deliver a synthesized final ``RequestOutput`` and the sentinel to
+        every subscriber whose request is done (or gone), so handlers
+        unwind instead of awaiting ``deltas.get()`` forever."""
+        for rid, q in list(self._subs.items()):
+            st = self.core.states.get(rid)
+            if st is not None and not st.done:
+                continue
+            if st is not None:
+                q.put_nowait(RequestOutput(
+                    request_id=rid, new_tokens=[],
+                    num_generated=len(st.out_tokens), finished=True,
+                    finish_reason=st.finish_reason, error=st.error))
+                self.core.pop_request(rid)
+            q.put_nowait(None)
+            del self._subs[rid]
 
     def _fanout(self, outputs: "list[RequestOutput]") -> None:
         for ro in outputs:
@@ -138,7 +179,10 @@ class EnginePump:
             if q is not None:
                 q.put_nowait(ro)
             if ro.finished:
-                self.core.pop_request(ro.request_id)
+                try:
+                    self.core.pop_request(ro.request_id)
+                except KeyError:
+                    pass    # already popped by a failed-step sweep
                 if q is not None:
                     q.put_nowait(None)
                     del self._subs[ro.request_id]

@@ -340,6 +340,132 @@ def test_disconnect_aborts_and_releases_pages(paged_engine):
     asyncio.run(body())
 
 
+def test_nonstream_disconnect_aborts_and_releases_pages(paged_engine):
+    """The non-streaming path has the same disconnect contract as SSE: a
+    client that vanishes mid-generation aborts within a tick and holds no
+    pages until its (unreadable) response would have completed."""
+    async def body():
+        async with _App(paged_engine) as h:
+            core = h.core
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3, 4], "max_tokens": 40})
+            await _poll(core.has_unfinished, "request admitted")
+            writer.close()                  # vanish before the response
+            await writer.wait_closed()
+            await _poll(lambda: core.stats.aborted == 1, "abort counted")
+            await _poll(lambda: core.pool.pages_in_use == 0,
+                        "pages released")
+            core.pool.check_invariants()
+            assert core.states == {}
+    asyncio.run(body())
+
+
+def test_stale_abort_after_finish_keeps_pump_alive(slot_engine):
+    """A disconnect that races completion enqueues an abort for a rid the
+    fanout already popped — the pump must treat it as a no-op, not die
+    with KeyError and stop ticking for everyone."""
+    async def body():
+        async with _App(slot_engine) as h:
+            status, _, _ = await _request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2], "max_tokens": 2, "request_id": 21})
+            assert status == 200            # rid 21 finished and popped
+            h.app.pump.abort(21)            # stale: raced completion
+            status, _, _ = await asyncio.wait_for(_request(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [3, 4], "max_tokens": 2}), 10)
+            assert status == 200            # pump survived the stale abort
+            assert h.core.stats.aborted == 0
+    asyncio.run(body())
+
+
+def test_stray_client_bytes_are_not_a_disconnect(slot_engine):
+    """Bytes arriving after the request body (trailing newline, pipelined
+    junk) must not trip the socket-EOF watch: the stream runs to [DONE]
+    and nothing is aborted."""
+    async def body():
+        async with _App(slot_engine) as h:
+            reader, writer = await _connect(
+                h.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3], "max_tokens": 5, "stream": True})
+            head = await reader.readuntil(b"\r\n\r\n")
+            assert b"text/event-stream" in head
+            writer.write(b"\r\nGET /health HTTP/1.1\r\n\r\n")   # stray bytes
+            await writer.drain()
+            parser, events = SSEParser(), []
+            while True:
+                chunk = await asyncio.wait_for(reader.read(64), 10)
+                assert chunk, "stream ended before [DONE]"
+                done = False
+                for payload in parser.feed(chunk):
+                    if payload == DONE_PAYLOAD:
+                        done = True
+                        break
+                    events.append(json.loads(payload))
+                if done:
+                    break
+            writer.close()
+            assert sum(len(e["choices"][0]["token_ids"])
+                       for e in events) == 5
+            assert h.core.stats.aborted == 0
+    asyncio.run(body())
+
+
+def test_failed_step_sweeps_finished_requests(slot_engine):
+    """If step() raises after marking a request finished, the pump must
+    synthesize the lost final delta and sentinel — handlers unwind with
+    the request's real finish reason instead of awaiting forever — and
+    keep serving."""
+    async def body():
+        async with _App(slot_engine) as h:
+            core = h.core
+            orig, tripped = core.step, []
+
+            def flaky_step():
+                out = orig()
+                if any(ro.finished for ro in out.outputs) and not tripped:
+                    tripped.append(True)
+                    raise RuntimeError("injected post-finish step failure")
+                return out
+
+            core.step = flaky_step
+            try:
+                status, _, payload = await asyncio.wait_for(_request(
+                    h.port, "POST", "/v1/completions",
+                    {"prompt": [1, 2, 3], "max_tokens": 3}), 10)
+                assert status == 200
+                assert tripped              # the failure actually fired
+                choice = json.loads(payload)["choices"][0]
+                assert choice["finish_reason"] == "length"
+                # pump survived: the next request completes normally
+                status, _, _ = await asyncio.wait_for(_request(
+                    h.port, "POST", "/v1/completions",
+                    {"prompt": [4, 5], "max_tokens": 2}), 10)
+                assert status == 200
+                assert core.states == {}    # swept finishes were popped
+            finally:
+                core.step = orig
+    asyncio.run(body())
+
+
+def test_pump_trims_histograms(slot_engine):
+    """A long-lived pump bounds the stats histograms so /metrics scrape
+    cost stays O(keep), not O(total requests served)."""
+    async def body():
+        async with _App(slot_engine) as h:
+            h.app.pump.trim_every = 1       # trim every tick
+            h.app.pump.hist_keep = 2
+            for _ in range(3):
+                status, _, _ = await _request(
+                    h.port, "POST", "/v1/completions",
+                    {"prompt": [1, 2, 3], "max_tokens": 2})
+                assert status == 200
+            assert len(h.core.stats.latency_hist) <= 2
+            assert len(h.core.stats.ttft_hist) <= 2
+    asyncio.run(body())
+
+
 def test_queue_full_maps_to_429(bounded_engine):
     """Bounded admission queue -> deterministic HTTP 429: the engine is
     pinned mid-tick by an injected hold, so the queued request cannot be
