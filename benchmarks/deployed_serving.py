@@ -10,6 +10,15 @@ NVFP4 weights:
     many (bn, bk) weight tiles each schedule dequantizes, and the same
     GEMM is timed on the fast schedule vs forced onto the generic one
     (small block_m => multiple i tiles => per-i re-decode)
+  * the fused swiglu epilogue: one dual-weight `nvfp4_gemm_swiglu`
+    launch vs two GEMMs + an XLA-level silu(g)*u — per-shape latency,
+    plan-derived HBM bytes and weight/activation decode counts, bitwise
+    parity asserted
+  * decode weight-tile residency: the resident schedule (activation
+    decoded once, tiles held across (j, k)) vs the streamed schedule at
+    the same decode shape
+  * engine A/B with ``fuse_epilogue`` on vs off (greedy tokens must
+    match bitwise)
 
     PYTHONPATH=src python -m benchmarks.deployed_serving --interpret
     PYTHONPATH=src python -m benchmarks.deployed_serving --interpret --smoke
@@ -21,6 +30,7 @@ benchmarks.common.emit so the perf trajectory is tracked.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +40,10 @@ from repro.configs import ARCHS
 from repro.configs.base import QuantConfig
 from repro.kernels import ops as KOPS
 from repro.kernels.arc_fused_quant import arc_fused_quantize
-from repro.kernels.nvfp4_gemm import gemm_plan, nvfp4_gemm
+from repro.kernels.nvfp4_gemm import (gemm_plan, nvfp4_gemm,
+                                      nvfp4_gemm_swiglu, swiglu_plan)
 from repro.models import capture_stats, init_params
+from repro.models.layers import _swiglu
 from repro.quant import make_plan_bundle, quantize_weights_for_serving
 from repro.serving import Request, ServingEngine
 
@@ -158,8 +170,113 @@ def bench_decode_fast_path(wc, ws, wt, packed, order, ts, s, k,
          f"{p_two['weight_tile_decodes']} weight tile decodes")
 
 
+def bench_fused_epilogue(plans, qparams, interpret: bool, shapes, iters: int):
+    """Fused gate/up swiglu launch vs two GEMMs + XLA epilogue.
+
+    Emits the latency pair and the plan-derived HBM/decode deltas (the
+    fused launch reads the quantized activation once and writes one
+    (M, F) output instead of two), and asserts bitwise parity with the
+    canonical unfused epilogue."""
+    gname = next((g for g in plans.fused if g.endswith("mlp.w_gate")), None)
+    if gname is None:
+        emit("fused_epilogue_skipped", 0.0, "no fusable mlp gate/up pair")
+        return
+    uname = plans.fused[gname]
+    blk = qparams["blocks"][0]["mlp"]
+    wg = jax.tree.map(lambda l: l[0], blk["w_gate"])
+    wu = jax.tree.map(lambda l: l[0], blk["w_up"])
+    order = plans.arrays[gname]["order"][0]
+    ts = plans.arrays[gname]["act_scales"][0]
+    s = plans.meta[gname]
+    k = int(order.shape[-1])
+    ka = k + s
+    gc, gs, gt, packed = KOPS.qtensor_gemm_operands(wg)
+    uc, us, ut, _ = KOPS.qtensor_gemm_operands(wu)
+    n = gc.shape[0]
+    rng = np.random.default_rng(2)
+
+    for label, m in shapes:
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        xc, xs = arc_fused_quantize(x, jnp.ones((k,), jnp.float32), order,
+                                    ts, s, apply_norm=False,
+                                    interpret=interpret)
+
+        @jax.jit
+        def unfused(a, b):
+            yg = nvfp4_gemm(a, b, gc, gs, w_tensor_scale=gt, w_packed=packed,
+                            interpret=interpret)
+            yu = nvfp4_gemm(a, b, uc, us, w_tensor_scale=ut, w_packed=packed,
+                            interpret=interpret)
+            return _swiglu(yg.astype(jnp.bfloat16), yu.astype(jnp.bfloat16))
+
+        def fused(a, b):
+            return nvfp4_gemm_swiglu(a, b, gc, gs, uc, us, g_tensor_scale=gt,
+                                     u_tensor_scale=ut, w_packed=packed,
+                                     out_dtype=jnp.bfloat16,
+                                     interpret=interpret)
+
+        h_u, h_f = unfused(xc, xs), fused(xc, xs)
+        if not (np.asarray(h_u) == np.asarray(h_f)).all():
+            raise SystemExit(f"fused epilogue parity violated at {label}")
+        gp = gemm_plan(m, n, ka)
+        fp = swiglu_plan(m, n, ka, out_bytes=2)
+        us_u = timeit(unfused, xc, xs, iters=iters)
+        us_f = timeit(fused, xc, xs, iters=iters)
+        emit(f"swiglu_{label}_unfused", us_u,
+             f"M={m} 2x nvfp4_gemm + XLA silu*u, "
+             f"hbm_rd={2 * gp['hbm_read_bytes']} "
+             f"hbm_wr={2 * gp['hbm_write_bytes']} "
+             f"w_decodes={2 * gp['weight_tile_decodes']} "
+             f"x_decodes={2 * gp['x_tile_decodes']}")
+        emit(f"swiglu_{label}_fused", us_f,
+             f"M={m} nvfp4_gemm_swiglu ({fp['path']}), "
+             f"hbm_rd={fp['hbm_read_bytes']} hbm_wr={fp['hbm_write_bytes']} "
+             f"w_decodes={fp['weight_tile_decodes']} "
+             f"x_decodes={fp['x_tile_decodes']}, bitwise == unfused")
+
+
+def bench_decode_residency(plans, qparams, interpret: bool, slots: int,
+                           iters: int):
+    """Decode-shape GEMM: VMEM-resident schedule vs streamed schedule."""
+    name = "b0.mlp.w_gate"
+    w = jax.tree.map(lambda l: l[0], qparams["blocks"][0]["mlp"]["w_gate"])
+    order = plans.arrays[name]["order"][0]
+    ts = plans.arrays[name]["act_scales"][0]
+    s = plans.meta[name]
+    k = int(order.shape[-1])
+    wc, ws, wt, packed = KOPS.qtensor_gemm_operands(w)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(slots, k)).astype(np.float32))
+    xc, xs = arc_fused_quantize(x, jnp.ones((k,), jnp.float32), order, ts,
+                                s, apply_norm=False, interpret=interpret)
+    plan = gemm_plan(slots, wc.shape[0], k + s)
+    if not plan["residency"]:
+        emit("decode_residency_skipped", 0.0,
+             f"launch exceeds the resident VMEM budget at M={slots}")
+        return
+
+    def run(resident):
+        return nvfp4_gemm(xc, xs, wc, ws, w_tensor_scale=wt,
+                          w_packed=packed, interpret=interpret,
+                          resident=resident)
+
+    y_r, y_s = run(True), run(False)
+    if not (np.asarray(y_r) == np.asarray(y_s)).all():
+        raise SystemExit("resident schedule parity violated")
+    us_r = timeit(lambda: run(True), iters=iters)
+    us_s = timeit(lambda: run(False), iters=iters)
+    emit("decode_gemm_resident", us_r,
+         f"M={slots} resident schedule: x decoded once "
+         f"(x_decodes={plan['x_tile_decodes']}, "
+         f"hbm_rd={plan['hbm_read_bytes']}), bitwise == streamed")
+    emit("decode_gemm_streamed", us_s,
+         f"M={slots} streamed schedule: x re-fetched per (j, k)")
+
+
 def bench_engine(cfg, quant, plans, qparams, backend: str, interpret: bool,
-                 requests: int, new_tokens: int, slots: int):
+                 requests: int, new_tokens: int, slots: int,
+                 tag: str | None = None):
+    tag = tag or backend
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         int(rng.integers(4, 13))
@@ -172,17 +289,52 @@ def bench_engine(cfg, quant, plans, qparams, backend: str, interpret: bool,
     eng.run(reqs)
     st = eng.last_stats
     summ = st.summary()
-    emit(f"engine_{backend}_tokens_per_s",
+    emit(f"engine_{tag}_tokens_per_s",
          float(summ["wall_tokens_per_s"]),
          f"{st.generated_tokens} tokens ({st.decode_tokens} decode + "
          f"{st.prefill_sampled_tokens} prefill-sampled), "
          f"{st.decode_steps} steps")
     if st.decode_steps:
-        emit(f"engine_{backend}_us_per_decode_step",
+        emit(f"engine_{tag}_us_per_decode_step",
              1e6 * st.wall_seconds / st.decode_steps,
              f"batch={slots} decode_tok_per_step={st.tokens_per_step:.3f} "
              "(wall time incl. prefills)")
     return [r.out_tokens for r in reqs]
+
+
+def run(arch: str = "llama31-8b", layers: int = 2, interpret: bool = True,
+        smoke: bool = True, requests: int = 6, new_tokens: int = 6,
+        slots: int = 4):
+    if smoke:
+        requests, new_tokens, slots = 3, 3, 2
+    iters = 2 if smoke else 5
+    prefill_m = 128 if smoke else 512
+
+    cfg, quant, plans, qparams = build(arch, layers)
+    print(f"# deployed_serving arch={arch} layers={layers} "
+          f"interpret={interpret}", flush=True)
+
+    shapes = [("prefill", prefill_m), ("decode", slots)]
+    ops = bench_layer_gemm(plans, qparams, interpret, shapes, iters)
+    bench_decode_fast_path(*ops, interpret=interpret, slots=slots,
+                           iters=iters)
+    bench_fused_epilogue(plans, qparams, interpret, shapes, iters)
+    bench_decode_residency(plans, qparams, interpret, slots, iters)
+
+    toks_ref = bench_engine(cfg, quant, plans, qparams, "reference",
+                            interpret, requests, new_tokens, slots)
+    toks_pal = bench_engine(cfg, quant, plans, qparams, "pallas",
+                            interpret, requests, new_tokens, slots)
+    quant_nf = dataclasses.replace(quant, fuse_epilogue=False)
+    toks_nf = bench_engine(cfg, quant_nf, plans, qparams, "pallas",
+                           interpret, requests, new_tokens, slots,
+                           tag="pallas_unfused")
+    match = toks_ref == toks_pal == toks_nf
+    emit("engine_backend_greedy_parity", 1.0 if match else 0.0,
+         "pallas (fused and unfused epilogue) tokens == reference tokens")
+    if not match:
+        raise SystemExit("backend parity violated: "
+                         f"{toks_ref} != {toks_pal} != {toks_nf}")
 
 
 def main():
@@ -197,34 +349,9 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
-
-    if args.smoke:
-        args.requests, args.new_tokens, args.slots = 3, 3, 2
-    iters = 2 if args.smoke else 5
-    prefill_m = 128 if args.smoke else 512
-
-    cfg, quant, plans, qparams = build(args.arch, args.layers)
-    print(f"# deployed_serving arch={args.arch} layers={args.layers} "
-          f"interpret={args.interpret}", flush=True)
-
-    ops = bench_layer_gemm(plans, qparams, args.interpret,
-                           [("prefill", prefill_m), ("decode", args.slots)],
-                           iters)
-    bench_decode_fast_path(*ops, interpret=args.interpret, slots=args.slots,
-                           iters=iters)
-
-    toks_ref = bench_engine(cfg, quant, plans, qparams, "reference",
-                            args.interpret, args.requests, args.new_tokens,
-                            args.slots)
-    toks_pal = bench_engine(cfg, quant, plans, qparams, "pallas",
-                            args.interpret, args.requests, args.new_tokens,
-                            args.slots)
-    match = toks_ref == toks_pal
-    emit("engine_backend_greedy_parity", 1.0 if match else 0.0,
-         "pallas tokens == reference tokens")
-    if not match:
-        raise SystemExit("backend parity violated: "
-                         f"{toks_ref} != {toks_pal}")
+    run(arch=args.arch, layers=args.layers, interpret=args.interpret,
+        smoke=args.smoke, requests=args.requests,
+        new_tokens=args.new_tokens, slots=args.slots)
 
 
 if __name__ == "__main__":

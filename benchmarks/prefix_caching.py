@@ -8,7 +8,7 @@ first finds the shared prompt's pages in the prefix-hash table and
 admits with only its *uncached* suffix computed and charged against the
 pool.
 
-Two phases, both greedy-token-identical to ``prefix_cache=False``:
+Three phases, all greedy-token-identical to ``prefix_cache=False``:
 
   * **prefill / TTFT** — N requests share a long system prompt; with
     chunked prefill the cached run finishes each admission's prefill in
@@ -23,6 +23,12 @@ Two phases, both greedy-token-identical to ``prefix_cache=False``:
     can only hold ~2 requests' K/V at once: sharing the system prompt's
     pages lets more requests reside simultaneously, draining the
     workload in fewer decode steps from the same memory.
+  * **MoE** — the same shared-prompt workload on an MoE proxy. Dropless
+    dispatch (cap = S*K, nothing truncated) makes MoE prefill numerics
+    batch-shape independent, which is what lets the cache manager keep
+    prefix sharing enabled for MoE configs; asserts >= 50% of MoE
+    prefill is served from cache, bit-identically — and that flipping
+    ``moe_dropless`` off closes the gate again.
 
 Run: PYTHONPATH=src python -m benchmarks.prefix_caching [--smoke]
 """
@@ -30,11 +36,15 @@ from __future__ import annotations
 
 import argparse
 import copy
+import dataclasses
 
+import jax
 import numpy as np
 
+from repro.configs import ARCHS
 from repro.configs.base import QuantConfig
-from repro.quant import quantize_weights_for_serving
+from repro.models import capture_stats, init_params
+from repro.quant import make_plan_bundle, quantize_weights_for_serving
 from repro.serving import PagedServingEngine, Request
 from benchmarks.common import emit, plans_for, trained_proxy
 
@@ -133,6 +143,54 @@ def run(n_requests: int = 12, sys_len: int = 48, slots: int = 4,
     return skipped
 
 
+def run_moe(n_requests: int = 8, sys_len: int = 32, slots: int = 2,
+            max_len: int = 96, block_size: int = 16, chunk: int = 16,
+            seed: int = 0):
+    """Phase 3: prefix sharing on an MoE proxy, unlocked by dropless."""
+    key = jax.random.PRNGKey(seed)
+    cfg = ARCHS["qwen3-moe-235b-a22b"].reduced(layers=2)
+    assert cfg.moe_dropless
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+    stats = capture_stats(params, cfg, tokens=toks)
+    quant = QuantConfig(method="arc")
+    plans = make_plan_bundle(stats, cfg, quant, params)
+    qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                           pack=True)
+    reqs = shared_prefix_workload(cfg.vocab_size, n_requests, sys_len,
+                                  seed=seed)
+    kw = dict(batch_size=slots, max_len=max_len, block_size=block_size,
+              prefill_chunk=chunk)
+    results = {}
+    for name, pc in (("off", False), ("on", True)):
+        eng = PagedServingEngine(qparams, cfg, quant, plans,
+                                 prefix_cache=pc, **kw)
+        toks_o, _, s = _serve(eng, reqs)
+        emit(f"prefix_cache_moe_{name}", s.wall_seconds * 1e6,
+             f"prefill_tokens={s.prefill_tokens} "
+             f"cached_prefix_tokens={s.cached_prefix_tokens} "
+             f"decode_steps={s.decode_steps}")
+        results[name] = (toks_o, s)
+
+    assert results["on"][0] == results["off"][0], \
+        "MoE prefix caching changed greedy tokens"
+    s_on = results["on"][1]
+    total = s_on.prefill_tokens + s_on.cached_prefix_tokens
+    skipped = s_on.cached_prefix_tokens / total
+    assert skipped >= 0.5, \
+        f"expected >=50% of MoE prefill served from cache, got {skipped:.1%}"
+    # capacity-capped dispatch is batch-shape dependent: the gate closes
+    cfg_cap = dataclasses.replace(cfg, moe_dropless=False)
+    eng_cap = PagedServingEngine(qparams, cfg_cap, quant, plans,
+                                 prefix_cache=True, **kw)
+    assert not eng_cap.make_core().pool.prefix_enabled, \
+        "capacity-capped MoE must not prefix-share"
+    emit("prefix_cache_moe_win", 0.0,
+         f"dropless MoE: {skipped:.0%} of prefill served from cache, "
+         f"bitwise identical; moe_dropless=False disables sharing")
+    return skipped
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -147,6 +205,8 @@ def main():
         args.requests, args.slots, args.sys_len = 5, 2, 32
     run(n_requests=args.requests, sys_len=args.sys_len, slots=args.slots,
         max_len=2 * args.sys_len)
+    run_moe(n_requests=5 if args.smoke else 8, sys_len=args.sys_len,
+            slots=2, max_len=2 * args.sys_len)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@ Paper artifact -> module map:
   Table 8 / Fig 6 (prefill)         prefill_model (TPU roofline translation)
   Section 3.4 (error bounds)        error_bounds
   Figure 5 (deployment/serving)     continuous_batching (vs static batching)
+  Deployed kernels (fused epilogue, deployed_serving (interpret-mode A/B)
+    residency, backend parity)
+  Prefix caching + dropless MoE     prefix_caching
   Dry-run roofline (deliverable g)  roofline (reads results/dryrun)
 """
 import argparse
@@ -27,12 +30,17 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (accuracy, calibration_robustness,
-                            continuous_batching, error_bounds, latency_vs_s,
-                            layerwise_mse, outlier_stats, prefill_model,
+                            continuous_batching, deployed_serving,
+                            error_bounds, latency_vs_s, layerwise_mse,
+                            outlier_stats, prefill_model, prefix_caching,
                             quant_overhead, robustness, roofline)
 
     jobs = [
         ("continuous_batching", lambda: continuous_batching.run()),
+        ("deployed_serving", lambda: deployed_serving.run(interpret=True,
+                                                          smoke=True)),
+        ("prefix_caching", lambda: (prefix_caching.run(),
+                                    prefix_caching.run_moe())),
         ("robustness", lambda: robustness.run()),
         ("error_bounds", lambda: error_bounds.run()),
         ("latency_vs_s", lambda: latency_vs_s.run()),

@@ -19,7 +19,7 @@ from typing import Dict, List, Tuple
 
 from repro.core.quant import QTensor
 from repro.kernels.arc_fused_quant import fused_quant_plan
-from repro.kernels.nvfp4_gemm import gemm_plan, gemm_vmem_bytes
+from repro.kernels.nvfp4_gemm import gemm_plan, gemm_vmem_bytes, swiglu_plan
 from repro.kernels.paged_attention import paged_attention_plan
 from repro.quant.apply import QUANTIZABLE
 
@@ -74,16 +74,28 @@ def entry_vmem_reports(engine, entry: str) -> List[dict]:
     if engine.quant.backend == "pallas":
         plans = getattr(engine, "plans", None)
         meta = plans.meta if plans is not None else {}
+        # fused swiglu epilogue: the up projection of each fused gate/up
+        # pair is decoded inside the gate's dual-weight launch, so it is
+        # not a launch of its own — price one nvfp4_gemm_swiglu instead
+        fused = ((getattr(plans, "fused", None) or {})
+                 if engine.quant.fuse_epilogue else {})
+        fused_up = set(fused.values())
         seen: Dict[tuple, dict] = {}
         for site, n, ka in _quantized_sites(engine.qparams):
             s = meta.get(site, 0)
-            gp = gemm_plan(m, n, ka)
-            key = ("nvfp4_gemm", m, n, ka)
+            if site in fused_up:
+                continue
+            if site in fused:
+                gp = swiglu_plan(m, n, ka, out_bytes=2)   # bf16 epilogue out
+                key = ("nvfp4_gemm_swiglu", m, n, ka)
+            else:
+                gp = gemm_plan(m, n, ka)
+                key = ("nvfp4_gemm", m, n, ka)
             if key in seen:
                 seen[key]["count"] += 1
                 continue
             seen[key] = {
-                "kernel": "nvfp4_gemm", "site": site, "count": 1,
+                "kernel": gp["kernel"], "site": site, "count": 1,
                 "grid": gp["grid"],
                 "blocks": (gp["bm"], gp["bn"], gp["bk"]),
                 "vmem_bytes": gemm_vmem_bytes(gp, w_packed=True),

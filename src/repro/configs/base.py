@@ -51,6 +51,12 @@ class ModelConfig:
     moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
     capacity_factor: float = 1.25
     router_aux_loss: float = 0.01
+    # dropless inference dispatch: per-group expert capacity = S*K, so
+    # every routed (token, expert) assignment gets a slot and no token is
+    # ever dropped — prefill numerics become independent of batch shape,
+    # which re-enables prefix-cache sharing on MoE configs. False restores
+    # the fixed capacity_factor dispatch (training-style, may drop).
+    moe_dropless: bool = True
 
     # SSM (Mamba)
     mamba_d_state: int = 16
@@ -201,6 +207,15 @@ class QuantConfig:
     # gather); False keeps the jnp gather fallback — the parity oracle
     # and the A/B baseline for benchmarks/paged_attention.py
     attn_kernel: bool = True
+    # fused GEMM epilogues on the pallas serving path: gate/up MLP pairs
+    # sharing one quantization plan run a single dual-weight GEMM with
+    # silu(g)*u computed on the VMEM accumulators (the (M, F) gate/up
+    # intermediates never round-trip HBM, and the activations are
+    # quantized once instead of twice), and linear biases add inside the
+    # out-tile store. Bit-identical to the unfused path; False keeps the
+    # separate launches — the A/B baseline for
+    # benchmarks/deployed_serving.py
+    fuse_epilogue: bool = True
 
     @property
     def activation_fmt(self) -> str:

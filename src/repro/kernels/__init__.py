@@ -9,7 +9,17 @@
                    consumes packed serving weights (two codes/byte + E4M3
                    scale codes decoded in-kernel) and switches to a decode
                    fast path (single M tile, f32 scratch accumulator, each
-                   weight tile decoded once) at serving decode shapes
+                   weight tile decoded once) at serving decode shapes; a
+                   fused bias epilogue adds b onto the f32 accumulator at
+                   the out-tile store, and the decode fast path keeps the
+                   decoded activation VMEM-resident across the (j, k)
+                   schedule when the buffers fit (plan "residency")
+  nvfp4_gemm_swiglu
+                   dual-weight variant for gate/up MLP pairs sharing one
+                   quantization plan: both packed weights decode against a
+                   single activation tile and the epilogue computes
+                   silu(g) * u on the VMEM accumulators — one activation
+                   read/quantization and no (M, F) intermediate round trip
   paged_attention  vLLM-style paged-attention decode: the per-request
                    block table is a scalar-prefetch operand whose index
                    maps stream K/V pages straight from the pool in HBM,
@@ -26,9 +36,9 @@ the attention kernel is the default paged decode path
 """
 from repro.kernels import common, ops, ref
 from repro.kernels.arc_fused_quant import arc_fused_quantize
-from repro.kernels.nvfp4_gemm import nvfp4_gemm
+from repro.kernels.nvfp4_gemm import nvfp4_gemm, nvfp4_gemm_swiglu
 from repro.kernels.nvfp4_quant import nvfp4_quantize
 from repro.kernels.paged_attention import paged_attention_decode
 
 __all__ = ["common", "ops", "ref", "arc_fused_quantize", "nvfp4_gemm",
-           "nvfp4_quantize", "paged_attention_decode"]
+           "nvfp4_gemm_swiglu", "nvfp4_quantize", "paged_attention_decode"]

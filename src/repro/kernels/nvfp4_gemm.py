@@ -14,15 +14,31 @@ Weight operands come in two storage modes:
     representation (``QTensor.to_packed``). Unpack + scale decode happen
     in-kernel, so HBM weight traffic stays at ~4.5 bits/value.
 
-Two schedules:
+Three schedules:
   * generic (prefill): grid (M/bm, N/bn, Ka/bk), k-innermost accumulation
     into the out tile. Weight tiles are re-decoded once per i.
   * decode fast path — chosen when M (padded) fits one bm tile, the serving
     decode shape (M = active slots): grid (N/bn, Ka/bk) with an f32 VMEM
     scratch accumulator. Every weight tile is decoded exactly once per
-    (j, k) — (M/bm)x fewer weight decodes than running the generic schedule
-    over the same problem — and the out tile is written once at the last
-    k step instead of read-modify-written per step.
+    (j, k) and the out tile is written once at the last k step.
+  * decode resident — the fast path upgraded when the whole problem fits
+    the VMEM budget (``plan["residency"]``): grid (N/bn,). The activation
+    operand rides in with a constant index map (fetched from HBM once per
+    launch, not once per grid step), is decoded once into an f32 VMEM
+    scratch at j == 0, and stays resident across the whole (j, k) schedule;
+    packed weight rows stream in as full-Ka blocks, double-buffered across
+    the j loop, with the K loop an in-kernel fori_loop over VMEM slices.
+    Accumulation order is identical to the streamed fast path, so results
+    are bitwise equal.
+
+Epilogues (fused into the out-tile store, saving an HBM round trip):
+  * ``bias`` on :func:`nvfp4_gemm` — the f32 bias add happens on the
+    accumulator before the single store instead of as a follow-up XLA op.
+  * :func:`nvfp4_gemm_swiglu` — dual-weight schedule for gate/up MLP
+    pairs: both packed weight tiles are decoded against ONE activation
+    tile (one quantized-activation read instead of two) and
+    ``silu(g) * u`` is computed in VMEM in ``out_dtype``, so the
+    intermediate (M, F) gate/up tensors never touch HBM.
 
 Ragged M/N are padded up to the tile grid (zero codes decode to +0 and
 contribute nothing) instead of shrinking block sizes below hardware tiles —
@@ -42,6 +58,13 @@ from repro.kernels import common as C
 
 GROUP = 16
 SUBLANE = 8     # minimum second-to-last tile granularity we pad M/N to
+
+# A decode launch may go VMEM-resident only when the estimator below says
+# the whole problem (activations decoded to f32 + double-buffered full-Ka
+# weight rows) fits this budget. Matches analysis/vmem.py's R6 default —
+# defined here (not imported) because vmem.py imports its estimators from
+# this module.
+DECODE_RESIDENT_VMEM_LIMIT = 16 * 2**20
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -67,6 +90,24 @@ def _decode_w(wc_ref, ws_ref, wt_ref, w_packed: bool, bk: int):
     return (w * scales[..., None]).reshape(bn, bk)
 
 
+def _decode_w_chunk(wc_ref, ws_ref, wt_ref, w_packed: bool, bk: int, kidx):
+    """Decode the k-th (bn, bk) chunk of a full-Ka VMEM weight block.
+
+    Value-identical to :func:`_decode_w` on the matching streamed block —
+    group decode is elementwise per GROUP and bk % GROUP == 0, so slicing
+    before or after decoding commutes."""
+    bn = wc_ref.shape[0]
+    sg = bk // GROUP
+    if w_packed:
+        codes = C.unpack_e2m1(wc_ref[:, pl.ds(kidx * (bk // 2), bk // 2)])
+        scales = C.decode_e4m3(ws_ref[:, pl.ds(kidx * sg, sg)]) * wt_ref[0]
+    else:
+        codes = wc_ref[:, pl.ds(kidx * bk, bk)]
+        scales = ws_ref[:, pl.ds(kidx * sg, sg)].astype(jnp.float32)
+    w = C.decode_e2m1(codes).reshape(bn, sg, GROUP)
+    return (w * scales[..., None]).reshape(bn, bk)
+
+
 def _mxu_dot(x, w):
     # MXU matmul in bf16 with f32 accumulation (TPU-native datapath)
     return jax.lax.dot_general(
@@ -74,9 +115,24 @@ def _mxu_dot(x, w):
         (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
 
-def _gemm_kernel(w_packed, bk, xc_ref, xs_ref, wc_ref, ws_ref, wt_ref,
-                 out_ref):
+def _swiglu_epilogue(accg, accu, out_dtype):
+    """The fused MLP epilogue, replicating the unfused layer chain bitwise:
+    f32 accumulators -> round to out_dtype (exactly where the two unfused
+    GEMMs round their stores) -> silu computed in f32 -> one final round.
+    The f32 silu matches ``models.layers._swiglu``, the single canonical
+    epilogue definition — interior low-precision ops would not survive
+    XLA's float normalization bit-identically across eager/jit."""
+    g = accg.astype(out_dtype).astype(jnp.float32)
+    u = accu.astype(out_dtype).astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(out_dtype)
+
+
+def _gemm_kernel(w_packed, bk, nk, has_bias, *refs):
     """Generic schedule: grid (M/bm, N/bn, Ka/bk), k innermost."""
+    if has_bias:
+        xc_ref, xs_ref, wc_ref, ws_ref, wt_ref, b_ref, out_ref = refs
+    else:
+        (xc_ref, xs_ref, wc_ref, ws_ref, wt_ref, out_ref), b_ref = refs, None
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -87,15 +143,24 @@ def _gemm_kernel(w_packed, bk, xc_ref, xs_ref, wc_ref, ws_ref, wt_ref,
     w = _decode_w(wc_ref, ws_ref, wt_ref, w_packed, bk)
     out_ref[...] += _mxu_dot(x, w)
 
+    if b_ref is not None:
+        @pl.when(k_idx == nk - 1)
+        def _bias():
+            out_ref[...] += b_ref[...][None, :]
 
-def _gemm_kernel_decode(w_packed, bk, nk, xc_ref, xs_ref, wc_ref, ws_ref,
-                        wt_ref, out_ref, acc_ref):
+
+def _gemm_kernel_decode(w_packed, bk, nk, has_bias, *refs):
     """Decode fast path: grid (N/bn, Ka/bk); single M tile.
 
     The weight tile for (j, k) is decoded exactly once (there is no i loop
     to re-decode it under); partial sums live in the f32 VMEM scratch and
     the out tile is stored once at the final k step.
     """
+    if has_bias:
+        xc_ref, xs_ref, wc_ref, ws_ref, wt_ref, b_ref, out_ref, acc_ref = refs
+    else:
+        (xc_ref, xs_ref, wc_ref, ws_ref, wt_ref, out_ref, acc_ref), b_ref = \
+            refs, None
     k_idx = pl.program_id(1)
 
     @pl.when(k_idx == 0)
@@ -108,7 +173,96 @@ def _gemm_kernel_decode(w_packed, bk, nk, xc_ref, xs_ref, wc_ref, ws_ref,
 
     @pl.when(k_idx == nk - 1)
     def _store():
-        out_ref[...] = acc_ref[...]
+        acc = acc_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...][None, :]
+        out_ref[...] = acc
+
+
+def _gemm_kernel_decode_resident(w_packed, bk, nk, has_bias, *refs):
+    """Decode resident path: grid (N/bn,); activations decoded once.
+
+    The x operand arrives under a constant index map (one HBM fetch per
+    launch) and is decoded into the persistent f32 scratch at j == 0; every
+    later grid step reuses it. Weight rows arrive as full-Ka blocks (the
+    pallas pipeline double-buffers them across j) and the K loop runs
+    in-kernel over VMEM slices. The f32 accumulation order matches the
+    streamed fast path chunk for chunk, so outputs are bitwise identical.
+    """
+    if has_bias:
+        xc_ref, xs_ref, wc_ref, ws_ref, wt_ref, b_ref, out_ref, xdec_ref = refs
+    else:
+        (xc_ref, xs_ref, wc_ref, ws_ref, wt_ref, out_ref, xdec_ref), b_ref = \
+            refs, None
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _decode_activations():
+        xdec_ref[...] = _decode_x(xc_ref, xs_ref)
+
+    bm, bn = out_ref.shape
+
+    def body(kidx, acc):
+        x = xdec_ref[:, pl.ds(kidx * bk, bk)]
+        w = _decode_w_chunk(wc_ref, ws_ref, wt_ref, w_packed, bk, kidx)
+        return acc + _mxu_dot(x, w)
+
+    acc = jax.lax.fori_loop(0, nk, body, jnp.zeros((bm, bn), jnp.float32))
+    if b_ref is not None:
+        acc = acc + b_ref[...][None, :]
+    out_ref[...] = acc
+
+
+def _swiglu_kernel(w_packed, bk, nk, out_dtype, xc_ref, xs_ref,
+                   gc_ref, gs_ref, gt_ref, uc_ref, us_ref, ut_ref,
+                   out_ref, accg_ref, accu_ref):
+    """Fused gate/up schedule: grid (M/bm, F/bn, Ka/bk), k innermost.
+
+    One activation tile feeds both weight streams; the two f32
+    accumulators live in VMEM scratch and ``silu(g) * u`` is computed in
+    the out-tile store — the (M, F) gate/up intermediates never hit HBM.
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    x = _decode_x(xc_ref, xs_ref)
+    accg_ref[...] += _mxu_dot(x, _decode_w(gc_ref, gs_ref, gt_ref,
+                                           w_packed, bk))
+    accu_ref[...] += _mxu_dot(x, _decode_w(uc_ref, us_ref, ut_ref,
+                                           w_packed, bk))
+
+    @pl.when(k_idx == nk - 1)
+    def _store():
+        out_ref[...] = _swiglu_epilogue(accg_ref[...], accu_ref[...],
+                                        out_dtype)
+
+
+def _swiglu_kernel_decode_resident(w_packed, bk, nk, out_dtype, xc_ref,
+                                   xs_ref, gc_ref, gs_ref, gt_ref, uc_ref,
+                                   us_ref, ut_ref, out_ref, xdec_ref):
+    """Fused gate/up decode resident path: grid (F/bn,)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _decode_activations():
+        xdec_ref[...] = _decode_x(xc_ref, xs_ref)
+
+    bm, bn = out_ref.shape
+
+    def body(kidx, accs):
+        accg, accu = accs
+        x = xdec_ref[:, pl.ds(kidx * bk, bk)]
+        g = _decode_w_chunk(gc_ref, gs_ref, gt_ref, w_packed, bk, kidx)
+        u = _decode_w_chunk(uc_ref, us_ref, ut_ref, w_packed, bk, kidx)
+        return accg + _mxu_dot(x, g), accu + _mxu_dot(x, u)
+
+    zeros = jnp.zeros((bm, bn), jnp.float32)
+    accg, accu = jax.lax.fori_loop(0, nk, body, (zeros, zeros))
+    out_ref[...] = _swiglu_epilogue(accg, accu, out_dtype)
 
 
 def _tile(dim: int, block: int) -> int:
@@ -121,17 +275,60 @@ def _tile(dim: int, block: int) -> int:
     return min(_round_up(-(-dim // tiles), SUBLANE), _round_up(block, SUBLANE))
 
 
+def _check_blocks(block_m: int, block_n: int, block_k: int) -> None:
+    """Reject block sizes the schedule cannot honor, instead of silently
+    mis-tiling. The K block must align with the packed byte-pair width —
+    2 E2M1 codes per byte x GROUP-code E4M3 scale groups = 2*GROUP
+    columns per indivisible packed unit — or a derived bk could split a
+    byte pair / scale group mid-tile."""
+    for name, val in (("block_m", block_m), ("block_n", block_n)):
+        if val < 1:
+            raise ValueError(f"{name} must be a positive tile size, "
+                             f"got {val}")
+    unit = 2 * GROUP
+    if block_k < unit or block_k % unit:
+        raise ValueError(
+            f"block_k={block_k} does not divide into the packed byte-pair "
+            f"width: K blocks must be positive multiples of {unit} "
+            f"(2 E2M1 codes per packed byte x {GROUP}-code scale groups), "
+            f"or the derived k tile would split packed byte pairs / E4M3 "
+            f"scale groups and mis-tile the in-kernel decode")
+
+
+def _resident_vmem_bytes(bm: int, bn: int, ka: int, w_packed: bool,
+                         weight_streams: int, out_bytes: int) -> int:
+    """VMEM footprint of the decode resident schedule: activations fetched
+    once (constant index map, single-buffered) + decoded f32 copy, full-Ka
+    weight rows double-buffered across the j loop, per-stream f32
+    accumulators, double-buffered out tiles."""
+    wc = ka // 2 if w_packed else ka
+    ws = (ka // GROUP) * (1 if w_packed else 4)
+    x_in = bm * ka + bm * (ka // GROUP) * 4
+    w_in = 2 * weight_streams * (bn * wc + bn * ws + 4)
+    out = 2 * bm * bn * out_bytes
+    scratch = bm * ka * 4 + weight_streams * bm * bn * 4
+    return x_in + w_in + out + scratch
+
+
 def gemm_plan(m: int, n: int, ka: int, block_m: int = 256,
-              block_n: int = 256, block_k: int = 2048) -> dict:
+              block_n: int = 256, block_k: int = 2048, *,
+              w_packed: bool = True, weight_streams: int = 1,
+              out_bytes: int = 4) -> dict:
     """Static schedule description for a GEMM shape (no tracing).
 
     ``weight_tile_decodes`` counts how many (bn, bk) weight tiles the
-    schedule dequantizes — the quantity the decode fast path minimizes.
+    schedule dequantizes — the quantity the decode fast path minimizes —
+    and ``x_tile_decodes`` the activation-tile decodes, which the resident
+    path collapses to one. ``residency`` marks a decode launch that fits
+    :data:`DECODE_RESIDENT_VMEM_LIMIT` and will run the resident schedule.
+    ``hbm_read_bytes`` / ``hbm_write_bytes`` model per-launch HBM traffic
+    under the schedule (activation + weight fetches; one out-tile store).
     ``flops`` / ``useful_flops`` account the padded vs requested work so
     callers can see the ragged-tail waste the tile choice bounds
     (benchmarks/deployed_serving.py reports both).
     """
     assert ka % GROUP == 0, ka
+    _check_blocks(block_m, block_n, block_k)
     # M/N tiles: minimal tile count first, then the smallest sublane-
     # aligned tile covering the dim — the ragged remainder is padded at
     # SUBLANE granularity instead of up to a full block
@@ -144,37 +341,79 @@ def gemm_plan(m: int, n: int, ka: int, block_m: int = 256,
     mp, np_ = _round_up(m, bm), _round_up(n, bn)
     ni, nj, nk = mp // bm, np_ // bn, ka // bk
     fast = ni == 1
+    resident = fast and _resident_vmem_bytes(
+        bm, bn, ka, w_packed, weight_streams,
+        out_bytes) <= DECODE_RESIDENT_VMEM_LIMIT
     flops = 2 * mp * np_ * ka
     useful = 2 * m * n * ka
+    wtiles = nj * nk if fast else ni * nj * nk
+    wc = bk // 2 if w_packed else bk
+    ws = (bk // GROUP) * (1 if w_packed else 4)
+    x_fetch = bm * bk + bm * (bk // GROUP) * 4
+    x_reads = (mp * ka + mp * (ka // GROUP) * 4 if resident
+               else wtiles * x_fetch)
+    w_reads = weight_streams * wtiles * (bn * wc + bn * ws)
     return {
+        "kernel": "nvfp4_gemm",
         "path": "decode_fast" if fast else "generic",
+        "residency": resident,
         "bm": bm, "bn": bn, "bk": bk, "mp": mp, "np": np_,
+        "m": m, "n": n, "ka": ka, "k_steps": nk,
+        "weight_streams": weight_streams, "out_bytes": out_bytes,
         "grid": (nj, nk) if fast else (ni, nj, nk),
-        "weight_tile_decodes": nj * nk if fast else ni * nj * nk,
-        "flops": flops,
-        "useful_flops": useful,
+        "weight_tile_decodes": weight_streams * wtiles,
+        "x_tile_decodes": 1 if resident else wtiles,
+        "hbm_read_bytes": x_reads + w_reads,
+        "hbm_write_bytes": mp * np_ * out_bytes,
+        "flops": weight_streams * flops,
+        "useful_flops": weight_streams * useful,
         "padding_waste": 1.0 - useful / flops,
     }
+
+
+def swiglu_plan(m: int, n: int, ka: int, block_m: int = 256,
+                block_n: int = 256, block_k: int = 2048, *,
+                w_packed: bool = True, out_bytes: int = 2) -> dict:
+    """Schedule description for :func:`nvfp4_gemm_swiglu`: the same tiling
+    as :func:`gemm_plan` with two weight streams sharing each activation
+    tile and an ``out_dtype`` (default bf16) fused-epilogue store."""
+    p = gemm_plan(m, n, ka, block_m, block_n, block_k, w_packed=w_packed,
+                  weight_streams=2, out_bytes=out_bytes)
+    p["kernel"] = "nvfp4_gemm_swiglu"
+    return p
 
 
 def gemm_vmem_bytes(plan: dict, w_packed: bool = True) -> int:
     """Estimated VMEM residency of one launch under ``plan``.
 
     Pipeline in/out blocks are double-buffered (x2); the decode fast
-    path adds its f32 accumulator scratch. Mirrors the BlockSpecs in
-    :func:`nvfp4_gemm` — update both together.
+    path adds its per-stream f32 accumulator scratch, and the resident
+    path is priced by :func:`_resident_vmem_bytes` (whole-Ka weight rows,
+    decoded-activation scratch). Mirrors the BlockSpecs in
+    :func:`nvfp4_gemm` / :func:`nvfp4_gemm_swiglu` — update both together.
     """
+    streams = plan.get("weight_streams", 1)
+    out_b = plan.get("out_bytes", 4)
+    if plan.get("residency"):
+        return _resident_vmem_bytes(plan["bm"], plan["bn"], plan["ka"],
+                                    w_packed, streams, out_b)
     bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
     wc = bk // 2 if w_packed else bk
     ws = (bk // GROUP) * (1 if w_packed else 4)
     inputs = (bm * bk                       # x codes (uint8)
               + bm * (bk // GROUP) * 4      # x scales (f32)
-              + bn * wc                     # w codes
-              + bn * ws                     # w scales
-              + 4)                          # tensor scale
-    outputs = bm * bn * 4                   # f32 out tile
-    scratch = bm * bn * 4 if plan["path"] == "decode_fast" else 0
+              + streams * (bn * wc          # w codes
+                           + bn * ws        # w scales
+                           + 4))            # tensor scale
+    outputs = bm * bn * out_b
+    if plan.get("kernel") == "nvfp4_gemm_swiglu":
+        scratch = 2 * bm * bn * 4           # gate + up f32 accumulators
+    else:
+        scratch = bm * bn * 4 if plan["path"] == "decode_fast" else 0
     return 2 * (inputs + outputs) + scratch
+
+
+swiglu_vmem_bytes = gemm_vmem_bytes
 
 
 def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
@@ -184,21 +423,38 @@ def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
     return jnp.pad(a, ((0, pad), (0, 0)))
 
 
+def _resolve_resident(plan: dict, resident: bool | None) -> bool:
+    if resident is None:
+        return bool(plan["residency"])
+    if resident and plan["path"] != "decode_fast":
+        raise ValueError(
+            f"resident schedule requires the decode fast path (single M "
+            f"tile); got path={plan['path']!r} for m={plan['m']}")
+    return bool(resident)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("w_packed", "block_m", "block_n",
-                                    "block_k", "interpret"))
+                                    "block_k", "interpret", "resident"))
 def nvfp4_gemm(x_codes: jax.Array, x_scales: jax.Array,
                w_codes: jax.Array, w_scales: jax.Array,
                w_tensor_scale: jax.Array | None = None,
                w_packed: bool = False,
                block_m: int = 256, block_n: int = 256, block_k: int = 2048,
-               interpret: bool = False) -> jax.Array:
+               interpret: bool = False,
+               bias: jax.Array | None = None,
+               resident: bool | None = None) -> jax.Array:
     """(M, Ka) x (N, Ka) -> (M, N) f32. Ka includes the S augmented channels.
 
     Unpacked weights: ``w_codes`` (N, Ka) uint8, ``w_scales`` (N, Ka/16) f32
     effective scales. Packed weights (``w_packed=True``): ``w_codes``
     (N, Ka/2) uint8 byte pairs, ``w_scales`` (N, Ka/16) uint8 E4M3 codes,
     ``w_tensor_scale`` the FP32 per-tensor scale they are relative to.
+
+    ``bias`` (N,) is added to the f32 accumulator inside the out-tile
+    store (bitwise equal to ``out + bias`` outside, one HBM round trip
+    cheaper). ``resident`` forces the decode resident schedule on/off;
+    None defers to ``plan["residency"]`` (fits-in-VMEM auto).
     """
     m, ka = x_codes.shape
     n = w_codes.shape[0]
@@ -209,7 +465,8 @@ def nvfp4_gemm(x_codes: jax.Array, x_scales: jax.Array,
     wt = (jnp.asarray(w_tensor_scale, jnp.float32).reshape(1)
           if w_tensor_scale is not None else jnp.ones((1,), jnp.float32))
 
-    plan = gemm_plan(m, n, ka, block_m, block_n, block_k)
+    plan = gemm_plan(m, n, ka, block_m, block_n, block_k, w_packed=w_packed)
+    use_resident = _resolve_resident(plan, resident)
     bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
     mp, np_ = plan["mp"], plan["np"]
     nk = ka // bk
@@ -219,40 +476,183 @@ def nvfp4_gemm(x_codes: jax.Array, x_scales: jax.Array,
     w_codes = _pad_rows(w_codes, np_)
     w_scales = _pad_rows(w_scales, np_)
 
+    has_bias = bias is not None
+    operands = [x_codes, x_scales, w_codes, w_scales, wt]
+    if has_bias:
+        b = jnp.asarray(bias, jnp.float32).reshape(n)
+        operands.append(jnp.pad(b, (0, np_ - n)))
+
     wc_cols = bk // 2 if w_packed else bk
     wt_spec = pl.BlockSpec((1,), lambda *_: (0,))
 
-    if plan["path"] == "decode_fast":
-        kernel = functools.partial(_gemm_kernel_decode, w_packed, bk, nk)
+    if use_resident:
+        kernel = functools.partial(_gemm_kernel_decode_resident, w_packed,
+                                   bk, nk, has_bias)
+        wc_full = ka // 2 if w_packed else ka
+        in_specs = [
+            pl.BlockSpec((bm, ka), lambda j: (0, 0)),
+            pl.BlockSpec((bm, ka // GROUP), lambda j: (0, 0)),
+            pl.BlockSpec((bn, wc_full), lambda j: (j, 0)),
+            pl.BlockSpec((bn, ka // GROUP), lambda j: (j, 0)),
+            wt_spec,
+        ]
+        if has_bias:
+            in_specs.append(pl.BlockSpec((bn,), lambda j: (j,)))
+        out = pl.pallas_call(
+            kernel,
+            grid=(np_ // bn,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, ka), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
+    elif plan["path"] == "decode_fast":
+        kernel = functools.partial(_gemm_kernel_decode, w_packed, bk, nk,
+                                   has_bias)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((bm, bk // GROUP), lambda j, k: (0, k)),
+            pl.BlockSpec((bn, wc_cols), lambda j, k: (j, k)),
+            pl.BlockSpec((bn, bk // GROUP), lambda j, k: (j, k)),
+            wt_spec,
+        ]
+        if has_bias:
+            in_specs.append(pl.BlockSpec((bn,), lambda j, k: (j,)))
         out = pl.pallas_call(
             kernel,
             grid=(np_ // bn, nk),
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda j, k: (0, k)),
-                pl.BlockSpec((bm, bk // GROUP), lambda j, k: (0, k)),
-                pl.BlockSpec((bn, wc_cols), lambda j, k: (j, k)),
-                pl.BlockSpec((bn, bk // GROUP), lambda j, k: (j, k)),
-                wt_spec,
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), lambda j, k: (0, j)),
             out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
             interpret=interpret,
-        )(x_codes, x_scales, w_codes, w_scales, wt)
+        )(*operands)
     else:
-        kernel = functools.partial(_gemm_kernel, w_packed, bk)
+        kernel = functools.partial(_gemm_kernel, w_packed, bk, nk, has_bias)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, wc_cols), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk // GROUP), lambda i, j, k: (j, k)),
+            wt_spec,
+        ]
+        if has_bias:
+            in_specs.append(pl.BlockSpec((bn,), lambda i, j, k: (j,)))
+        out = pl.pallas_call(
+            kernel,
+            grid=(mp // bm, np_ // bn, nk),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(*operands)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_packed", "block_m", "block_n",
+                                    "block_k", "out_dtype", "interpret",
+                                    "resident"))
+def nvfp4_gemm_swiglu(x_codes: jax.Array, x_scales: jax.Array,
+                      g_codes: jax.Array, g_scales: jax.Array,
+                      u_codes: jax.Array, u_scales: jax.Array,
+                      g_tensor_scale: jax.Array | None = None,
+                      u_tensor_scale: jax.Array | None = None,
+                      w_packed: bool = False,
+                      block_m: int = 256, block_n: int = 256,
+                      block_k: int = 2048,
+                      out_dtype=jnp.float32,
+                      interpret: bool = False,
+                      resident: bool | None = None) -> jax.Array:
+    """Fused gate/up MLP GEMM: (M, Ka) x 2x(F, Ka) -> silu(g) * u (M, F).
+
+    Both weight operands are decoded against ONE activation tile per grid
+    step (the unfused path reads the quantized activations twice), and the
+    ``silu(g) * u`` product is computed on the VMEM accumulators in
+    ``out_dtype`` before the single HBM store — the intermediate (M, F)
+    gate and up tensors never round-trip through HBM. Bitwise equal to
+    ``silu(gemm(x, g).astype(out_dtype)) * gemm(x, u).astype(out_dtype)``
+    because the per-tile f32 accumulation order is identical.
+    """
+    m, ka = x_codes.shape
+    n = g_codes.shape[0]
+    assert g_codes.shape == u_codes.shape, (g_codes.shape, u_codes.shape)
+    assert g_scales.shape == u_scales.shape, (g_scales.shape, u_scales.shape)
+    ka2 = g_codes.shape[1] * 2 if w_packed else g_codes.shape[1]
+    assert ka == ka2 and ka % GROUP == 0, (ka, ka2)
+    if w_packed:
+        assert g_tensor_scale is not None and u_tensor_scale is not None, \
+            "packed weights need tensor scales"
+    gt = (jnp.asarray(g_tensor_scale, jnp.float32).reshape(1)
+          if g_tensor_scale is not None else jnp.ones((1,), jnp.float32))
+    ut = (jnp.asarray(u_tensor_scale, jnp.float32).reshape(1)
+          if u_tensor_scale is not None else jnp.ones((1,), jnp.float32))
+
+    plan = swiglu_plan(m, n, ka, block_m, block_n, block_k,
+                       w_packed=w_packed,
+                       out_bytes=jnp.dtype(out_dtype).itemsize)
+    use_resident = _resolve_resident(plan, resident)
+    bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
+    mp, np_ = plan["mp"], plan["np"]
+    nk = ka // bk
+
+    x_codes = _pad_rows(x_codes, mp)
+    x_scales = _pad_rows(x_scales, mp)
+    g_codes = _pad_rows(g_codes, np_)
+    g_scales = _pad_rows(g_scales, np_)
+    u_codes = _pad_rows(u_codes, np_)
+    u_scales = _pad_rows(u_scales, np_)
+    operands = [x_codes, x_scales, g_codes, g_scales, gt, u_codes,
+                u_scales, ut]
+
+    wc_cols = bk // 2 if w_packed else bk
+    wt_spec = pl.BlockSpec((1,), lambda *_: (0,))
+
+    if use_resident:
+        kernel = functools.partial(_swiglu_kernel_decode_resident, w_packed,
+                                   bk, nk, out_dtype)
+        wc_full = ka // 2 if w_packed else ka
+        w_specs = [
+            pl.BlockSpec((bn, wc_full), lambda j: (j, 0)),
+            pl.BlockSpec((bn, ka // GROUP), lambda j: (j, 0)),
+            wt_spec,
+        ]
+        out = pl.pallas_call(
+            kernel,
+            grid=(np_ // bn,),
+            in_specs=[
+                pl.BlockSpec((bm, ka), lambda j: (0, 0)),
+                pl.BlockSpec((bm, ka // GROUP), lambda j: (0, 0)),
+                *w_specs, *w_specs,
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, ka), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
+    else:
+        # the generic dual-acc schedule doubles as the streamed decode
+        # fast path when ni == 1 (it already stores once at the last k)
+        kernel = functools.partial(_swiglu_kernel, w_packed, bk, nk,
+                                   out_dtype)
+        w_specs = [
+            pl.BlockSpec((bn, wc_cols), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk // GROUP), lambda i, j, k: (j, k)),
+            wt_spec,
+        ]
         out = pl.pallas_call(
             kernel,
             grid=(mp // bm, np_ // bn, nk),
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
                 pl.BlockSpec((bm, bk // GROUP), lambda i, j, k: (i, k)),
-                pl.BlockSpec((bn, wc_cols), lambda i, j, k: (j, k)),
-                pl.BlockSpec((bn, bk // GROUP), lambda i, j, k: (j, k)),
-                wt_spec,
+                *w_specs, *w_specs,
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                            pltpu.VMEM((bm, bn), jnp.float32)],
             interpret=interpret,
-        )(x_codes, x_scales, w_codes, w_scales, wt)
+        )(*operands)
     return out[:m, :n]

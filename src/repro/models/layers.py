@@ -24,7 +24,7 @@ from repro.core import quant as Q
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.kernels import ops as KOPS
 from repro.kernels.arc_fused_quant import arc_fused_quantize
-from repro.kernels.nvfp4_gemm import nvfp4_gemm
+from repro.kernels.nvfp4_gemm import nvfp4_gemm, nvfp4_gemm_swiglu
 from repro.parallel.sharding import maybe_shard
 
 
@@ -47,6 +47,10 @@ class LayerCtx:
     # input arrives *pre-norm* (the norm is folded into the quantization
     # pass — in-kernel for backend="pallas", in f32 jnp for "reference")
     fused_gamma: Optional[Dict[str, jax.Array]] = None
+    # fused swiglu epilogue: gate-linear name -> up-linear name for pairs
+    # sharing one quantization plan (see PlanBundle.fused) — eligible for
+    # the dual-weight nvfp4_gemm_swiglu launch on the pallas path
+    fused_pairs: Optional[Dict[str, str]] = None
 
     def plan_for(self, name: str):
         if self.plan_arrays is None or name not in self.plan_arrays:
@@ -74,11 +78,20 @@ def dense(ctx: LayerCtx, name: str, x: jax.Array, w: Any,
 
     method = ctx.quant.method if quantize else "none"
 
+    # fused bias epilogue: on the deployed pallas path the bias adds onto
+    # the f32 accumulator inside the GEMM's out-tile store instead of as a
+    # follow-up XLA op (bit-identical: same f32 add, one fewer (M, N)
+    # round trip)
+    fuse_bias = (b is not None and isinstance(w, Q.QTensor)
+                 and method == "arc" and ctx.quant.backend == "pallas"
+                 and ctx.quant.fuse_epilogue)
+
     if isinstance(w, Q.QTensor):
-        y = _deployed_matmul(ctx, name, x, w, method)
+        y = _deployed_matmul(ctx, name, x, w, method,
+                             bias=b if fuse_bias else None)
     else:
         y = _simulated_matmul(ctx, name, x, w, method)
-    if b is not None:
+    if b is not None and not fuse_bias:
         y = y + b
     return y.astype(in_dtype)
 
@@ -163,7 +176,8 @@ def _arc_sim_matmul(x, w, order, s: int, q: QuantConfig):
     return Q.qmatmul(x_aug, w_aug)
 
 
-def _deployed_matmul(ctx: LayerCtx, name: str, x, w: Q.QTensor, method: str):
+def _deployed_matmul(ctx: LayerCtx, name: str, x, w: Q.QTensor, method: str,
+                     bias=None):
     """Weights are pre-quantized offline (QTensor); activations online.
 
     The ARC path routes through the selected kernel backend: "reference"
@@ -195,7 +209,8 @@ def _deployed_matmul(ctx: LayerCtx, name: str, x, w: Q.QTensor, method: str):
                     "backend='pallas' needs calibrated activation scales: "
                     "set QuantConfig.act_scale='calibrated' and build plans "
                     "with make_plan_bundle (act_scales entry)")
-            return _arc_pallas_matmul(ctx, xf, w, arrs["order"], s, ts, gamma)
+            return _arc_pallas_matmul(ctx, xf, w, arrs["order"], s, ts, gamma,
+                                      bias=bias)
         return _arc_reference_matmul(ctx, xf, w, arrs["order"], s, ts, gamma)
     raise ValueError(f"deployed path supports rtn/arc, got {method}")
 
@@ -230,9 +245,11 @@ def _arc_reference_matmul(ctx: LayerCtx, xf, w: Q.QTensor, order, s: int,
 
 
 def _arc_pallas_matmul(ctx: LayerCtx, xf, w: Q.QTensor, order, s: int,
-                       ts, gamma):
+                       ts, gamma, bias=None):
     """Fused Pallas pipeline: one quant launch over every row (all serving
-    slots batched together), one unified NVFP4 GEMM over packed weights."""
+    slots batched together), one unified NVFP4 GEMM over packed weights.
+    ``bias`` (N,) rides into the GEMM's fused epilogue (f32 add on the
+    accumulator at the out-tile store)."""
     q = ctx.quant
     lead, k = xf.shape[:-1], xf.shape[-1]
     x2 = xf.reshape(-1, k)
@@ -248,8 +265,71 @@ def _arc_pallas_matmul(ctx: LayerCtx, xf, w: Q.QTensor, order, s: int,
     w_codes, w_scales, w_t, w_packed = KOPS.qtensor_gemm_operands(w)
     y = nvfp4_gemm(x_codes, x_scales, w_codes, w_scales,
                    w_tensor_scale=w_t, w_packed=w_packed,
-                   interpret=q.interpret)
+                   interpret=q.interpret, bias=bias)
     return y.reshape(*lead, y.shape[-1])
+
+
+def _can_fuse_swiglu(ctx: LayerCtx, gname: str, uname: str, wg, wu) -> bool:
+    """True when a gate/up pair may run the fused swiglu GEMM epilogue.
+
+    Requires the deployed pallas path (QTensor weights, arc method,
+    calibrated activation scales) and a plan-time guarantee that both
+    linears share one quantization plan — ``fused_pairs`` is only
+    populated for pairs whose order/S/act_scales match exactly, so the
+    single ``arc_fused_quantize`` launch feeds both weights the operands
+    each would have quantized for itself (bit-identical to unfused)."""
+    q = ctx.quant
+    if not (q.method == "arc" and q.backend == "pallas" and q.fuse_epilogue):
+        return False
+    if ctx.capture is not None:          # calibration captures per-linear
+        return False
+    if not (isinstance(wg, Q.QTensor) and isinstance(wu, Q.QTensor)):
+        return False
+    if wg.packed != wu.packed:
+        return False
+    if (ctx.fused_pairs or {}).get(gname) != uname:
+        return False
+    arrs, _ = ctx.plan_for(gname)
+    return bool(q.act_scale == "calibrated" and arrs
+                and "act_scales" in arrs)
+
+
+def _swiglu_pallas(ctx: LayerCtx, gname: str, x: jax.Array,
+                   wg: Q.QTensor, wu: Q.QTensor) -> jax.Array:
+    """Fused gate/up MLP on the pallas path.
+
+    ONE quantization launch (gate's plan — the pair is guaranteed
+    plan-identical by ``_can_fuse_swiglu``) and ONE dual-weight GEMM whose
+    epilogue computes ``silu(g) * u`` on the VMEM accumulators, so the
+    activations are read and quantized once and the (M, F) gate/up
+    intermediates never round-trip HBM."""
+    q = ctx.quant
+    arrs, s = ctx.plan_for(gname)
+    gamma = (ctx.fused_gamma or {}).get(gname)
+    ts = arrs["act_scales"]
+    xf = x.astype(jnp.float32)
+    lead, k = xf.shape[:-1], xf.shape[-1]
+    x2 = xf.reshape(-1, k)
+    if gamma is None:
+        gamma_arr = jnp.ones((k,), jnp.float32)
+        apply_norm = False
+    else:
+        gamma_arr = gamma
+        apply_norm = True
+    x_codes, x_scales = arc_fused_quantize(
+        x2, gamma_arr, arrs["order"], ts, s, eps=ctx.cfg.norm_eps,
+        apply_norm=apply_norm, interpret=q.interpret)
+    g_codes, g_scales, g_t, g_packed = KOPS.qtensor_gemm_operands(wg)
+    u_codes, u_scales, u_t, _ = KOPS.qtensor_gemm_operands(wu)
+    # out_dtype = the activation dtype: the in-kernel epilogue rounds the
+    # f32 accumulators exactly like dense() does, computes silu in f32
+    # (the canonical _swiglu definition) and rounds the product once
+    h = nvfp4_gemm_swiglu(x_codes, x_scales, g_codes, g_scales,
+                          u_codes, u_scales,
+                          g_tensor_scale=g_t, u_tensor_scale=u_t,
+                          w_packed=g_packed, out_dtype=x.dtype,
+                          interpret=q.interpret)
+    return h.reshape(*lead, h.shape[-1])
 
 
 # ---------------------------------------------------------------------------
@@ -691,10 +771,29 @@ def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
     }
 
 
+def _swiglu(g: jax.Array, u: jax.Array) -> jax.Array:
+    """The canonical swiglu epilogue: silu computed in f32 on the (already
+    rounded) GEMM outputs, product rounded once to the activation dtype.
+
+    Spelled out explicitly — rather than ``silu(g) * u`` in bf16 — so the
+    numerics are the same whether XLA compiles it (bf16 ops get per-op
+    f32-compute-then-round legalization, and the final round can fold
+    into an f32 consumer) or the Pallas swiglu kernel computes it on its
+    VMEM accumulators: one definition, one rounding point, bit-stable
+    across eager/jit/fused."""
+    h = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+    return h.astype(g.dtype)
+
+
 def mlp_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array) -> jax.Array:
-    g = dense(ctx, f"{name}.w_gate", x, params["w_gate"])
-    u = dense(ctx, f"{name}.w_up", x, params["w_up"])
-    h = jax.nn.silu(g) * u
+    gname, uname = f"{name}.w_gate", f"{name}.w_up"
+    wg, wu = params["w_gate"], params["w_up"]
+    if _can_fuse_swiglu(ctx, gname, uname, wg, wu):
+        h = _swiglu_pallas(ctx, gname, x, wg, wu)
+    else:
+        g = dense(ctx, gname, x, wg)
+        u = dense(ctx, uname, x, wu)
+        h = _swiglu(g, u)
     h = maybe_shard(h, "batch", None, "ff")
     y = dense(ctx, f"{name}.w_down", h, params["w_down"])
     return maybe_shard(y, "batch", None, None)
@@ -744,7 +843,15 @@ def moe_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array):
     ce = jnp.mean(jax.nn.one_hot(eidx[..., 0], E), axis=(0, 1))
     aux = jnp.sum(me * ce) * E * cfg.router_aux_loss
 
-    cap = max(int(np.ceil(K * S / E * cfg.capacity_factor)), 1)
+    if cfg.moe_dropless:
+        # dropless dispatch: S*K slots per group hold every routed
+        # (token, expert) assignment even if all tokens pick one expert —
+        # rank < cap always, no token drops, and prefill numerics become
+        # independent of the batch the token happens to share (which is
+        # what re-enables prefix-cache sharing on MoE configs)
+        cap = S * K
+    else:
+        cap = max(int(np.ceil(K * S / E * cfg.capacity_factor)), 1)
 
     def dispatch_group(xg, eg, gg):
         """xg: (S, d); eg/gg: (S, K) -> dispatched tokens + per-slot
@@ -777,9 +884,13 @@ def moe_layer(ctx: LayerCtx, name: str, params: Dict, x: jax.Array):
             ctx.capture is not None:
         # fold the group dim into capacity for the per-expert quantized path
         gb = ge.transpose(1, 0, 2, 3).reshape(E, B * cap, d)
-        h = _expert_dense(ctx, f"{name}.experts_gate", gb, wg)
-        u = _expert_dense(ctx, f"{name}.experts_up", gb, wu)
-        h = jax.nn.silu(h) * u
+        gname, uname = f"{name}.experts_gate", f"{name}.experts_up"
+        if _can_fuse_swiglu(ctx, gname, uname, wg, wu):
+            h = _expert_swiglu(ctx, gname, gb, wg, wu)
+        else:
+            h = _expert_dense(ctx, gname, gb, wg)
+            u = _expert_dense(ctx, uname, gb, wu)
+            h = _swiglu(h, u)
         h = maybe_shard(h, "experts", None, None)
         ye = _expert_dense(ctx, f"{name}.experts_down", h, wd)
         ye = ye.reshape(E, B, cap, d).transpose(1, 0, 2, 3)
@@ -823,6 +934,21 @@ def _expert_dense(ctx: LayerCtx, name: str, x: jax.Array, w: Any) -> jax.Array:
     sub = ctx
     return jax.vmap(lambda xe, we: dense(sub, name, xe, we),
                     in_axes=(0, w_axes))(x, w)
+
+
+def _expert_swiglu(ctx: LayerCtx, gname: str, x: jax.Array,
+                   wg: Q.QTensor, wu: Q.QTensor) -> jax.Array:
+    """Per-expert fused gate/up linear via vmap over the expert dim.
+
+    The expert input is pre-normed by the caller (fused_gamma never names
+    MoE linears), so each expert runs quantize-once + dual-weight swiglu
+    GEMM exactly like the dense fused MLP."""
+    def _axes(w: Q.QTensor):
+        ts_ax = 0 if (w.tensor_scale is not None and w.tensor_scale.ndim) else None
+        return Q.QTensor(0, 0, w.fmt_name, w.valid_k, ts_ax, w.packed)
+    sub = ctx
+    return jax.vmap(lambda xe, wge, wue: _swiglu_pallas(sub, gname, xe, wge, wue),
+                    in_axes=(0, _axes(wg), _axes(wu)))(x, wg, wu)
 
 
 # ---------------------------------------------------------------------------

@@ -46,10 +46,14 @@ class PlanBundle:
 
     arrays: name -> {"order": (P, K) i32, "smooth": (P, K) f32} (traced)
     meta:   name -> S (static outlier count, shared across periods)
+    fused:  gate-linear name -> up-linear name for pairs that share one
+            quantization plan (same order/S/act_scales) and are therefore
+            eligible for the fused swiglu GEMM epilogue (static strings)
     """
 
     arrays: Dict[str, Dict[str, jax.Array]]
     meta: Dict[str, int]
+    fused: Dict[str, str] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +389,7 @@ def forward(params: Dict, cfg: ModelConfig,
     period = cfg.period
     plan_meta = plans.meta if plans is not None else {}
     plan_arrays = plans.arrays if plans is not None else {}
+    plan_fused = (getattr(plans, "fused", None) or {}) if plans is not None else {}
     has_cache = cache is not None
 
     def body(x, xs):
@@ -415,6 +420,9 @@ def forward(params: Dict, cfg: ModelConfig,
                     if k.startswith(pref)}
             meta = {k[len(pref):]: v for k, v in plan_meta.items()
                     if k.startswith(pref)}
+            fpairs = {k[len(pref):]: v[len(pref):]
+                      for k, v in plan_fused.items()
+                      if k.startswith(pref) and v.startswith(pref)}
             caps_i: Dict[str, jax.Array] = {}
             # deployed fused-norm serving: when this position's linears are
             # offline-quantized QTensors on the ARC serving path
@@ -442,7 +450,8 @@ def forward(params: Dict, cfg: ModelConfig,
             ctx = L.LayerCtx(cfg, quant, plan_arrays=arrs or None,
                              plan_meta=meta or None,
                              capture=caps_i if capture else None,
-                             fused_gamma=fused_gamma or None)
+                             fused_gamma=fused_gamma or None,
+                             fused_pairs=fpairs or None)
 
             h = x if fuse_attn else L.rmsnorm(x, p["norm1"], cfg.norm_eps)
             nc = {}

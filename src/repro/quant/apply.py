@@ -67,7 +67,44 @@ def make_plan_bundle(stats: Dict[str, jax.Array], cfg: ModelConfig,
                     np.where(np.isfinite(smooth) & (smooth > 0), smooth, 1.0))
         arrays[name] = entry
         meta[name] = s_max
-    return PlanBundle(arrays=arrays, meta=meta)
+    return PlanBundle(arrays=arrays, meta=meta,
+                      fused=_fused_swiglu_pairs(arrays, meta))
+
+
+# gate-leaf -> up-leaf suffixes of the swiglu pairs the serving path may
+# fuse into one dual-weight GEMM launch (dense MLP + per-expert MoE FFN)
+_SWIGLU_PAIRS = (("mlp.w_gate", "mlp.w_up"),
+                 ("moe.experts_gate", "moe.experts_up"))
+
+
+def _fused_swiglu_pairs(arrays: Dict[str, Dict[str, jax.Array]],
+                        meta: Dict[str, int]) -> Dict[str, str]:
+    """Gate-name -> up-name pairs safe for the fused swiglu epilogue.
+
+    A pair qualifies only when both linears ended up with an *identical*
+    quantization plan — same S, same channel order, same calibrated
+    activation scales — because the fused kernel quantizes the shared
+    input once (with the gate's plan) and feeds both weights. Gate and up
+    see the same activations, so calibration normally produces identical
+    plans; any divergence (e.g. hand-edited plans) simply drops the pair
+    back to separate launches.
+    """
+    fused: Dict[str, str] = {}
+    for name in arrays:
+        for gleaf, uleaf in _SWIGLU_PAIRS:
+            if not name.endswith("." + gleaf):
+                continue
+            sib = name[: -len(gleaf)] + uleaf
+            if sib not in arrays or meta.get(sib) != meta.get(name):
+                continue
+            if not np.array_equal(np.asarray(arrays[name]["order"]),
+                                  np.asarray(arrays[sib]["order"])):
+                continue
+            if not np.array_equal(np.asarray(arrays[name]["act_scales"]),
+                                  np.asarray(arrays[sib]["act_scales"])):
+                continue
+            fused[name] = sib
+    return fused
 
 
 def _weight_absmax(w) -> np.ndarray:

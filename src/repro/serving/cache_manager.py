@@ -157,16 +157,19 @@ class PagedCacheManager:
         # prefix sharing needs (a) every layer's state in pages — a
         # skipped prefill would silently lose sliding-window rings and
         # SSM/RWKV recurrent state (slot-resident) — and (b) per-token
-        # prefill numerics: the capacity-dropping MoE dispatch couples
-        # tokens across the (padded) sequence (cap scales with S, so
-        # which tokens an expert drops depends on prefill shape), making
-        # a prefix computed under one request's shape not bit-identical
-        # to another's. Configs failing either run unshared.
+        # prefill numerics. Dropless MoE dispatch (cfg.moe_dropless,
+        # cap = S*K) gives every routed assignment a slot, so no token's
+        # expert output depends on what the (padded) sequence around it
+        # routed and MoE prefixes are shareable; the legacy
+        # capacity-dropping dispatch couples tokens across the sequence
+        # (which tokens an expert drops depends on prefill shape) and
+        # runs unshared. Configs failing either condition run unshared.
+        moe_ok = (getattr(cfg, "moe_dropless", False)
+                  or all(f != MOE_FFN for f in cfg.ffn_pattern))
         self.prefix_enabled = (bool(prefix_cache)
                                and all(m == FULL_ATTN
                                        for m in cfg.mixer_pattern)
-                               and all(f != MOE_FFN
-                                       for f in cfg.ffn_pattern)
+                               and moe_ok
                                and cfg.family != "ssm")
         self.cache = lm.init_paged_cache(cfg, num_slots, num_pages,
                                          block_size, self.padded_len, dtype)

@@ -1,0 +1,331 @@
+"""Fused GEMM epilogues, decode residency, and dropless MoE dispatch.
+
+Covers the deployed hot-path extensions end to end:
+
+  * kernel level — ``nvfp4_gemm_swiglu`` (dual-weight gate/up launch with
+    the in-VMEM silu(g)*u epilogue) and the bias epilogue are bitwise
+    equal to the unfused chains; the decode resident schedule returns
+    the exact streamed result while decoding each tile once
+  * plan level — ``gemm_plan`` rejects block sizes that would split the
+    packed byte-pair / scale-group unit; ``swiglu_plan`` prices the
+    fused launch at strictly fewer HBM bytes than two back-to-back GEMMs
+  * layer / forward level — fused pairs produce bit-identical MLP and
+    expert-FFN outputs under jit, and full forward() greedy numerics are
+    unchanged with ``fuse_epilogue`` on vs off
+  * MoE dispatch — dropless (cap = S*K) matches an ample-capacity run
+    bitwise, and the paged engine's prefix cache is enabled (and shares
+    pages bit-identically) for MoE configs under dropless
+"""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import QuantConfig
+from repro.kernels import ops as KOPS
+from repro.kernels.arc_fused_quant import arc_fused_quantize
+from repro.kernels.nvfp4_gemm import (GROUP, gemm_plan, nvfp4_gemm,
+                                      nvfp4_gemm_swiglu, swiglu_plan)
+from repro.models import capture_stats, init_params
+from repro.models import layers as L
+from repro.models.lm import forward, init_cache
+from repro.quant import make_plan_bundle, quantize_weights_for_serving
+from repro.serving import PagedServingEngine, Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    """qwen2-1.5b proxy (has MLP bias-free gate/up + qkv bias): packed
+    weights, plans (with detected fused pairs), and period-0 slices."""
+    cfg = ARCHS["qwen2-1.5b"].reduced(layers=1)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    stats = capture_stats(params, cfg, tokens=toks)
+    quant = QuantConfig(method="arc", backend="pallas",
+                        act_scale="calibrated", interpret=True)
+    plans = make_plan_bundle(stats, cfg, quant, params)
+    qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                           pack=True)
+    return cfg, quant, plans, qparams
+
+
+def _mlp_operands(plans, qparams):
+    """Period-0 gate/up operands + a quantized activation at M rows."""
+    arrs = {k[3:]: jax.tree.map(lambda v: v[0], v)
+            for k, v in plans.arrays.items() if k.startswith("b0.")}
+    meta = {k[3:]: v for k, v in plans.meta.items() if k.startswith("b0.")}
+    mlp = {k: jax.tree.map(lambda v: v[0], v)
+           for k, v in qparams["blocks"][0]["mlp"].items()}
+    return arrs, meta, mlp
+
+
+def _quantize_x(m, k, arrs, meta, seed=3):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+    xc, xs = arc_fused_quantize(x, jnp.ones((k,), jnp.float32),
+                                arrs["mlp.w_gate"]["order"],
+                                arrs["mlp.w_gate"]["act_scales"],
+                                meta["mlp.w_gate"], apply_norm=False,
+                                interpret=True)
+    return xc, xs
+
+
+# ---------------------------------------------------------------------------
+# plan validation (satellite): reject blocks that split the packed unit
+# ---------------------------------------------------------------------------
+
+def test_gemm_plan_rejects_misaligned_block_k():
+    unit = 2 * GROUP
+    for bad in (unit - 1, unit + 1, unit // 2, 3 * unit + 7):
+        with pytest.raises(ValueError, match="packed byte-pair"):
+            gemm_plan(8, 256, 4 * unit, block_k=bad)
+    with pytest.raises(ValueError, match="positive tile size"):
+        gemm_plan(8, 256, 4 * unit, block_m=0)
+    # aligned multiples are accepted
+    for ok in (unit, 2 * unit, 64 * unit):
+        assert gemm_plan(8, 256, 64 * unit, block_k=ok)["bk"] % unit == 0
+
+
+def test_swiglu_plan_saves_hbm_and_decodes():
+    """The fused launch reads the activation once (not per projection)
+    and writes one output tile instead of two full outputs + one fused
+    read-back of each."""
+    m, n, ka = 64, 256, 2048
+    single = gemm_plan(m, n, ka)
+    fused = swiglu_plan(m, n, ka, out_bytes=2)
+    assert fused["kernel"] == "nvfp4_gemm_swiglu"
+    assert fused["hbm_read_bytes"] < 2 * single["hbm_read_bytes"]
+    assert fused["hbm_write_bytes"] < 2 * single["hbm_write_bytes"]
+    # both packed weights still decoded exactly once per (j, k) tile
+    assert fused["weight_tile_decodes"] == 2 * single["weight_tile_decodes"]
+
+
+def test_resident_plan_decodes_activation_once():
+    n, ka = 256, 2048
+    plan = gemm_plan(4, n, ka)          # decode shape
+    assert plan["path"] == "decode_fast" and plan["residency"]
+    assert plan["x_tile_decodes"] == 1
+    streamed = gemm_plan(4, n, ka, block_k=ka // 4)
+    assert streamed["x_tile_decodes"] >= 1
+    big = gemm_plan(512, n, ka)         # prefill shape never resident
+    assert not big["residency"]
+    with pytest.raises(ValueError, match="decode fast path"):
+        nvfp4_gemm(jnp.zeros((512, ka), jnp.uint8),
+                   jnp.zeros((512, ka // GROUP), jnp.uint8),
+                   jnp.zeros((n, ka // 2), jnp.uint8),
+                   jnp.zeros((n, ka // GROUP), jnp.uint8),
+                   w_tensor_scale=jnp.float32(1.0), w_packed=True,
+                   interpret=True, resident=True)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level bitwise parity (fast interpret-mode smoke)
+# ---------------------------------------------------------------------------
+
+def test_kernel_swiglu_bitwise(dense_setup):
+    cfg, quant, plans, qparams = dense_setup
+    arrs, meta, mlp = _mlp_operands(plans, qparams)
+    xc, xs = _quantize_x(5, cfg.d_model, arrs, meta)
+    gc, gs, gt, gp = KOPS.qtensor_gemm_operands(mlp["w_gate"])
+    uc, us, ut, _ = KOPS.qtensor_gemm_operands(mlp["w_up"])
+    yg = nvfp4_gemm(xc, xs, gc, gs, w_tensor_scale=gt, w_packed=gp,
+                    interpret=True)
+    yu = nvfp4_gemm(xc, xs, uc, us, w_tensor_scale=ut, w_packed=gp,
+                    interpret=True)
+    for dt in (jnp.bfloat16, jnp.float32):
+        ref = L._swiglu(yg.astype(dt), yu.astype(dt))
+        out = nvfp4_gemm_swiglu(xc, xs, gc, gs, uc, us, g_tensor_scale=gt,
+                                u_tensor_scale=ut, w_packed=gp,
+                                out_dtype=dt, interpret=True)
+        assert out.dtype == dt
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_kernel_bias_epilogue_bitwise(dense_setup):
+    cfg, quant, plans, qparams = dense_setup
+    arrs, meta, _ = _mlp_operands(plans, qparams)
+    blk = {k: jax.tree.map(lambda v: v[0], v)
+           for k, v in qparams["blocks"][0]["attn"].items()}
+    xc, xs = _quantize_x(4, cfg.d_model, arrs, meta, seed=5)
+    wc, ws, wt, wp = KOPS.qtensor_gemm_operands(blk["wq"])
+    b = jax.random.normal(jax.random.PRNGKey(6), (wc.shape[0],), jnp.float32)
+    base = nvfp4_gemm(xc, xs, wc, ws, w_tensor_scale=wt, w_packed=wp,
+                      interpret=True)
+    fused = nvfp4_gemm(xc, xs, wc, ws, w_tensor_scale=wt, w_packed=wp,
+                       interpret=True, bias=b)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(base + b))
+
+
+def test_kernel_resident_bitwise(dense_setup):
+    cfg, quant, plans, qparams = dense_setup
+    arrs, meta, mlp = _mlp_operands(plans, qparams)
+    xc, xs = _quantize_x(4, cfg.d_model, arrs, meta, seed=7)
+    gc, gs, gt, gp = KOPS.qtensor_gemm_operands(mlp["w_gate"])
+    uc, us, ut, _ = KOPS.qtensor_gemm_operands(mlp["w_up"])
+    on = nvfp4_gemm(xc, xs, gc, gs, w_tensor_scale=gt, w_packed=gp,
+                    interpret=True, resident=True)
+    off = nvfp4_gemm(xc, xs, gc, gs, w_tensor_scale=gt, w_packed=gp,
+                     interpret=True, resident=False)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    # the fused swiglu launch honors the same residency toggle
+    s_on = nvfp4_gemm_swiglu(xc, xs, gc, gs, uc, us, g_tensor_scale=gt,
+                             u_tensor_scale=ut, w_packed=gp,
+                             interpret=True, resident=True)
+    s_off = nvfp4_gemm_swiglu(xc, xs, gc, gs, uc, us, g_tensor_scale=gt,
+                              u_tensor_scale=ut, w_packed=gp,
+                              interpret=True, resident=False)
+    np.testing.assert_array_equal(np.asarray(s_on), np.asarray(s_off))
+
+
+# ---------------------------------------------------------------------------
+# layer-level parity under jit (the epilogue must be compilation-stable)
+# ---------------------------------------------------------------------------
+
+def test_mlp_layer_fused_parity_under_jit(dense_setup):
+    cfg, quant, plans, qparams = dense_setup
+    arrs, meta, mlp = _mlp_operands(plans, qparams)
+    assert plans.fused.get("b0.mlp.w_gate") == "b0.mlp.w_up"
+    ctx_f = L.LayerCtx(cfg, quant, plan_arrays=arrs, plan_meta=meta,
+                       fused_pairs={"mlp.w_gate": "mlp.w_up"})
+    ctx_u = L.LayerCtx(cfg, quant, plan_arrays=arrs, plan_meta=meta,
+                       fused_pairs=None)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 5, cfg.d_model),
+                          jnp.bfloat16)
+    y_f = jax.jit(lambda v: L.mlp_layer(ctx_f, "mlp", mlp, v))(x)
+    y_u = jax.jit(lambda v: L.mlp_layer(ctx_u, "mlp", mlp, v))(x)
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+
+
+def test_forward_fused_parity(dense_setup):
+    """forward() with detected fused pairs == forward() with fusion
+    stripped from the plan bundle, bit-for-bit — prefill and cache."""
+    cfg, quant, plans, qparams = dense_setup
+    plans_u = dataclasses.replace(plans, fused={})
+    toks = jax.random.randint(jax.random.PRNGKey(11), (1, 5),
+                              0, cfg.vocab_size)
+    lf, _, _ = forward(qparams, cfg, tokens=toks, quant=quant, plans=plans)
+    lu, _, _ = forward(qparams, cfg, tokens=toks, quant=quant, plans=plans_u)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lu))
+    cache = init_cache(cfg, 1, 16)
+    cf, _, _ = forward(qparams, cfg, tokens=toks, cache=cache, quant=quant,
+                       plans=plans)
+    cu, _, _ = forward(qparams, cfg, tokens=toks, cache=cache, quant=quant,
+                       plans=plans_u)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cu))
+
+
+# ---------------------------------------------------------------------------
+# dropless MoE dispatch
+# ---------------------------------------------------------------------------
+
+def test_moe_dropless_matches_ample_capacity():
+    """cap = S*K drops nothing, so an explicit capacity run with enough
+    slots for every token (capacity_factor = E) is bit-identical."""
+    cfg = ARCHS["qwen3-moe-235b-a22b"].reduced(layers=1)
+    assert cfg.moe_dropless
+    params = init_params(cfg, KEY)
+    cfg_cap = dataclasses.replace(cfg, moe_dropless=False,
+                                  capacity_factor=float(cfg.num_experts))
+    for shape in ((2, 16), (1, 16), (3, 16)):
+        toks = jax.random.randint(jax.random.PRNGKey(13), shape, 0,
+                                  cfg.vocab_size)
+        la, _, _ = forward(params, cfg, tokens=toks)
+        lb, _, _ = forward(params, cfg_cap, tokens=toks)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_moe_dropless_batch_shape_independent():
+    """No capacity truncation means a token's expert mix can't change
+    with who else is in the batch: row 0 of a 1-seq batch == row 0 of a
+    3-seq batch, bitwise."""
+    cfg = ARCHS["qwen3-moe-235b-a22b"].reduced(layers=1)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(17), (3, 16), 0,
+                              cfg.vocab_size)
+    l3, _, _ = forward(params, cfg, tokens=toks)
+    l1, _, _ = forward(params, cfg, tokens=toks[:1])
+    np.testing.assert_array_equal(np.asarray(l1[0]), np.asarray(l3[0]))
+
+
+# ---------------------------------------------------------------------------
+# engine level (interpret-mode Pallas end to end: slow job)
+# ---------------------------------------------------------------------------
+
+def _moe_setup():
+    cfg = ARCHS["qwen3-moe-235b-a22b"].reduced(layers=2)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    stats = capture_stats(params, cfg, tokens=toks)
+    quant = QuantConfig(method="arc", interpret=True)
+    plans = make_plan_bundle(stats, cfg, quant, params)
+    qparams = quantize_weights_for_serving(params, cfg, quant, plans,
+                                           pack=True)
+    return cfg, quant, plans, qparams
+
+
+def _shared_prefix_reqs(cfg, n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    return [Request(prompt=np.concatenate(
+                [sysp, rng.integers(0, cfg.vocab_size, 3 + i)
+                 .astype(np.int32)]), max_new_tokens=4)
+            for i in range(n)]
+
+
+@pytest.mark.slow
+def test_engine_fused_vs_unfused_greedy_parity(dense_setup):
+    cfg, quant, plans, qparams = dense_setup
+    reqs = _shared_prefix_reqs(cfg)
+    toks = {}
+    for fuse in (True, False):
+        q = dataclasses.replace(quant, fuse_epilogue=fuse)
+        eng = ServingEngine(qparams, cfg, q, plans, batch_size=2,
+                            max_len=64, backend="pallas", interpret=True)
+        served = eng.run(copy.deepcopy(reqs))
+        assert all(r.done for r in served)
+        toks[fuse] = [r.out_tokens for r in served]
+    assert toks[True] == toks[False]
+
+
+@pytest.mark.slow
+def test_moe_engine_fused_vs_unfused_greedy_parity():
+    cfg, quant, plans, qparams = _moe_setup()
+    assert any("experts_gate" in k for k in plans.fused)
+    reqs = _shared_prefix_reqs(cfg, seed=1)
+    toks = {}
+    for fuse in (True, False):
+        q = dataclasses.replace(quant, fuse_epilogue=fuse)
+        eng = ServingEngine(qparams, cfg, q, plans, batch_size=2,
+                            max_len=64, backend="pallas", interpret=True)
+        served = eng.run(copy.deepcopy(reqs))
+        toks[fuse] = [r.out_tokens for r in served]
+    assert toks[True] == toks[False]
+
+
+@pytest.mark.slow
+def test_moe_prefix_cache_shares_and_matches():
+    """Dropless dispatch makes MoE prefill batch-shape independent, so
+    the paged engine's prefix cache is enabled for MoE configs — pages
+    are actually shared and greedy tokens are unchanged."""
+    cfg, quant, plans, qparams = _moe_setup()
+    reqs = _shared_prefix_reqs(cfg, seed=1)
+    kw = dict(batch_size=2, max_len=64, backend="pallas", interpret=True)
+    on = PagedServingEngine(qparams, cfg, quant, plans, prefix_cache=True,
+                            **kw)
+    assert on.make_core().pool.prefix_enabled
+    off = PagedServingEngine(qparams, cfg, quant, plans, prefix_cache=False,
+                             **kw)
+    t_on = [r.out_tokens for r in on.run(copy.deepcopy(reqs))]
+    t_off = [r.out_tokens for r in off.run(copy.deepcopy(reqs))]
+    assert t_on == t_off
+    assert on.last_stats.cached_prefix_tokens > 0
+    # the gate still closes when dispatch can drop tokens
+    cfg_cap = dataclasses.replace(cfg, moe_dropless=False)
+    capped = PagedServingEngine(qparams, cfg_cap, quant, plans,
+                                prefix_cache=True, **kw)
+    assert not capped.make_core().pool.prefix_enabled

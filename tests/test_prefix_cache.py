@@ -16,10 +16,10 @@ Three layers of coverage:
     cached + referenced pages always partition the pool.
 
 The fast tests drive an unquantized (method="none") reduced dense model;
-the arc-quantized architecture matrix (dense/MoE/SSM/hybrid — where
-non-pageable state or shape-coupled MoE dispatch must silently disable
-sharing while staying correct) runs under the `slow` marker with the
-other end-to-end serving suites.
+the arc-quantized architecture matrix (dense/MoE/SSM/hybrid — MoE now
+shares under the default dropless dispatch, while non-pageable SSM/ring
+state must still silently disable sharing while staying correct) runs
+under the `slow` marker with the other end-to-end serving suites.
 """
 import copy
 
@@ -463,13 +463,14 @@ def test_randomized_allocation_invariants(ops):
 # Arc-quantized architecture matrix (slow): the acceptance criterion
 # ---------------------------------------------------------------------------
 
-# dense attention shares; MoE must silently disable (capacity-dropping
-# dispatch couples tokens across the prefill shape, so a shared prefix is
-# not bit-identical to recomputing it); SSM and hybrid must disable too
+# dense attention shares, and so does MoE now that dropless dispatch
+# (cap = S*K, the default) makes prefill numerics batch-shape
+# independent — capacity-capped dispatch (moe_dropless=False) still
+# silently disables sharing; SSM and hybrid must disable too
 # (slot-resident recurrent/ring state cannot be skipped)
 PARITY_ARCHS = ["qwen2-1.5b", "qwen3-moe-235b-a22b", "rwkv6-3b",
                 "jamba-v0.1-52b"]
-SHARING_ARCHS = {"qwen2-1.5b"}
+SHARING_ARCHS = {"qwen2-1.5b", "qwen3-moe-235b-a22b"}
 
 
 def _build(arch):
